@@ -1,0 +1,92 @@
+"""Paper Tables 3/6 analogue: TMACs / latency vs lazy ratio.
+
+Two measurements per lazy ratio:
+  * analytic TMACs of the denoiser eval (matches the paper's
+    pytorch-OpCounter accounting), and
+  * compiled-HLO FLOPs of a plan-mode step (proves the skip REMOVES compute
+    from the XLA program — the TPU analogue of the paper's measured mobile
+    latency), plus wall time on this host as a sanity signal."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import lazy_dit_fixture, time_fn
+from repro.core import lazy as lazy_lib
+from repro.dist import hlo as hlo_lib
+from repro.models import dit as dit_lib
+from repro.sampling import ddim
+
+
+def dit_tmacs(cfg, lazy_ratio: float = 0.0) -> float:
+    """Analytic MACs per denoiser eval (batch 1), pytorch-OpCounter style
+    (paper Tables 3/6).  DiT MLP is fc1->gelu->fc2 (2 matmuls)."""
+    N = (cfg.dit_input_size // cfg.dit_patch) ** 2
+    D, F, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    attn = 4 * N * D * D + 2 * N * N * D
+    ffn = 2 * N * D * F
+    per_layer = (attn + ffn) * (1.0 - lazy_ratio)
+    probes = 2 * N * D
+    return (L * (per_layer + probes)) / 1e12
+
+
+def run() -> list:
+    cfg, params, sched = lazy_dit_fixture()
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, cfg.dit_input_size,
+                                                  cfg.dit_input_size,
+                                                  cfg.dit_in_channels))
+    t = jnp.full((B,), 10.0)
+    y = jnp.arange(B) % cfg.dit_n_classes
+    cache = dit_lib.init_dit_lazy_cache(cfg, B)
+
+    rows = []
+    for ratio in (0.0, 0.2, 0.5):
+        plan_row = np.zeros((cfg.n_layers, 2), bool)
+        n_skip = int(round(ratio * plan_row.size))
+        plan_row.reshape(-1)[:n_skip] = True       # deterministic skip set
+
+        def step(x, cache, pr=plan_row):
+            out, nc, _ = dit_lib.dit_forward(params, cfg, x, t, y,
+                                             lazy_cache=cache,
+                                             lazy_mode="plan", plan_row=pr)
+            return out, nc
+
+        jitted = jax.jit(step)
+        compiled = jitted.lower(x, cache).compile()
+        mod = hlo_lib.analyze_module(compiled.as_text())
+        us = time_fn(lambda a, b: jitted(a, b)[0], x, cache)
+        rows.append((f"plan_ratio{int(ratio*100)}",
+                     f"us_per_call={us:.0f}",
+                     f"hlo_gflops={mod['flops']/1e9:.3f}",
+                     f"analytic_tmacs={dit_tmacs(cfg, ratio):.6f}"))
+    # relative FLOP reduction must track the ratio
+    base = float(rows[0][2].split("=")[1])
+    half = float(rows[2][2].split("=")[1])
+    rows.append(("flop_reduction_at_50pct", f"{1 - half / base:.1%}"))
+
+    # ---- full-scale DiT-XL/2-256 (paper's flagship): LOWER-only (no exec)
+    from repro.configs.registry import get_config
+    xl = get_config("dit_xl2_256")
+    px = dit_lib.init_dit(jax.random.PRNGKey(0), xl.replace(dtype="float32"))
+    Bx = 2
+    xx = jnp.zeros((Bx, 32, 32, 4), jnp.float32)
+    tx = jnp.zeros((Bx,), jnp.float32)
+    yx = jnp.zeros((Bx,), jnp.int32)
+    cx = dit_lib.init_dit_lazy_cache(xl, Bx)
+    for ratio in (0.0, 0.5):
+        pr = np.zeros((xl.n_layers, 2), bool)
+        pr.reshape(-1)[: int(round(ratio * pr.size))] = True
+
+        def xstep(x, cache, pr=pr):
+            out, nc, _ = dit_lib.dit_forward(px, xl, x, tx, yx,
+                                             lazy_cache=cache,
+                                             lazy_mode="plan", plan_row=pr)
+            return out, nc
+
+        compiled = jax.jit(xstep).lower(xx, cx).compile()
+        mod = hlo_lib.analyze_module(compiled.as_text())
+        # paper Table 3 accounting: TMACs at batch 1 per denoiser eval
+        rows.append((f"dit_xl2_256_plan{int(ratio*100)}",
+                     f"hlo_tflops_b2={mod['flops']/1e12:.3f}",
+                     f"analytic_tmacs_b1={dit_tmacs(xl, ratio):.3f}"))
+    return rows

@@ -1,0 +1,64 @@
+"""Per-kernel microbenchmarks: us/call (interpret-mode wall time on this CPU
+host is a correctness-path signal only; the BlockSpec tiling is the TPU
+deliverable) and allclose deltas vs the oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.lazy_gate.kernel import lazy_gate_pooled
+from repro.kernels.lazy_gate.ref import lazy_gate_pooled_ref
+from repro.kernels.ssm_scan.ops import ssd
+from repro.kernels.ssm_scan.ref import ssd_naive_ref
+
+
+def run() -> list:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # lazy_gate: DiT-XL-ish tile
+    B, N, D = 4, 256, 512
+    x = jax.random.normal(ks[0], (B, N, D))
+    sc = jax.random.normal(ks[1], (B, D)) * 0.1
+    sh = jax.random.normal(ks[2], (B, D)) * 0.1
+    w = jax.random.normal(ks[3], (D, 1)) * 0.05
+    got = lazy_gate_pooled(x, sc, sh, w)
+    want = lazy_gate_pooled_ref(x, sc, sh, w)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = time_fn(lambda a: lazy_gate_pooled(a, sc, sh, w), x)
+    us_ref = time_fn(lambda a: lazy_gate_pooled_ref(a, sc, sh, w), x)
+    rows.append(("lazy_gate", f"us_per_call={us:.0f}",
+                 f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))
+
+    # flash attention: one head tile at prefill-ish length
+    Bh, H, S, d = 1, 2, 512, 64
+    q = jax.random.normal(ks[4], (Bh, H, S, d))
+    k = jax.random.normal(ks[5], (Bh, H, S, d))
+    v = jax.random.normal(ks[6], (Bh, H, S, d))
+    got = flash_attention(q, k, v, block_q=128, block_k=128)
+    want = attention_ref(q, k, v, causal=True, window=0, softcap=0.0)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = time_fn(lambda a: flash_attention(a, k, v), q)
+    us_ref = time_fn(lambda a: attention_ref(a, k, v, causal=True, window=0,
+                                             softcap=0.0), q)
+    rows.append(("flash_attention", f"us_per_call={us:.0f}",
+                 f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))
+
+    # ssm scan
+    B2, S2, H2, P2, N2 = 2, 256, 4, 16, 16
+    x2 = jax.random.normal(ks[7], (B2, S2, H2, P2))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(9), (B2, S2, H2)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(10), (H2,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(11), (B2, S2, N2))
+    Cm = jax.random.normal(jax.random.PRNGKey(12), (B2, S2, N2))
+    got = ssd(x2, dt, A, Bm, Cm, chunk=64, use_pallas=True)
+    want = ssd_naive_ref(x2, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(got - want)))
+    us = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64), x2)
+    us_ref = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64,
+                                   use_pallas=False), x2)
+    rows.append(("ssm_scan", f"us_per_call={us:.0f}",
+                 f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))
+    return rows

@@ -1,0 +1,92 @@
+"""Paper Tables 1/2/5 analogue: quality-vs-compute trade-off.
+
+The paper's claim: LazyDiT at (N steps, r lazy) beats DDIM at N·(1-r) steps
+for equal compute.  No FID here (no ImageNet in container; DESIGN.md §6) —
+quality proxy is sample MSE against a 20-step full-compute reference, which
+preserves the comparison's *structure*: rows are (sampler, steps, ratio,
+relative-TMACs, quality)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import lazy_dit_fixture
+from repro.core import lazy as lazy_lib
+from repro.sampling import ddim
+
+
+def sample_mse(a, b) -> float:
+    return float(jnp.mean((a - b) ** 2))
+
+
+def run() -> list:
+    cfg, params, sched = lazy_dit_fixture()
+    labels = jnp.arange(4) % cfg.dit_n_classes
+    key = jax.random.PRNGKey(11)
+
+    ref, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                              n_steps=20, lazy_mode="off")
+
+    # calibrate probe scores once (masked run)
+    _, aux = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                              n_steps=20, lazy_mode="masked",
+                              collect_scores=True)
+    sc = np.stack([np.stack([s["attn"], s["ffn"]], -1) for s in aux["scores"]])
+    sc_mean = sc.mean(2)
+
+    rows = []
+    # DDIM with fewer steps (the baseline the paper compares against)
+    for steps in (20, 14, 10, 7):
+        x, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                                n_steps=steps, lazy_mode="off")
+        rel = steps / 20.0
+        rows.append((f"ddim_steps{steps}", f"tmacs={rel:.2f}",
+                     f"mse={sample_mse(x, ref):.5f}"))
+    # LazyDiT at 20 steps with learned plans at matching compute
+    for ratio in (0.3, 0.5, 0.65):
+        plan = lazy_lib.plan_with_target_ratio(sc_mean, ratio)
+        x, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                                n_steps=20, lazy_mode="plan", plan=plan.skip)
+        rel = 1.0 - plan.lazy_ratio
+        rows.append((f"lazy20_ratio{int(ratio*100)}", f"tmacs={rel:.2f}",
+                     f"mse={sample_mse(x, ref):.5f}"))
+    # ablation: learned plan vs random plan at 50% (the probes must matter)
+    rand = lazy_lib.uniform_plan(20, cfg.n_layers, 2, 0.5, seed=0)
+    x, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                            n_steps=20, lazy_mode="plan", plan=rand.skip)
+    rows.append(("random50_ablation", f"tmacs={1 - rand.lazy_ratio:.2f}",
+                 f"mse={sample_mse(x, ref):.5f}"))
+
+    # paper Appendix A.3 / Table 7 analogue: Learn2Cache-style INPUT-
+    # INDEPENDENT caching — one fixed (step, layer, module) schedule derived
+    # from measured cross-step output similarity (no probes, no per-input
+    # adaptivity).  LazyDiT's probe plan should match or beat it.
+    from repro.core import similarity as sim_lib
+    _, aux_t = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                                n_steps=20, lazy_mode="masked",
+                                collect_traces=True)
+    sims = []
+    for mod in ("attn", "ffn"):
+        tr = np.stack([t[mod] for t in aux_t["traces"]])       # (T,L,B,N,D)
+        s = np.asarray(sim_lib.consecutive_step_similarity(jnp.asarray(tr)))
+        sims.append(np.concatenate([np.zeros((1,) + s.shape[1:]), s]).mean(2))
+    sim_scores = np.stack(sims, axis=-1)                        # (T, L, 2)
+    l2c = lazy_lib.plan_with_target_ratio(sim_scores, 0.5)
+    x, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                            n_steps=20, lazy_mode="plan", plan=l2c.skip)
+    rows.append(("l2c_style50_input_independent",
+                 f"tmacs={1 - l2c.lazy_ratio:.2f}",
+                 f"mse={sample_mse(x, ref):.5f}"))
+
+    # paper Fig. 5 (upper) analogue: INDIVIDUAL laziness — skip only MHSA
+    # or only Feedforward at the same overall budget; the paper finds
+    # module-individual laziness is strictly worse than joint laziness.
+    for mod_idx, name in ((0, "attn_only"), (1, "ffn_only")):
+        sc_solo = sc_mean.copy()
+        sc_solo[:, :, 1 - mod_idx] = -np.inf     # other module never skips
+        plan = lazy_lib.plan_with_target_ratio(sc_solo, 0.5)
+        x, _ = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                                n_steps=20, lazy_mode="plan", plan=plan.skip)
+        rows.append((f"individual_{name}_50",
+                     f"tmacs={1 - plan.lazy_ratio:.2f}",
+                     f"mse={sample_mse(x, ref):.5f}"))
+    return rows

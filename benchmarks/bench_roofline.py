@@ -1,0 +1,33 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the per-(arch x shape) three-term roofline for the single-pod mesh."""
+import glob
+import json
+import os
+
+from benchmarks.common import ARTIFACTS
+
+
+def run() -> list:
+    rows = []
+    files = sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun", "*__16x16.json")))
+    if not files:
+        return [("roofline", "no dry-run artifacts yet — run "
+                 "`python -m repro.launch.dryrun --all --both-meshes`")]
+    for f in files:
+        r = json.load(open(f))
+        if r.get("skipped"):
+            rows.append((f"{r['arch']}/{r['shape']}", "SKIP", r["why"]))
+            continue
+        rl = r["roofline"]
+        rows.append((
+            f"{r['arch']}/{r['shape']}",
+            f"compute_s={rl['compute_s']:.4f}",
+            f"memory_s={rl['memory_s']:.4f}",
+            f"collective_s={rl['collective_s']:.4f}",
+            f"dominant={rl['dominant'].replace('_s','')}",
+            f"useful={rl['useful_compute_ratio']:.3f}"
+            if rl["useful_compute_ratio"] else "useful=n/a",
+        ))
+    return rows

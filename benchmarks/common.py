@@ -1,0 +1,64 @@
+"""Shared benchmark helpers: timing + a pretrained tiny DiT fixture."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.data.synthetic import LatentImageDataset
+from repro.models import dit as dit_lib
+from repro.sampling import ddim
+from repro.train import optim, trainer
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall us/call (post-jit)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+@functools.lru_cache(maxsize=1)
+def lazy_dit_fixture(pretrain: int = 80, lazy_steps: int = 60):
+    """Tiny DiT pretrained + lazy-learned; shared across benchmarks."""
+    cfg = ModelConfig(
+        name="dit-bench", family="dit", n_layers=4, d_model=96, n_heads=4,
+        n_kv_heads=4, d_ff=256, rope_type="none", dit_patch=2,
+        dit_input_size=16, dit_in_channels=4, dit_n_classes=8,
+        dtype="float32",
+        lazy=LazyConfig(enabled=True, rho_attn=5e-3, rho_ffn=5e-3))
+    key = jax.random.PRNGKey(0)
+    params = dit_lib.init_dit(key, cfg)
+    sched = ddim.linear_schedule(200)
+    data = LatentImageDataset(cfg, seed=0)
+    it = data.batches(16, seed=1)
+    opt = optim.adamw_init(params)
+    for _ in range(pretrain):
+        x0, y = next(it)
+        key, k = jax.random.split(key)
+        params, opt, _ = trainer.diffusion_train_step(
+            params, opt, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            lr=2e-3)
+    opt2 = optim.adamw_init(params)
+    for _ in range(lazy_steps):
+        x0, y = next(it)
+        key, k = jax.random.split(key)
+        params, opt2, _ = trainer.lazy_train_step(
+            params, opt2, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            n_sample_steps=10, lr=1e-2)
+    return cfg, params, sched

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_similarity    — paper §3.2 / Fig. 4 (similarity + layer-wise laziness)
+  bench_lazy_tradeoff — paper Tables 1/2/5 (quality vs compute)
+  bench_compute       — paper Tables 3/6 (TMACs / compiled-FLOPs vs ratio)
+  bench_kernels       — Pallas kernels vs oracles
+  bench_roofline      — §Roofline table from dry-run artifacts
+
+Prints ``name,field,...`` CSV rows.  PYTHONPATH=src python -m benchmarks.run
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    import benchmarks.bench_similarity as b_sim
+    import benchmarks.bench_lazy_tradeoff as b_lazy
+    import benchmarks.bench_compute as b_comp
+    import benchmarks.bench_kernels as b_kern
+    import benchmarks.bench_roofline as b_roof
+
+    suites = [("similarity", b_sim), ("lazy_tradeoff", b_lazy),
+              ("compute", b_comp), ("kernels", b_kern),
+              ("roofline", b_roof)]
+    failed = 0
+    for name, mod in suites:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            for row in mod.run():
+                if isinstance(row, tuple):
+                    print(",".join(str(x) for x in row), flush=True)
+                else:
+                    print(row, flush=True)
+        except Exception:
+            failed += 1
+            print(f"{name},ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

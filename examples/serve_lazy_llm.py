@@ -1,0 +1,54 @@
+"""Lazy decoding for an assigned LLM architecture (beyond-paper transfer).
+
+Serves a reduced llama3.2 with the batched engine in off vs masked lazy
+modes and reports probe scores, realized lazy ratio, and output agreement.
+
+Run:  PYTHONPATH=src python examples/serve_lazy_llm.py [--arch llama3_2_1b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.base import LazyConfig
+from repro.configs.registry import get_config
+from repro.models import transformer as tf
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--n-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    cfg = cfg.replace(lazy=LazyConfig(enabled=True, mode="masked"))
+    print(f"arch={cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 6)).astype(np.int32)
+
+    eng_off = Engine(cfg, params, max_len=64, lazy_mode="off")
+    res_off = eng_off.generate(prompt, n_new=args.n_new)
+    eng_lazy = Engine(cfg, params, max_len=64, lazy_mode="masked")
+    res_lazy = eng_lazy.generate(prompt, n_new=args.n_new)
+
+    agree = float((res_off.tokens == res_lazy.tokens).mean())
+    print(f"generated (off):  {res_off.tokens[0].tolist()}")
+    print(f"generated (lazy): {res_lazy.tokens[0].tolist()}")
+    print(f"token agreement: {agree:.1%}")
+    print(f"realized lazy ratio: {res_lazy.realized_lazy_ratio:.1%}")
+    if res_lazy.scores is not None:
+        print(f"mean probe scores per step: "
+              f"{np.round(res_lazy.scores.mean(1), 3).tolist()}")
+    print("note: probes are untrained here (init bias -2 -> diligent); "
+          "examples/train_lazydit.py shows the training side on DiT.")
+
+
+if __name__ == "__main__":
+    main()

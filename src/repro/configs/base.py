@@ -1,0 +1,223 @@
+"""Config system for the repro framework.
+
+Every architecture (the paper's DiT family and the 10 assigned archs) is
+described by a single frozen dataclass tree.  Configs are pure data: they never
+touch jax device state, so importing a config module is always safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts feedforward."""
+
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared_experts: int = 0          # deepseek-v2 style always-on experts
+    d_ff_expert: int = 0               # per-expert hidden dim (0 -> use d_ff)
+    capacity_factor: float = 1.25      # dispatch capacity per expert
+    router_aux_weight: float = 0.01    # load-balance loss weight
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0               # 0 -> full-rank q projection
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block parameters."""
+
+    state_dim: int = 64
+    head_dim: int = 64                 # per-SSM-head channel dim
+    expand: int = 2                    # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256                   # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    """xLSTM block parameters (mLSTM matrix memory / sLSTM scalar memory)."""
+
+    slstm_every: int = 8               # every k-th block is sLSTM (7:1 ratio)
+    proj_factor: float = 2.0           # mLSTM up-projection factor
+    conv_width: int = 4
+    chunk: int = 256                   # mLSTM chunkwise-scan block length
+
+
+@dataclass(frozen=True)
+class LazyConfig:
+    """LazyDiT gating configuration (the paper's contribution)."""
+
+    enabled: bool = False
+    gate_attn: bool = True
+    gate_ffn: bool = True
+    # execution mode: 'soft' (training mixture), 'masked' (per-sample select),
+    # 'plan' (static trace-time skip; real FLOP removal)
+    mode: str = "soft"
+    rho_attn: float = 1e-4             # lazy-loss penalty (paper: 1e-7..1e-2)
+    rho_ffn: float = 1e-4
+    threshold: float = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"              # dense|moe|ssm|hybrid|vlm|audio|dit
+    source: str = ""                   # citation (hf card / arXiv)
+
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                  # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # block layout -------------------------------------------------------
+    # 'attn_ffn'    : standard pre-norm transformer block
+    # 'parallel'    : cohere-style parallel attn+ffn from one norm
+    # 'mamba2'      : Mamba2 SSD block
+    # 'mlstm'/'slstm': xLSTM blocks
+    # The stack is `block_pattern` repeated/cycled to n_layers.
+    block_pattern: Tuple[str, ...] = ("attn_ffn",)
+
+    # hybrid (zamba2): a single *shared-weight* attention block applied
+    # every `shared_attn_every` layers (0 = disabled).
+    shared_attn_every: int = 0
+
+    # attention ------------------------------------------------------------
+    rope_theta: float = 10000.0
+    rope_type: str = "rope"            # rope|mrope|none
+    mrope_sections: Tuple[int, ...] = ()
+    # sliding-window pattern, cycled over layers; 0 = global attention.
+    attn_window_pattern: Tuple[int, ...] = (0,)
+    # fallback window used only for the long_500k shape on full-attn archs
+    # (documented beyond-paper variant; see DESIGN.md §long_500k policy).
+    attn_window_fallback: int = 0
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    qk_norm: bool = False
+
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "silu"
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    lazy: LazyConfig = field(default_factory=LazyConfig)
+
+    # modality frontend stub: if set, the model consumes precomputed
+    # embeddings of shape (B, S, frontend_dim) instead of token ids for a
+    # prefix of the sequence (vlm: vision patches; audio: codec frames).
+    frontend_stub: str = ""            # ''|vision|audio
+    frontend_dim: int = 0
+
+    # dit-only -------------------------------------------------------------
+    dit_patch: int = 2
+    dit_input_size: int = 32           # latent spatial size
+    dit_in_channels: int = 4
+    dit_n_classes: int = 1000
+
+    dtype: str = "bfloat16"
+
+    # ---------------------------------------------------------------- utils
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Block kind per layer (pattern cycled to n_layers)."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    def layer_windows(self) -> Tuple[int, ...]:
+        p = self.attn_window_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant: 2 layers, d_model<=256, <=4 experts."""
+        kw = dict(
+            n_layers=max(2, len(self.block_pattern)) if self.shared_attn_every == 0
+            else max(2, self.shared_attn_every),
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, min(self.n_heads, 4)),
+            head_dim=64 if self.resolved_head_dim >= 64 else self.resolved_head_dim,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+                d_ff_expert=min(self.moe.d_ff_expert or 256, 256),
+            )
+        if self.mla is not None:
+            kw["mla"] = dataclasses.replace(
+                self.mla, kv_lora_rank=64, qk_rope_head_dim=16,
+                qk_nope_head_dim=32, v_head_dim=32)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=32, chunk=32)
+        if self.frontend_dim:
+            kw["frontend_dim"] = min(self.frontend_dim, 256)
+        if self.mrope_sections:
+            # rescale sections to the reduced head_dim/2 budget
+            hd = kw.get("head_dim") or self.resolved_head_dim
+            total = hd // 2
+            base = [max(1, s * total // sum(self.mrope_sections))
+                    for s in self.mrope_sections]
+            base[-1] += total - sum(base)
+            kw["mrope_sections"] = tuple(base)
+        kw.update(overrides)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train|prefill|decode
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

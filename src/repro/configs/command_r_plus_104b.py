@@ -1,0 +1,20 @@
+"""command-r-plus-104b [dense] — Cohere Command R+.
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000; GQA, no biases,
+cohere parallel-block layout (attn ∥ ffn off one norm), tied embeddings.
+[hf:CohereForAI/c4ai-command-r-v01]
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    source="hf:CohereForAI/c4ai-command-r-v01",
+    n_layers=64, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=33792, vocab_size=256000,
+    block_pattern=("parallel",),
+    rope_theta=75_000_000.0,
+    use_bias=False, tie_embeddings=True,
+    attn_window_fallback=4096,        # long_500k only (DESIGN.md)
+    lazy=LazyConfig(enabled=True),
+)

@@ -1,0 +1,25 @@
+"""deepseek-v2-lite-16b [moe] — MLA + fine-grained MoE.
+
+27L d_model=2048 16H, MLA (kv_lora_rank=512, qk_rope=64, qk_nope=128,
+v=128), MoE: 64 routed experts top-6 + 2 shared experts, d_ff_expert=1408,
+vocab=102400.  (The assignment line lists both "64e top-6" and "160
+routed" — 64 routed matches V2-*Lite* [arXiv:2405.04434 §2]; we use 64.)
+All 27 layers are MoE here; the real model's dense first layer is folded
+into the shared experts (deviation noted in DESIGN.md §6).
+"""
+from repro.configs.base import LazyConfig, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    family="moe",
+    source="arXiv:2405.04434",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=102400,
+    block_pattern=("attn_moe",),
+    mla=MLAConfig(kv_lora_rank=512, qk_rope_head_dim=64,
+                  qk_nope_head_dim=128, v_head_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared_experts=2,
+                  d_ff_expert=1408, capacity_factor=1.25),
+    attn_window_fallback=4096,        # long_500k only
+    lazy=LazyConfig(enabled=True),
+)

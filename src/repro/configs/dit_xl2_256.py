@@ -1,0 +1,17 @@
+"""DiT-XL/2 256x256 (Peebles & Xie 2023) — the paper's primary model.
+
+28L d_model=1152 16H patch=2 over 32x32x4 latents (256px / VAE-8), 1000
+ImageNet classes, MLP ratio 4.
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dit-xl2-256",
+    family="dit",
+    source="arXiv:2212.09748",
+    n_layers=28, d_model=1152, n_heads=16, n_kv_heads=16,
+    d_ff=4608, vocab_size=0,
+    rope_type="none",
+    dit_patch=2, dit_input_size=32, dit_in_channels=4, dit_n_classes=1000,
+    lazy=LazyConfig(enabled=True, rho_attn=1e-4, rho_ffn=1e-4),
+)

@@ -1,0 +1,13 @@
+"""DiT-XL/2 512x512 — same trunk as XL/2-256 on 64x64x4 latents."""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="dit-xl2-512",
+    family="dit",
+    source="arXiv:2212.09748",
+    n_layers=28, d_model=1152, n_heads=16, n_kv_heads=16,
+    d_ff=4608, vocab_size=0,
+    rope_type="none",
+    dit_patch=2, dit_input_size=64, dit_in_channels=4, dit_n_classes=1000,
+    lazy=LazyConfig(enabled=True, rho_attn=1e-4, rho_ffn=1e-4),
+)

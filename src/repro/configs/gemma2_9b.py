@@ -1,0 +1,23 @@
+"""gemma2-9b [dense] — alternating local/global attention + logit softcaps.
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000 head_dim=256;
+local window 4096 on even layers, global on odd; attn softcap 50, final
+logit softcap 30; tied embeddings; GeGLU.
+At long_500k the *global* layers also take the 4096 fallback window
+(full 500k global attention is not sub-quadratic; DESIGN.md).
+[arXiv:2408.00118]
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b",
+    family="dense",
+    source="arXiv:2408.00118",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=14336, vocab_size=256000,
+    attn_window_pattern=(4096, 0),    # local, global alternating
+    attn_logit_softcap=50.0, final_logit_softcap=30.0,
+    act="gelu", tie_embeddings=True,
+    attn_window_fallback=4096,        # long_500k: cap the global layers
+    lazy=LazyConfig(enabled=True),
+)

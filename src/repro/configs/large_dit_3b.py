@@ -1,0 +1,13 @@
+"""Large-DiT-3B (Zhang et al. 2023, LLaMA-Adapter repo) 256x256."""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="large-dit-3b",
+    family="dit",
+    source="arXiv:2303.16199",
+    n_layers=32, d_model=2304, n_heads=32, n_kv_heads=32,
+    d_ff=9216, vocab_size=0,
+    rope_type="none",
+    dit_patch=2, dit_input_size=32, dit_in_channels=4, dit_n_classes=1000,
+    lazy=LazyConfig(enabled=True, rho_attn=1e-4, rho_ffn=1e-4),
+)

@@ -1,0 +1,18 @@
+"""llama3.2-1b [dense] — small llama3.
+
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256.
+[hf:meta-llama/Llama-3.2-1B]
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    source="hf:meta-llama/Llama-3.2-1B",
+    n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab_size=128256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    attn_window_fallback=4096,        # long_500k only
+    lazy=LazyConfig(enabled=True),
+)

@@ -1,0 +1,21 @@
+"""mixtral-8x22b [moe] — 8 experts, top-2 routing, sliding-window attention.
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384(per expert) vocab=32768,
+SWA window 4096 on all layers.
+[arXiv:2401.04088]
+"""
+from repro.configs.base import LazyConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    source="arXiv:2401.04088",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=32768,
+    block_pattern=("attn_moe",),
+    attn_window_pattern=(4096,),      # native SWA -> long_500k runs natively
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384,
+                  capacity_factor=1.25),
+    lazy=LazyConfig(enabled=True),
+)

@@ -1,0 +1,22 @@
+"""musicgen-large [audio] — decoder-only transformer over EnCodec tokens.
+
+48L d_model=2048 32H (kv=32, MHA) d_ff=8192 vocab=2048 (codec codebook).
+The mel/EnCodec conv frontend is a STUB per assignment — ``input_specs()``
+supplies precomputed frame embeddings (frontend_dim=128, the EnCodec latent
+width).  RoPE replaces MusicGen's sinusoidal positions (TPU-idiomatic;
+noted in DESIGN.md §6).
+[arXiv:2306.05284]
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    source="arXiv:2306.05284",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab_size=2048,
+    use_bias=True,
+    frontend_stub="audio", frontend_dim=128,
+    attn_window_fallback=4096,        # long_500k only
+    lazy=LazyConfig(enabled=True),
+)

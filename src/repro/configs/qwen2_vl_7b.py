@@ -1,0 +1,23 @@
+"""qwen2-vl-7b [vlm] — Qwen2-VL language decoder backbone.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064; M-RoPE with
+(temporal, height, width) sections (16, 24, 24) over head_dim/2 = 64;
+qkv biases.  The ViT vision encoder is a STUB per assignment —
+``input_specs()`` supplies precomputed patch embeddings (frontend_dim=1280,
+the ViT output width) consumed through a linear projector.
+[arXiv:2409.12191]
+"""
+from repro.configs.base import LazyConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size=152064,
+    rope_type="mrope", mrope_sections=(16, 24, 24), rope_theta=1_000_000.0,
+    use_bias=True,
+    frontend_stub="vision", frontend_dim=1280,
+    attn_window_fallback=4096,        # long_500k only
+    lazy=LazyConfig(enabled=True),
+)

@@ -1,0 +1,62 @@
+"""Config registry: ``get_config(name)`` for every assigned architecture,
+the paper's own DiT family, and the input-shape table."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+ASSIGNED_ARCHS = [
+    "command_r_plus_104b",
+    "llama3_2_1b",
+    "qwen2_vl_7b",
+    "zamba2_7b",
+    "mixtral_8x22b",
+    "xlstm_1_3b",
+    "musicgen_large",
+    "gemma2_9b",
+    "deepseek_coder_33b",
+    "deepseek_v2_lite_16b",
+]
+
+DIT_ARCHS = ["dit_xl2_256", "dit_xl2_512", "large_dit_3b", "large_dit_7b"]
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ASSIGNED_ARCHS + DIT_ARCHS}
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def long_context_policy(cfg: ModelConfig) -> dict:
+    """How an arch runs the long_500k shape (DESIGN.md §long_500k policy).
+
+    Returns {"runnable": bool, "window_override": Optional[int], "why": str}.
+    """
+    kinds = set(cfg.layer_kinds())
+    attn_free = kinds <= {"mamba2", "mlstm", "slstm"} and not cfg.shared_attn_every
+    if attn_free:
+        return {"runnable": True, "window_override": None,
+                "why": "attention-free: O(1) state per step"}
+    windows = cfg.layer_windows()
+    if all(w > 0 for w in windows):
+        return {"runnable": True, "window_override": None,
+                "why": "native sliding-window attention"}
+    if cfg.attn_window_fallback:
+        return {"runnable": True, "window_override": cfg.attn_window_fallback,
+                "why": f"SWA fallback window={cfg.attn_window_fallback} "
+                       "(documented beyond-paper variant)"}
+    return {"runnable": False, "window_override": None,
+            "why": "full attention, no fallback configured"}

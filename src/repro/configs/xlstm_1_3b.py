@@ -1,0 +1,21 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks (7:1), attention-free.
+
+48L d_model=2048 4H d_ff=0 (the xLSTM block contains its own up/down
+projection, proj_factor=2) vocab=50304.
+[arXiv:2405.04517]
+"""
+from repro.configs.base import LazyConfig, ModelConfig, XLSTMConfig
+
+_PATTERN = ("mlstm",) * 7 + ("slstm",)
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="arXiv:2405.04517",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    block_pattern=_PATTERN,
+    rope_type="none",
+    xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0),
+    lazy=LazyConfig(enabled=True, gate_attn=False),  # block-level gates only
+)

@@ -1,0 +1,24 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block.
+
+81L d_model=3584 (Mamba2 blocks, ssm_state=64) with ONE shared-weight
+attention block (32H MHA, kv=32) applied every 6 layers; d_ff=14336 inside
+the shared block's ffn is folded into the attention block here (we apply
+attn-only shared blocks; deviation noted in DESIGN.md); vocab=32000.
+[arXiv:2411.15242]
+"""
+from repro.configs.base import LazyConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32, head_dim=112,
+    d_ff=14336, vocab_size=32000,
+    block_pattern=("mamba2",),
+    shared_attn_every=6,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, chunk=256),
+    # long_500k: Mamba2 state is O(1)/step, but the shared attention blocks
+    # take the documented SWA fallback (DESIGN.md §long_500k policy)
+    attn_window_fallback=4096,
+    lazy=LazyConfig(enabled=True),
+)

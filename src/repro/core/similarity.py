@@ -1,0 +1,75 @@
+"""Empirical validators for the paper's theory (Theorems 1-3).
+
+These run against real module traces collected during sampling and are used
+by ``benchmarks/bench_similarity.py`` (the paper's Fig. 4 / §3.2 analysis).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def cosine_similarity(x: Array, y: Array) -> Array:
+    """Paper Eq. (3): f(X, Y) = tr[X^T Y] / (||X||_F ||Y||_F), batched over
+    leading dims beyond the final two."""
+    x32, y32 = x.astype(jnp.float32), y.astype(jnp.float32)
+    num = jnp.sum(x32 * y32, axis=(-2, -1))
+    den = jnp.linalg.norm(x32, axis=(-2, -1)) * jnp.linalg.norm(y32, axis=(-2, -1))
+    return num / jnp.maximum(den, 1e-12)
+
+
+def similarity_from_distance(x: Array, y: Array) -> Array:
+    """Fact 7 identity used in Thm 18: with ||X||_F = ||Y||_F = 1,
+    f(X, Y) = 1 - ||X - Y||_F^2 / 2.  Normalizes inputs first."""
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    xn = x32 / jnp.maximum(jnp.linalg.norm(x32, axis=(-2, -1), keepdims=True), 1e-12)
+    yn = y32 / jnp.maximum(jnp.linalg.norm(y32, axis=(-2, -1), keepdims=True), 1e-12)
+    return 1.0 - 0.5 * jnp.sum((xn - yn) ** 2, axis=(-2, -1))
+
+
+def consecutive_step_similarity(outputs: Array) -> Array:
+    """outputs: (T, ..., N, D) module outputs over sampling steps.
+    Returns (T-1, ...) cosine similarities between steps t-1 and t."""
+    return cosine_similarity(outputs[:-1], outputs[1:])
+
+
+def empirical_lipschitz(fn, x: Array, key, n_probes: int = 8,
+                        eps: float = 1e-2) -> float:
+    """Estimate the module Lipschitz constant C of Thm 17 via random
+    finite-difference probes: C >= ||F(x+d) - F(x)|| / ||d||."""
+    y0 = fn(x)
+    best = 0.0
+    for k in jax.random.split(key, n_probes):
+        d = jax.random.normal(k, x.shape, jnp.float32) * eps
+        y1 = fn(x + d.astype(x.dtype))
+        num = float(jnp.linalg.norm((y1 - y0).astype(jnp.float32)))
+        den = float(jnp.linalg.norm(d))
+        best = max(best, num / max(den, 1e-12))
+    return best
+
+
+def linear_probe_fit(z: np.ndarray, sims: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Thm 3 validation: least-squares fit sims ~ <W, Z> over a trace.
+
+    z: (n, N, D) modulated inputs; sims: (n,) true consecutive-step
+    similarities.  Returns (w, r2).  Pools tokens (mean over N) to match the
+    deployed probe's ``mean_N(Z W)`` form."""
+    feats = z.reshape(z.shape[0], z.shape[1], -1).mean(axis=1)     # (n, D)
+    feats = np.concatenate([feats, np.ones((len(feats), 1))], axis=1)
+    w, *_ = np.linalg.lstsq(feats, sims, rcond=None)
+    pred = feats @ w
+    ss_res = float(((sims - pred) ** 2).sum())
+    ss_tot = float(((sims - sims.mean()) ** 2).sum()) + 1e-12
+    return w, 1.0 - ss_res / ss_tot
+
+
+def theorem2_bound(C: float, eta: float) -> float:
+    """Similarity lower bound 1 - alpha with alpha = O(C^2 eta^2) (Thm 18,
+    alpha = 0.5 C^2 eta^2 min(N,D) folded into eta here)."""
+    return 1.0 - 0.5 * (C * eta) ** 2

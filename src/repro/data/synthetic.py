@@ -1,0 +1,82 @@
+"""Synthetic data pipelines.
+
+No dataset ships in this container (DESIGN.md §6): the DiT pipeline draws
+structured latents from a label-conditioned Gaussian-mixture "latent
+ImageNet", giving the denoiser a learnable signal; the LM pipeline draws
+k-order Markov token streams so cross-entropy has a non-trivial floor.
+Both are shard-aware: ``global_batch`` rows are produced host-side and
+device_put with the train-step's input sharding by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class LatentImageDataset:
+    """Label-conditioned Gaussian-mixture latents (B, H, W, C)."""
+
+    def __init__(self, cfg: ModelConfig, n_classes: Optional[int] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.n_classes = n_classes or cfg.dit_n_classes
+        rng = np.random.default_rng(seed)
+        # per-class mean pattern: low-frequency spatial structure
+        H, C = cfg.dit_input_size, cfg.dit_in_channels
+        freq = rng.normal(size=(self.n_classes, 2, C)) * 2.0
+        phase = rng.uniform(0, 2 * np.pi, size=(self.n_classes, C))
+        gy, gx = np.meshgrid(np.linspace(0, 1, H), np.linspace(0, 1, H),
+                             indexing="ij")
+        self.means = np.stack([
+            np.sin(2 * np.pi * (freq[k, 0, None, None, :] * gy[..., None]
+                                + freq[k, 1, None, None, :] * gx[..., None])
+                   + phase[k]) for k in range(self.n_classes)]).astype(np.float32)
+
+    def batches(self, batch: int, seed: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        rng = np.random.default_rng(seed)
+        while True:
+            y = rng.integers(0, self.n_classes, size=batch)
+            x = self.means[y] + rng.normal(size=self.means[y].shape).astype(np.float32) * 0.3
+            yield x, y.astype(np.int32)
+
+
+class MarkovTokenDataset:
+    """Order-1 Markov chains with a sparse, peaked transition matrix —
+    learnable next-token structure for the LM training examples."""
+
+    def __init__(self, vocab: int, seed: int = 0, branching: int = 8):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        nxt = rng.integers(0, vocab, size=(vocab, branching))
+        probs = rng.dirichlet(np.ones(branching) * 0.5, size=vocab)
+        self.next_tokens = nxt
+        self.next_probs = probs.astype(np.float64)
+
+    def batches(self, batch: int, seq_len: int, seed: int = 0
+                ) -> Iterator[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        while True:
+            out = np.empty((batch, seq_len + 1), np.int32)
+            out[:, 0] = rng.integers(0, self.vocab, size=batch)
+            for t in range(seq_len):
+                cur = out[:, t]
+                choice = np.array([rng.choice(self.next_tokens[c],
+                                              p=self.next_probs[c])
+                                   for c in cur])
+                out[:, t + 1] = choice
+            yield out
+
+
+def frontend_stub_embeddings(rng: np.random.Generator, batch: int, n_frames: int,
+                             dim: int) -> np.ndarray:
+    """Precomputed patch/frame embeddings for the vlm/audio frontend stubs
+    (DESIGN.md: the one sanctioned stub)."""
+    t = np.linspace(0, 1, n_frames)[None, :, None]
+    base = np.sin(2 * np.pi * (rng.uniform(1, 4, (batch, 1, dim)) * t
+                               + rng.uniform(0, 1, (batch, 1, dim))))
+    return (base + 0.1 * rng.normal(size=(batch, n_frames, dim))).astype(np.float32)

@@ -1,0 +1,114 @@
+"""Blocked flash attention (TPU Pallas) with causal, sliding-window and
+logit-softcap support — the prefill hot-spot.
+
+TPU adaptation (DESIGN.md §3): tiles are MXU-aligned (multiples of 128 on
+the contracting dims), the working set per grid step is
+(BLOCK_Q + 2·BLOCK_K) × head_dim + BLOCK_Q × BLOCK_K floats in VMEM, and the
+online-softmax running stats (m, l, acc) live in VMEM scratch that persists
+across the sequential trailing grid dimension (k-blocks).
+
+Grid: (B·H, nQ, nK) — nK iterates innermost/sequentially per (bh, q).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, softcap: float, sm_scale: float,
+                  block_q: int, block_k: int, n_k: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                     # (bk, d)
+    s = q @ k.T                                          # (bq, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, interpret: bool = True,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """q: (B, H, Sq, d); k/v: (B, H, Sk, d) (kv heads pre-repeated for GQA).
+    Returns (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // block_q
+    nk = (Sk + pk) // block_k
+    qf = q.reshape(B * H, nq * block_q, d)
+    kf = k.reshape(B * H, nk * block_k, d)
+    vf = v.reshape(B * H, nk * block_k, d)
+
+    kern = functools.partial(
+        _flash_kernel, causal=causal, window=window, softcap=softcap,
+        sm_scale=d ** -0.5, block_q=block_q, block_k=block_k, n_k=nk,
+        seq_k=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, nq * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, nq * block_q, d)[:, :, :Sq]

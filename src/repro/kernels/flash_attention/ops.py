@@ -1,0 +1,34 @@
+"""Public wrapper: GQA-aware flash attention with jnp fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "use_pallas", "interpret"))
+def gqa_flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        use_pallas=True, interpret=True):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — layout of models/layers.sdpa.
+    Repeats kv heads to H, dispatches to the Pallas kernel or the oracle."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    fn = flash_attention if use_pallas else (
+        lambda *a, **kw: attention_ref(*a, **{k2: v2 for k2, v2 in kw.items()
+                                              if k2 != "interpret"}))
+    if use_pallas:
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              softcap=softcap, interpret=interpret)
+    else:
+        out = attention_ref(qt, kt, vt, causal=causal, window=window,
+                            softcap=softcap)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the fused lazy-gate probe.
+
+On CPU (this container) the kernel body runs under interpret=True; on TPU
+pass interpret=False for the compiled Mosaic kernel.  ``use_pallas=False``
+falls back to the jnp oracle (used for HLO-level dry-runs where a Pallas
+call would not lower on the host platform).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lazy_gate.kernel import lazy_gate_pooled
+from repro.kernels.lazy_gate.ref import lazy_gate_pooled_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def lazy_gate_score(x, scale, shift, w, b, *, use_pallas: bool = True,
+                    interpret: bool = True):
+    """Fused modulate+probe+pool+sigmoid: (B,N,D)->(B,) in (0,1)."""
+    if use_pallas:
+        pooled = lazy_gate_pooled(x, scale, shift, w, interpret=interpret)
+    else:
+        pooled = lazy_gate_pooled_ref(x, scale, shift, w)
+    return jax.nn.sigmoid(pooled / x.shape[1] + b.astype(jnp.float32))

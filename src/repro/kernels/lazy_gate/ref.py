@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused lazy-gate probe."""
+import jax.numpy as jnp
+
+
+def lazy_gate_pooled_ref(x, scale, shift, w):
+    """x: (B,N,D); scale/shift: (B,D); w: (D,1) -> (B,) f32 token-SUM of the
+    modulated probe response."""
+    z = (x.astype(jnp.float32) * (1.0 + scale.astype(jnp.float32))[:, None, :]
+         + shift.astype(jnp.float32)[:, None, :])
+    return jnp.sum(z @ w.astype(jnp.float32), axis=(1, 2))
+
+
+def lazy_gate_score_ref(x, scale, shift, w, b):
+    """Full probe: sigmoid(mean_n(probe) + b) — matches core.lazy.gate_score
+    on modulated input."""
+    import jax
+    pooled = lazy_gate_pooled_ref(x, scale, shift, w) / x.shape[1]
+    return jax.nn.sigmoid(pooled + b)

@@ -1,0 +1,107 @@
+"""sLSTM sequential scan kernel (TPU Pallas) — §Perf hillclimb C's fix.
+
+The xLSTM sLSTM recurrence is inherently sequential; under XLA it lowers to
+a 4096-iteration while loop whose (B, D) cell states round-trip HBM every
+step (~25 GB/layer-pass measured) and whose sharded gate splits emit a TP
+collective per step (1.4M collectives per train step on xlstm-1.3b).
+
+This kernel keeps (c, n, h, m) in VMEM scratch and walks CHUNK timesteps
+per grid step from a VMEM-resident slice of the pre-projected gates, so HBM
+traffic collapses to: read gates once + write h once (~2.5 GB/layer-pass,
+10x; see EXPERIMENTS.md §Perf C).  Block-diagonal recurrence weights
+(h, 4, hd, hd) stay resident too.
+
+Forward-only (inference/serving + the §Perf projection); training
+integration needs a custom VJP — tracked in the backlog.
+
+Grid: (B_blocks, n_chunks) — chunks sequential per batch block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 64
+
+
+def _slstm_kernel(gx_ref, r_ref, fb_ref, h_out_ref,
+                  c_scr, n_scr, h_scr, m_scr, *, chunk: int, nh: int, hd: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        h_scr[...] = jnp.zeros_like(h_scr)
+        # m init 0 matches models/layers.init_slstm_cache (the max(n,1)
+        # output floor makes the stabilizer convention observable)
+        m_scr[...] = jnp.zeros_like(m_scr)
+
+    gx = gx_ref[0].astype(jnp.float32)            # (chunk, 4D)
+    r = r_ref[...].astype(jnp.float32)            # (nh, 4, hd, hd)
+    fb = fb_ref[...].astype(jnp.float32)          # (D,)
+    D = nh * hd
+
+    def step(t, carry):
+        c, n, h, m = carry
+        hp = h.reshape(1, nh, hd)
+        rec = jnp.einsum("bhd,hgde->bghe", hp, r).reshape(4 * D)
+        g = gx[t] + rec
+        zi, ii, fi, oi = g[:D], g[D:2 * D], g[2 * D:3 * D] + fb, g[3 * D:]
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        logf = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(logf + m, ii)
+        ia = jnp.exp(ii - m_new)
+        fa = jnp.exp(logf + m - m_new)
+        c_new = fa * c + ia * z
+        n_new = fa * n + ia
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        h_out_ref[0, t] = h_new.astype(h_out_ref.dtype)
+        return c_new, n_new, h_new, m_new
+
+    c, n, h, m = lax.fori_loop(
+        0, chunk, step,
+        (c_scr[0], n_scr[0], h_scr[0], m_scr[0]))
+    c_scr[0], n_scr[0], h_scr[0], m_scr[0] = c, n, h, m
+
+
+@functools.partial(jax.jit, static_argnames=("nh", "chunk", "interpret"))
+def slstm_scan(gx, r, f_bias, *, nh: int, chunk: int = CHUNK,
+               interpret: bool = True):
+    """gx: (B, S, 4D) pre-projected gates; r: (nh, 4, hd, hd) recurrence;
+    f_bias: (D,).  Returns h: (B, S, D).  S padded to a chunk multiple by
+    the caller (gx rows past S are ignored by slicing)."""
+    B, S, D4 = gx.shape
+    D = D4 // 4
+    hd = D // nh
+    pad = (-S) % chunk
+    if pad:
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+
+    kern = functools.partial(_slstm_kernel, chunk=chunk, nh=nh, hd=hd)
+    h = pl.pallas_call(
+        kern,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 4 * D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((nh, 4, hd, hd), lambda b, c: (0, 0, 0, 0)),
+            pl.BlockSpec((D,), lambda b, c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S + pad, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),      # c
+            pltpu.VMEM((1, D), jnp.float32),      # n
+            pltpu.VMEM((1, D), jnp.float32),      # h
+            pltpu.VMEM((1, D), jnp.float32),      # m
+        ],
+        interpret=interpret,
+    )(gx, r, f_bias)
+    return h[:, :S]

@@ -1,0 +1,19 @@
+"""Public wrapper for the sLSTM VMEM scan with jnp fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.slstm_scan.kernel import slstm_scan
+from repro.kernels.slstm_scan.ref import slstm_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("nh", "chunk", "use_pallas",
+                                             "interpret"))
+def slstm_sequence(gx, r, f_bias, *, nh: int, chunk: int = 64,
+                   use_pallas: bool = True, interpret: bool = True):
+    if use_pallas:
+        return slstm_scan(gx, r, f_bias, nh=nh, chunk=chunk,
+                          interpret=interpret)
+    return slstm_scan_ref(gx, r, f_bias, nh=nh)

@@ -1,0 +1,20 @@
+"""Oracle: the model's own sLSTM cell loop (models/layers._slstm_cell)."""
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _slstm_cell
+
+
+def slstm_scan_ref(gx, r, f_bias, *, nh: int):
+    """gx: (B, S, 4D); r: (nh, 4, hd, hd); f_bias: (D,) -> h (B, S, D)."""
+    B, S, D4 = gx.shape
+    D = D4 // 4
+    params = {"r": r, "f_bias": f_bias, "w_x": None}
+    state = {k: jnp.zeros((B, D), jnp.float32) for k in ("c", "n", "h", "m")}
+
+    def step(st, gx_t):
+        st2 = _slstm_cell(params, (nh, D // nh), gx_t, st)
+        return st2, st2["h"]
+
+    _, hs = jax.lax.scan(step, state, gx.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)

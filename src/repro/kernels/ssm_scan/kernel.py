@@ -1,0 +1,84 @@
+"""Chunked Mamba2/SSD state-scan kernel (TPU Pallas).
+
+One grid step processes one (batch, chunk) tile entirely in VMEM: the
+intra-chunk quadratic term, the carry-in state contribution, and the state
+update — the recurrent state (H, P, N) persists in VMEM scratch across the
+sequential chunk dimension, so the O(S) recurrence never round-trips HBM
+(the TPU-native replacement for the paper-adjacent GPU selective-scan
+kernels; DESIGN.md §3).
+
+Grid: (B, n_chunks) — chunks iterate sequentially per batch row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+    Q = x.shape[0]
+
+    dA = dt * A[None, :]                      # (Q, H)
+    dA_cs = jnp.cumsum(dA, axis=0)            # (Q, H)
+    # intra-chunk decay L[h, l, s] = exp(cs[l] - cs[s]) for s <= l
+    seg = dA_cs[:, None, :] - dA_cs[None, :, :]          # (l, s, H)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri[..., None], jnp.exp(seg), 0.0)     # (l, s, H)
+    xdt = x * dt[..., None]                              # (Q, H, P)
+    cb = Cm @ Bm.T                                       # (l, s)
+    w = cb[..., None] * L                                # (l, s, H)
+    y_diag = jnp.einsum("lsh,shp->lhp", w, xdt)
+    # carry-in contribution
+    state = state_scr[...]                               # (H, P, N)
+    y_off = jnp.einsum("ln,hpn->lhp", Cm, state) * jnp.exp(dA_cs)[..., None]
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+    # state update
+    decay_states = jnp.exp(dA_cs[-1:, :] - dA_cs)        # (Q, H)
+    upd = jnp.einsum("qn,qh,qhp->hpn", Bm, decay_states * dt, x)
+    state_scr[...] = state * jnp.exp(dA_cs[-1])[:, None, None] + upd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) -> y (B,S,H,P).
+
+    S must be padded to a chunk multiple by the caller (dt=0 padding)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    kern = functools.partial(_ssd_kernel, nc=nc)
+    y = pl.pallas_call(
+        kern,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y

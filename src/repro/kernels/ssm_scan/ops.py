@@ -1,0 +1,27 @@
+"""Public wrapper for the SSD chunk-scan kernel with jnp fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssd_scan
+from repro.kernels.ssm_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, use_pallas: bool = True,
+        interpret: bool = True):
+    S = x.shape[1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))      # dt=0: no-op steps
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    if use_pallas:
+        y = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    else:
+        y = ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    return y[:, :S]

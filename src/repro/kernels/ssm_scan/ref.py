@@ -1,0 +1,25 @@
+"""Oracle for the SSD chunk-scan kernel: the model's own chunked scan
+(validated against the naive recurrence in tests)."""
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int = 128):
+    y, _ = ssd_chunked(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                       Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk)
+    return y
+
+
+def ssd_naive_ref(x, dt, A, Bm, Cm):
+    """Step-by-step recurrence (slow, ground truth)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A[None, :])                     # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], Bm[:, t])
+        state = state * dA[..., None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cm[:, t], state))
+    return jnp.stack(ys, axis=1)

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct inputs (no allocation), record
+memory_analysis / cost_analysis / collective traffic for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LazyConfig, ModelConfig, InputShape
+from repro.configs.registry import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
+                                    long_context_policy)
+from repro.dist import ctx
+from repro.dist import hlo as hlo_lib
+from repro.dist import sharding as sh
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import transformer as tf
+from repro.train import optim, trainer
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract inputs for one (arch, shape): weak-type-correct, shardable,
+    zero allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        if cfg.frontend_stub:
+            n_frames = 256
+            out["embeds"] = jax.ShapeDtypeStruct((B, n_frames, cfg.frontend_dim),
+                                                 jnp.float32)
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - n_frames + 1), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        if cfg.frontend_stub:
+            n_frames = 256
+            out["embeds"] = jax.ShapeDtypeStruct((B, n_frames, cfg.frontend_dim),
+                                                 jnp.float32)
+            out["tokens"] = jax.ShapeDtypeStruct((B, S - n_frames), jnp.int32)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:  # decode: ONE new token against a seq_len cache
+        out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        out["index"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def _abstract_params(cfg: ModelConfig, window_override):
+    return jax.eval_shape(
+        lambda k: tf.init_lm(k, cfg, window_override=window_override),
+        jax.random.PRNGKey(0))
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               window_override: Optional[int], seq_parallel: bool = True,
+               remat: bool = True, opts: Optional[dict] = None):
+    """Returns (jitted_fn, kwargs_of_ShapeDtypeStructs).
+
+    opts (§Perf hillclimb knobs): param_mode ('fsdp'|'tp_only'),
+    shard_cache_heads (bool), lazy_plan (float skip ratio, decode only)."""
+    opts = opts or {}
+    ins = input_specs(cfg, shape)
+    params_abs = _abstract_params(cfg, window_override)
+    p_sh = sh.param_shardings(params_abs, mesh,
+                              mode=opts.get("param_mode", "fsdp"))
+    B = shape.global_batch
+    carry_spec = sh.seq_parallel_spec(mesh) if seq_parallel else None
+    csh = NamedSharding(mesh, carry_spec) if carry_spec is not None else None
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(optim.adamw_init, params_abs)
+        o_sh = jax.tree.map(
+            lambda l, s: NamedSharding(mesh, s.spec) if hasattr(l, "shape")
+            and l.ndim > 0 else NamedSharding(mesh, P()),
+            opt_abs,
+            optim.AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                             p_sh, p_sh))
+
+        def train_step(params, opt_state, tokens, embeds=None):
+            def loss_fn(p):
+                return trainer.lm_loss(p, cfg, tokens, embeds=embeds,
+                                       remat=remat, carry_sharding=csh)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+            params, opt_state = optim.adamw_update(
+                opt_state, grads, params, lr=1e-4, weight_decay=0.01)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+        tok_sh = sh.batch_sharding(mesh, B, 2)
+        args = {"params": params_abs, "opt_state": opt_abs,
+                "tokens": ins["tokens"]}
+        in_sh = {"params": p_sh, "opt_state": o_sh, "tokens": tok_sh}
+        if "embeds" in ins:
+            args["embeds"] = ins["embeds"]
+            in_sh["embeds"] = sh.batch_sharding(mesh, B, 3)
+        fn = jax.jit(train_step,
+                     in_shardings=tuple(in_sh[k] for k in args),
+                     out_shardings=(p_sh, o_sh, None))
+        return fn, tuple(args[k] for k in args)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, cache, tokens, embeds=None):
+            logits, cache, _, _ = tf.decode_step(
+                params, cfg, tokens, jnp.int32(0), cache, embeds=embeds,
+                window_override=window_override, last_logit_only=True)
+            return logits, cache
+
+        cache_abs = jax.eval_shape(
+            lambda: tf.init_decode_cache(cfg, B, shape.seq_len,
+                                         window_override=window_override))
+        c_sh = sh.cache_shardings(cache_abs, mesh, B)
+        tok_sh = sh.batch_sharding(mesh, B, 2)
+        args = {"params": params_abs, "cache": cache_abs,
+                "tokens": ins["tokens"]}
+        in_sh = {"params": p_sh, "cache": c_sh, "tokens": tok_sh}
+        if "embeds" in ins:
+            args["embeds"] = ins["embeds"]
+            in_sh["embeds"] = sh.batch_sharding(mesh, B, 3)
+        fn = jax.jit(prefill_step,
+                     in_shardings=tuple(in_sh[k] for k in args),
+                     out_shardings=(None, c_sh))
+        return fn, tuple(args[k] for k in args)
+
+    # decode
+    cache_abs = jax.eval_shape(
+        lambda: tf.init_decode_cache(cfg, B, shape.seq_len,
+                                     window_override=window_override))
+    c_sh = sh.cache_shardings(cache_abs, mesh, B,
+                              mode=opts.get("cache_mode"),
+                              shard_heads=opts.get("shard_cache_heads", False))
+
+    lazy_ratio = opts.get("lazy_plan")
+    if lazy_ratio is not None:
+        # §Perf: static lazy plan, layers unrolled -> skipped modules absent
+        # from the compiled HLO (the paper's technique as deployed on TPU)
+        rng = np.random.default_rng(0)
+        plan_step = rng.random((cfg.n_layers, 2)) < lazy_ratio
+        lazy_abs = jax.eval_shape(
+            lambda: tf.init_lazy_decode_cache(cfg, B,
+                                              window_override=window_override))
+        lz_sh = sh.cache_shardings(lazy_abs, mesh, B)
+
+        def serve_step(params, cache, lazy_cache, tokens, index):
+            logits, cache, lazy_cache = tf.decode_step_unrolled(
+                params, cfg, tokens, index, cache, lazy_cache,
+                plan_step=plan_step, window_override=window_override)
+            return logits, cache, lazy_cache
+
+        args = {"params": params_abs, "cache": cache_abs,
+                "lazy_cache": lazy_abs, "tokens": ins["tokens"],
+                "index": ins["index"]}
+        in_sh = {"params": p_sh, "cache": c_sh, "lazy_cache": lz_sh,
+                 "tokens": sh.batch_sharding(mesh, B, 2),
+                 "index": NamedSharding(mesh, P())}
+        fn = jax.jit(serve_step,
+                     in_shardings=tuple(in_sh[k] for k in args),
+                     out_shardings=(None, c_sh, lz_sh))
+        return fn, tuple(args[k] for k in args)
+
+    def serve_step(params, cache, tokens, index):
+        logits, cache, _, _ = tf.decode_step(
+            params, cfg, tokens, index, cache,
+            window_override=window_override)
+        return logits, cache
+
+    args = {"params": params_abs, "cache": cache_abs, "tokens": ins["tokens"],
+            "index": ins["index"]}
+    in_sh = {"params": p_sh, "cache": c_sh,
+             "tokens": sh.batch_sharding(mesh, B, 2),
+             "index": NamedSharding(mesh, P())}
+    fn = jax.jit(serve_step,
+                 in_shardings=tuple(in_sh[k] for k in args),
+                 out_shardings=(None, c_sh))
+    return fn, tuple(args[k] for k in args)
+
+
+# ---------------------------------------------------------------------------
+# model-flops (6ND) for the roofline "useful compute" ratio
+# ---------------------------------------------------------------------------
+
+
+def count_params_abs(params_abs) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_abs))
+
+
+def active_param_fraction(cfg: ModelConfig) -> float:
+    """MoE: fraction of expert params active per token (top_k / n_experts),
+    non-expert params always active.  Approximated from layer composition."""
+    if cfg.moe is None:
+        return 1.0
+    mo = cfg.moe
+    dff = mo.d_ff_expert or cfg.d_ff
+    expert_p = 3 * cfg.d_model * dff * mo.n_experts
+    shared_p = 3 * cfg.d_model * dff * mo.n_shared_experts
+    attn_p = 4 * cfg.d_model * cfg.d_model  # rough
+    per_layer = expert_p + shared_p + attn_p
+    active = expert_p * (mo.top_k / mo.n_experts) + shared_p + attn_p
+    return active / per_layer
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, n_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); decode D = B tokens;
+    train counts fwd+bwd (6ND); prefill/decode fwd only (2ND)."""
+    frac = active_param_fraction(cfg)
+    n_act = n_params * frac
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n_act * tokens
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            seq_parallel: bool = True, remat: bool = True,
+            tag: str = "", opts: Optional[dict] = None) -> dict:
+    opts = opts or {}
+    cfg = get_config(arch)
+    if opts.get("lazy_plan") is None:
+        # baseline dry-runs measure the un-gated model; lazy variants keep
+        # their probes (the paper's added layer must be in the program).
+        cfg = cfg.replace(lazy=LazyConfig(enabled=False))
+    if opts.get("mlstm_chunk") and cfg.xlstm is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(xlstm=_dc.replace(cfg.xlstm,
+                                            chunk=opts["mlstm_chunk"]))
+    shape = INPUT_SHAPES[shape_name]
+
+    window_override = None
+    if shape_name == "long_500k":
+        pol = long_context_policy(get_config(arch))
+        if not pol["runnable"]:
+            return {"arch": arch, "shape": shape_name, "skipped": True,
+                    "why": pol["why"]}
+        window_override = pol["window_override"]
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    ctx_opts = {k: v for k, v in opts.items()
+                if k in ("mlstm_shard", "moe_token_dp", "moe_shard_map")}
+    with mesh, ctx.activation_sharding(mesh, **ctx_opts):
+        fn, args = build_step(cfg, shape, mesh,
+                              window_override=window_override,
+                              seq_parallel=seq_parallel, remat=remat,
+                              opts=opts)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    # loop-aware static analysis: cost_analysis() counts while (scan) bodies
+    # ONCE — analyze_module scales by trip count (see dist/hlo.py)
+    mod = hlo_lib.analyze_module(hlo_text)
+    coll = mod["collective"]
+
+    flops = float(mod["flops"])               # per-device (SPMD-partitioned)
+    bytes_acc = float(mod["bytes"])
+    params_abs = _abstract_params(cfg, window_override)
+    n_params = count_params_abs(params_abs)
+    mf = model_flops(cfg, shape, n_params)
+
+    tp_model = mesh.shape.get("model", 1)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    coll_s = hlo_lib.collective_seconds(coll, tp_model, ICI_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "window_override": window_override,
+        "seq_parallel": seq_parallel, "remat": remat,
+        "tag": tag,
+        "opts": {k: v for k, v in opts.items()
+                 if v not in (None, False, "fsdp", "hd")},
+        "n_params": n_params,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": bytes_acc,
+                 "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+                 "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0))},
+        "collectives": coll,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_global": mf,
+            "model_flops_per_device": mf / n_chips,
+            "useful_compute_ratio": (mf / n_chips) / flops if flops else None,
+        },
+    }
+    return result
+
+
+def save(result: dict):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result.get('mesh', 'skip')}"
+    if result.get("tag"):
+        name += f"__{result['tag']}"
+    path = os.path.join(ARTIFACT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    # §Perf hillclimb knobs
+    ap.add_argument("--param-mode", default="fsdp", choices=["fsdp", "tp_only"])
+    ap.add_argument("--shard-cache-heads", action="store_true")
+    ap.add_argument("--cache-mode", default=None, choices=["heads", "seq"])
+    ap.add_argument("--lazy-plan", type=float, default=None)
+    ap.add_argument("--moe-token-dp", action="store_true")
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--mlstm-shard", default="hd", choices=["hd", "none"])
+    ap.add_argument("--mlstm-chunk", type=int, default=None)
+    args = ap.parse_args()
+    opts = {"param_mode": args.param_mode,
+            "shard_cache_heads": args.shard_cache_heads,
+            "cache_mode": args.cache_mode,
+            "lazy_plan": args.lazy_plan,
+            "moe_token_dp": args.moe_token_dp,
+            "moe_shard_map": args.moe_shard_map,
+            "mlstm_shard": args.mlstm_shard,
+            "mlstm_chunk": args.mlstm_chunk}
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_one(arch, shape, multi_pod=mp,
+                                seq_parallel=not args.no_seq_parallel,
+                                remat=not args.no_remat, tag=args.tag,
+                                opts=opts)
+                    p = save(r)
+                    if r.get("skipped"):
+                        print(f"[SKIP] {label}: {r['why']}")
+                    else:
+                        rl = r["roofline"]
+                        print(f"[OK]   {label}: compile={r['compile_s']}s "
+                              f"dominant={rl['dominant']} "
+                              f"compute={rl['compute_s']:.4f}s "
+                              f"mem={rl['memory_s']:.4f}s "
+                              f"coll={rl['collective_s']:.4f}s -> {p}")
+                except Exception as e:  # noqa: BLE001 - sweep must continue
+                    failures.append((label, str(e)))
+                    print(f"[FAIL] {label}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

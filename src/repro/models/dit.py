@@ -1,0 +1,258 @@
+"""DiT (Peebles & Xie 2023) with LazyDiT gates — the paper's model family.
+
+adaLN-zero blocks; a lazy probe sits before each MHSA and each pointwise
+feedforward module and reads the *modulated* input Z = scale∘LN(x) + shift,
+exactly the paper's cut point ("input scale, input shift, output gate and
+residual connections remain unchanged").
+
+The lazy cache stores the raw module outputs F(Z) (pre-output-gate); the
+sampler threads it across diffusion steps.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.models import layers as L
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def timestep_embedding(t: Array, dim: int, max_period: float = 10000.0) -> Array:
+    """Sinusoidal timestep embedding, f32.  t: (B,) float or int."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def pos_embed_2d(n_side: int, dim: int) -> np.ndarray:
+    """Fixed 2-D sincos position embedding (DiT uses this, not learned)."""
+    def emb_1d(pos, d):
+        omega = np.arange(d // 2, dtype=np.float64) / (d / 2.0)
+        omega = 1.0 / 10000 ** omega
+        out = np.einsum("p,d->pd", pos, omega)
+        return np.concatenate([np.sin(out), np.cos(out)], axis=1)
+
+    grid = np.arange(n_side, dtype=np.float64)
+    gy, gx = np.meshgrid(grid, grid, indexing="ij")
+    e = np.concatenate([emb_1d(gy.reshape(-1), dim // 2),
+                        emb_1d(gx.reshape(-1), dim // 2)], axis=1)
+    return e.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_dit(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    p2c = cfg.dit_patch ** 2 * cfg.dit_in_channels
+    n_side = cfg.dit_input_size // cfg.dit_patch
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params = {
+        "patch_embed": {"w": L.dense_init(ks[0], p2c, d, dt),
+                        "b": jnp.zeros((d,), dt)},
+        "pos_embed": jnp.asarray(pos_embed_2d(n_side, d), dt),
+        "t_mlp": {"w1": L.dense_init(ks[1], 256, d, dt),
+                  "b1": jnp.zeros((d,), dt),
+                  "w2": L.dense_init(ks[2], d, d, dt),
+                  "b2": jnp.zeros((d,), dt)},
+        # +1 slot: the CFG null label
+        "y_embed": L.embed_init(ks[3], cfg.dit_n_classes + 1, d, dt),
+        "final": {
+            "mod": {"w": jnp.zeros((d, 2 * d), dt), "b": jnp.zeros((2 * d,), dt)},
+            "w": jnp.zeros((d, cfg.dit_patch ** 2 * cfg.dit_in_channels * 2), dt),
+            "b": jnp.zeros((cfg.dit_patch ** 2 * cfg.dit_in_channels * 2,), dt),
+        },
+    }
+
+    def init_dit_block(bk):
+        bks = jax.random.split(bk, 4)
+        blk = {
+            "attn": L.init_attention(bks[0], cfg),
+            # DiT uses a plain GELU MLP (fc1 -> gelu -> fc2), not a gated one
+            "mlp": {"w1": L.dense_init(bks[1], d, cfg.d_ff, dt),
+                    "b1": jnp.zeros((cfg.d_ff,), dt),
+                    "w2": L.dense_init(jax.random.fold_in(bks[1], 1),
+                                       cfg.d_ff, d, dt),
+                    "b2": jnp.zeros((d,), dt)},
+            # adaLN-zero: modulation projection zero-init (output gates start 0)
+            "mod": {"w": jnp.zeros((d, 6 * d), dt), "b": jnp.zeros((6 * d,), dt)},
+        }
+        if cfg.lazy.enabled:
+            if cfg.lazy.gate_attn:
+                blk["g_attn"] = lazy_lib.init_lazy_gate(bks[2], d)
+            if cfg.lazy.gate_ffn:
+                blk["g_ffn"] = lazy_lib.init_lazy_gate(bks[3], d)
+        return blk
+
+    bkeys = jax.random.split(ks[4], cfg.n_layers)
+    params["blocks"] = jax.vmap(init_dit_block)(bkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Patching
+# ---------------------------------------------------------------------------
+
+
+def patchify(x: Array, patch: int) -> Array:
+    """(B, H, W, C) -> (B, N, patch*patch*C)."""
+    B, H, W, C = x.shape
+    p = patch
+    x = x.reshape(B, H // p, p, W // p, p, C)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // p) * (W // p), p * p * C)
+
+
+def unpatchify(x: Array, patch: int, n_side: int, channels: int) -> Array:
+    B, N, _ = x.shape
+    p = patch
+    x = x.reshape(B, n_side, n_side, p, p, channels)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, n_side * p, n_side * p, channels)
+
+
+def _modulate(x: Array, shift: Array, scale: Array) -> Array:
+    return x * (1 + scale[:, None, :]) + shift[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
+                 lazy_cache: Optional[dict], lazy_mode: str,
+                 plan: Tuple[bool, bool] = (False, False),
+                 prime: bool = False):
+    """One DiT block.  ``prime=True`` (first sampling step): run every module
+    but record outputs into the lazy cache.  Returns (x, new_lazy, scores)."""
+    d = cfg.d_model
+    mod = jax.nn.silu(c) @ blk["mod"]["w"] + blk["mod"]["b"]       # (B, 6D)
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+
+    new_lazy = dict(lazy_cache) if lazy_cache else {}
+    scores = {}
+
+    def gated(name: str, gate_key: str, z: Array, fn, plan_skip: bool):
+        cache_y = None
+        if lazy_cache is not None and not prime:
+            cache_y = lazy_cache.get(name)
+        out = lazy_lib.lazy_execute(
+            fn, z, gate=blk.get(gate_key), cache_y=cache_y, mode=lazy_mode,
+            threshold=cfg.lazy.threshold, plan_skip=plan_skip and not prime)
+        if lazy_cache is not None:
+            new_lazy[name] = out.new_cache
+        if out.score is not None:
+            scores[name] = out.score
+        return out.y
+
+    z1 = _modulate(L.layernorm_apply({}, x, 1e-6), sh1, sc1)       # paper's Z
+    y = gated("attn", "g_attn", z1,
+              lambda z: L.attention_apply(blk["attn"], cfg, z, cos=None,
+                                          sin=None, window=0, causal=False)[0],
+              plan[0])
+    x = x + g1[:, None, :] * y
+
+    z2 = _modulate(L.layernorm_apply({}, x, 1e-6), sh2, sc2)
+
+    def dit_mlp(z):
+        h = jax.nn.gelu(z @ blk["mlp"]["w1"] + blk["mlp"]["b1"])
+        return h @ blk["mlp"]["w2"] + blk["mlp"]["b2"]
+
+    y = gated("ffn", "g_ffn", z2, dit_mlp, plan[1])
+    x = x + g2[:, None, :] * y
+    return x, new_lazy, scores
+
+
+def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
+                lazy_cache: Optional[dict] = None,
+                lazy_mode: str = "off",
+                plan_row: Optional[np.ndarray] = None,
+                first_step: bool = False,
+                ) -> Tuple[Array, Optional[dict], Dict[str, Array]]:
+    """One denoiser evaluation.
+
+    x: (B, H, W, C) latent; t: (B,) timesteps; y: (B,) labels
+    (cfg.dit_n_classes = null token for CFG-unconditional rows).
+
+    lazy_cache: {"attn": (L,B,N,D), "ffn": (L,B,N,D)} previous-step module
+    outputs, or None on the first sampling step.
+    plan_row: (L, 2) static booleans for 'plan' mode (unrolled layers).
+    Returns (eps_and_sigma (B,H,W,2C), new_lazy_cache, scores (L,B) per module).
+    """
+    p = cfg.dit_patch
+    n_side = cfg.dit_input_size // p
+    tok = patchify(x, p).astype(jnp.dtype(cfg.dtype))
+    h = tok @ params["patch_embed"]["w"] + params["patch_embed"]["b"]
+    h = h + params["pos_embed"][None]
+
+    te = timestep_embedding(t, 256).astype(h.dtype)
+    te = jax.nn.silu(te @ params["t_mlp"]["w1"] + params["t_mlp"]["b1"])
+    te = te @ params["t_mlp"]["w2"] + params["t_mlp"]["b2"]
+    c = te + params["y_embed"][y]
+
+    nL = cfg.n_layers
+    use_plan = lazy_mode == "plan" and plan_row is not None
+    unroll = use_plan or lazy_cache is not None or cfg.lazy.enabled
+
+    if unroll:
+        new_lazy = {"attn": [], "ffn": []}
+        sc_attn, sc_ffn = [], []
+        B = h.shape[0]
+        for l in range(nL):
+            blk = jax.tree.map(lambda a: a[l], params["blocks"])
+            lc = (None if lazy_cache is None else
+                  {"attn": lazy_cache["attn"][l], "ffn": lazy_cache["ffn"][l]})
+            plan = (bool(plan_row[l][0]), bool(plan_row[l][1])) if use_plan \
+                else (False, False)
+            h, nlz, sc = _block_apply(blk, cfg, h, c, lazy_cache=lc,
+                                      lazy_mode=lazy_mode, plan=plan,
+                                      prime=first_step)
+            if lazy_cache is not None:
+                new_lazy["attn"].append(nlz["attn"])
+                new_lazy["ffn"].append(nlz["ffn"])
+            sc_attn.append(sc.get("attn", jnp.zeros((B,), jnp.float32)))
+            sc_ffn.append(sc.get("ffn", jnp.zeros((B,), jnp.float32)))
+        out_lazy = (None if lazy_cache is None else
+                    {"attn": jnp.stack(new_lazy["attn"]),
+                     "ffn": jnp.stack(new_lazy["ffn"])})
+        scores = {"attn": jnp.stack(sc_attn), "ffn": jnp.stack(sc_ffn)}
+    else:
+        def body(h, blk):
+            h, _, _ = _block_apply(blk, cfg, h, c, lazy_cache=None,
+                                   lazy_mode="off")
+            return h, None
+
+        h, _ = jax.lax.scan(body, h, params["blocks"])
+        out_lazy, scores = None, {}
+
+    mod = jax.nn.silu(c) @ params["final"]["mod"]["w"] + params["final"]["mod"]["b"]
+    sh, sc_ = jnp.split(mod, 2, axis=-1)
+    h = _modulate(L.layernorm_apply({}, h, 1e-6), sh, sc_)
+    h = h @ params["final"]["w"] + params["final"]["b"]
+    out = unpatchify(h, p, n_side, cfg.dit_in_channels * 2)
+    return out, out_lazy, scores
+
+
+def init_dit_lazy_cache(cfg: ModelConfig, batch: int) -> dict:
+    n_tok = (cfg.dit_input_size // cfg.dit_patch) ** 2
+    z = jnp.zeros((cfg.n_layers, batch, n_tok, cfg.d_model), jnp.dtype(cfg.dtype))
+    return {"attn": z, "ffn": z}
+
+
+def split_eps(out: Array, channels: int) -> Tuple[Array, Array]:
+    """DiT predicts (eps, sigma); DDIM uses eps."""
+    return out[..., :channels], out[..., channels:]

@@ -1,0 +1,1135 @@
+"""Layer primitives for all assigned architectures.
+
+Pure-functional pytree modules: every layer is an ``init_*(key, ...) -> params``
+plus an ``*_apply(params, x, ...) -> y`` pair.  No global state; params are
+nested dicts of jnp arrays so they stack cleanly under ``jax.vmap`` for
+scan-over-layers and shard cleanly under pjit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, MoEConfig, MLAConfig, SSMConfig, XLSTMConfig
+from repro.dist import ctx
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0) -> Array:
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype, elementwise: bool = True) -> dict:
+    if elementwise:
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {}
+
+
+def layernorm_apply(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """Inverse frequencies, f32, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def rope_cos_sin(positions: Array, head_dim: int, theta: float,
+                 mrope_sections: Tuple[int, ...] = ()) -> Tuple[Array, Array]:
+    """cos/sin tables.
+
+    positions: (..., S) int32 for plain rope, or (3, ..., S) for M-RoPE
+    (temporal / height / width position streams, Qwen2-VL arXiv:2409.12191).
+    Returns cos, sin of shape (..., S, head_dim // 2) in f32.
+    """
+    inv = rope_freqs(head_dim, theta)                      # (hd/2,)
+    if mrope_sections:
+        assert positions.ndim >= 2 and positions.shape[0] == len(mrope_sections)
+        ang_parts = []
+        start = 0
+        for i, sec in enumerate(mrope_sections):
+            p = positions[i].astype(jnp.float32)[..., None]          # (...,S,1)
+            ang_parts.append(p * inv[start:start + sec])
+            start += sec
+        ang = jnp.concatenate(ang_parts, axis=-1)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * inv          # (...,S,hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, sliding window, logit softcap)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dt),
+        "wk": dense_init(ks[1], d, kv * hd, dt),
+        "wv": dense_init(ks[2], d, kv * hd, dt),
+        "wo": dense_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _softcap(x: Array, cap: float) -> Array:
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def _sdpa_block(q: Array, k: Array, v: Array, *, window: int, softcap: float,
+                qpos: Array, kpos: Array, causal: bool = True) -> Array:
+    """One query-block of causal attention. q: (B,Sq,H,hd) k: (B,Sk,KV,hd),
+    v: (B,Sk,KV,vd) — v head dim may differ (MLA); qpos (Sq,), kpos (Sk,)
+    absolute positions."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    rep = H // KV
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qg = qf.reshape(B, Sq, KV, rep, hd)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k.astype(jnp.float32))
+    scores = _softcap(scores, softcap)
+    qp, kp = qpos[:, None], kpos[None, :]
+    mask = (kp >= 0) & (qp >= 0)                        # unwritten ring / pad slots
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    # ADDITIVE mask: `add` carries no residuals through the backward pass,
+    # so remat'd scans don't stack (Sq,Sk) preds across iterations the way a
+    # `select` would (a 100x activation-memory difference at 32k context).
+    bias = jnp.where(mask, 0.0, -1e30)                  # (Sq, Sk) f32, small
+    probs = jax.nn.softmax(scores + bias[None, None, None], axis=-1)
+    # rows with no valid key (fully masked) -> zero output, not NaN
+    rowvalid = jnp.any(mask, axis=-1).astype(jnp.float32)      # (Sq,)
+    probs = probs * rowvalid[None, None, None, :, None]
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, vd).astype(q.dtype)
+
+
+SDPA_Q_BLOCK = 512   # query-chunk length for long-sequence attention
+
+
+def sdpa(q: Array, k: Array, v: Array, *, causal: bool, window: int,
+         softcap: float, q_offset: Array | int = 0,
+         kv_positions: Optional[Array] = None) -> Array:
+    """Scaled dot-product attention, GQA-aware, f32 softmax.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd).
+    Long query sequences are processed in SDPA_Q_BLOCK chunks via lax.scan so
+    the score matrix transient is (B, H, blk, Sk) instead of (B, H, Sq, Sk) —
+    the jnp analogue of the Pallas flash kernel's HBM footprint (the Pallas
+    path additionally tiles Sk through VMEM; see kernels/flash_attention).
+
+    ``q_offset``: absolute position of q[0] (decode: current index).
+    ``kv_positions``: (Sk,) absolute positions of cache slots (ring buffers);
+    defaults to arange(Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    kpos = kv_positions if kv_positions is not None else jnp.arange(Sk)
+    if Sq <= SDPA_Q_BLOCK:
+        qpos = jnp.arange(Sq) + q_offset
+        return _sdpa_block(q, k, v, window=window, softcap=softcap,
+                           qpos=qpos, kpos=kpos, causal=causal)
+    blk = SDPA_Q_BLOCK
+    nb = (Sq + blk - 1) // blk
+    pad = nb * blk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qpos_all = jnp.arange(nb * blk) + q_offset
+    # padded tail gets position -1 -> fully masked -> zero rows (sliced off)
+    qpos_all = jnp.where(jnp.arange(nb * blk) < Sq, qpos_all, -1)
+    q_blocks = qp.reshape(B, nb, blk, H, hd).transpose(1, 0, 2, 3, 4)
+    qpos_blocks = qpos_all.reshape(nb, blk)
+
+    # flash-style backward: recompute probs per block instead of saving the
+    # (blk, Sk) probability tiles as scan residuals (f32 probs for a 32k
+    # context would otherwise dominate activation memory)
+    @jax.checkpoint
+    def body(_, inp):
+        qb, qposb = inp
+        ob = _sdpa_block(qb, k, v, window=window, softcap=softcap,
+                         qpos=qposb, kpos=kpos, causal=causal)
+        return None, ob
+
+    _, out = lax.scan(body, None, (q_blocks, qpos_blocks))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nb * blk, H, v.shape[-1])
+    return out[:, :Sq]
+
+
+def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                    cos: Array, sin: Array, window: int,
+                    cache: Optional[dict] = None,
+                    decode_index: Optional[Array] = None,
+                    causal: bool = True,
+                    ) -> Tuple[Array, Optional[dict]]:
+    """GQA attention. Full-sequence causal when cache is None, else one-step
+    decode against (and updating) the KV cache.
+
+    cache: {"k": (B, W, KV, hd), "v": ..., "pos": (W,) int32 slot positions}.
+    Ring-buffered when W < full context (sliding-window archs).
+    """
+    B, S, D = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.use_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = ctx.constrain(q.reshape(B, S, h, hd), "batch", None, "model", None)
+    k = ctx.constrain(k.reshape(B, S, kv, hd), "batch", None, "model", None)
+    v = ctx.constrain(v.reshape(B, S, kv, hd), "batch", None, "model", None)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_type != "none":
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = sdpa(q, k, v, causal=causal, window=window,
+                   softcap=cfg.attn_logit_softcap)
+        new_cache = None
+    elif S == 1:
+        W = cache["k"].shape[1]
+        slot = (decode_index % W).astype(jnp.int32)
+        ck = lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cpos = lax.dynamic_update_slice(
+            cache["pos"], decode_index[None].astype(jnp.int32), (slot,))
+        out = sdpa(q, ck, cv, causal=True, window=window,
+                   softcap=cfg.attn_logit_softcap, q_offset=decode_index,
+                   kv_positions=cpos)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        # prefill into a fresh cache (positions 0..S-1); ring-truncates to the
+        # last W tokens for sliding-window caches.
+        W = cache["k"].shape[1]
+        Wl = min(W, S)
+        pos_last = jnp.arange(S - Wl, S)
+        slots = (pos_last % W).astype(jnp.int32)
+        ck = cache["k"].at[:, slots].set(k[:, -Wl:])
+        cv = cache["v"].at[:, slots].set(v[:, -Wl:])
+        cpos = cache["pos"].at[slots].set(pos_last.astype(jnp.int32))
+        out = sdpa(q, k, v, causal=True, window=window,
+                   softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    out = ctx.constrain(out, "batch", None, "model", None)
+    y = out.reshape(B, S, h * hd) @ params["wo"]
+    return y, new_cache
+
+
+def attention_kv_write(params: dict, cfg: ModelConfig, x: Array, *,
+                       cos: Array, sin: Array, cache: dict,
+                       decode_index: Array) -> dict:
+    """KV-projection + cache write only (no attention compute).
+
+    Used when a lazy *plan* skips the attention module during AR decode: the
+    module's output is served from the lazy cache, but this position's k/v
+    must still be recorded or later steps would never see it (cost: the two
+    small kv projections, ~2·D·KV·hd FLOPs vs the full module)."""
+    B, S, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.use_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_type != "none":
+        k = apply_rope(k, cos, sin)
+    W = cache["k"].shape[1]
+    slot = (decode_index % W).astype(jnp.int32)
+    return {
+        "k": lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0)),
+        "v": lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0)),
+        "pos": lax.dynamic_update_slice(
+            cache["pos"], decode_index[None].astype(jnp.int32), (slot,)),
+    }
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         window: int) -> dict:
+    W = min(max_len, window) if window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((batch, W, kv, hd), dt),
+        "v": jnp.zeros((batch, W, kv, hd), dt),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_d = m.qk_nope_head_dim + m.qk_rope_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        # q: full-rank (lite model has no q lora)
+        "wq": dense_init(ks[0], d, h * qk_d, dt),
+        # joint kv compression + shared rope key
+        "w_dkv": dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "w_uk": dense_init(ks[2], m.kv_lora_rank, h * m.qk_nope_head_dim, dt),
+        "w_uv": dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim, dt),
+        "wo": dense_init(ks[4], h * m.v_head_dim, d, dt),
+    }
+    return p
+
+
+def mla_apply(params: dict, cfg: ModelConfig, x: Array, *,
+              cos: Array, sin: Array, window: int,
+              cache: Optional[dict] = None,
+              decode_index: Optional[Array] = None,
+              ) -> Tuple[Array, Optional[dict]]:
+    """MLA with latent-KV cache: caches (c_kv, k_rope) only."""
+    m: MLAConfig = cfg.mla
+    B, S, D = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = ctx.constrain((x @ params["wq"]).reshape(B, S, h, nd + rd),
+                      "batch", None, "model", None)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    dkv = x @ params["w_dkv"]
+    c_kv = rmsnorm_apply(params["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., m.kv_lora_rank:][:, :, None, :], cos, sin)  # (B,S,1,rd)
+
+    if cache is not None and S == 1:
+        W = cache["c_kv"].shape[1]
+        slot = (decode_index % W).astype(jnp.int32)
+        c_kv = lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0))
+        k_rope_c = lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, slot, 0, 0))
+        cpos = lax.dynamic_update_slice(
+            cache["pos"], decode_index[None].astype(jnp.int32), (slot,))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope_c, "pos": cpos}
+        k_rope = k_rope_c
+        kv_positions = cpos
+        q_offset = decode_index
+    elif cache is not None:
+        # prefill from position 0 (see attention_apply)
+        W = cache["c_kv"].shape[1]
+        Wl = min(W, S)
+        pos_last = jnp.arange(S - Wl, S)
+        slots = (pos_last % W).astype(jnp.int32)
+        new_cache = {
+            "c_kv": cache["c_kv"].at[:, slots].set(c_kv[:, -Wl:]),
+            "k_rope": cache["k_rope"].at[:, slots].set(k_rope[:, -Wl:]),
+            "pos": cache["pos"].at[slots].set(pos_last.astype(jnp.int32)),
+        }
+        kv_positions, q_offset = None, 0
+    else:
+        new_cache, kv_positions, q_offset = None, None, 0
+
+    Sk = c_kv.shape[1]
+    k_nope = ctx.constrain((c_kv @ params["w_uk"]).reshape(B, Sk, h, nd),
+                           "batch", None, "model", None)
+    val = ctx.constrain((c_kv @ params["w_uv"]).reshape(B, Sk, h, vd),
+                        "batch", None, "model", None)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, Sk, h, rd))], -1)
+    qq = jnp.concatenate([q_nope, q_rope], -1)
+    out = sdpa(qq, k, val, causal=True, window=window,
+               softcap=cfg.attn_logit_softcap, q_offset=q_offset,
+               kv_positions=kv_positions)
+    out = ctx.constrain(out, "batch", None, "model", None)
+    y = out.reshape(B, S, h * vd) @ params["wo"]
+    return y, new_cache
+
+
+def mla_kv_write(params: dict, cfg: ModelConfig, x: Array, *,
+                 cos: Array, sin: Array, cache: dict,
+                 decode_index: Array) -> dict:
+    """Latent-KV cache write only (plan-skipped MLA module; see
+    attention_kv_write)."""
+    m: MLAConfig = cfg.mla
+    dkv = x @ params["w_dkv"]
+    c_kv = rmsnorm_apply(params["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., m.kv_lora_rank:][:, :, None, :], cos, sin)
+    W = cache["c_kv"].shape[1]
+    slot = (decode_index % W).astype(jnp.int32)
+    return {
+        "c_kv": lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0)),
+        "k_rope": lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, slot, 0, 0)),
+        "pos": lax.dynamic_update_slice(
+            cache["pos"], decode_index[None].astype(jnp.int32), (slot,)),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, window: int) -> dict:
+    m: MLAConfig = cfg.mla
+    W = min(max_len, window) if window else max_len
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "c_kv": jnp.zeros((batch, W, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, W, 1, m.qk_rope_head_dim), dt),
+        "pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Feedforward (gated) and MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(dtype)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dt),
+        "w_up": dense_init(ks[1], d, d_ff, dt),
+        "w_down": dense_init(ks[2], d_ff, d, dt),
+    }
+
+
+def _act(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp_apply(params: dict, x: Array, act: str = "silu") -> Array:
+    h = _act(act, x @ params["w_gate"]) * (x @ params["w_up"])
+    if h.ndim == 3:
+        h = ctx.constrain(h, "batch", None, "model")
+    return h @ params["w_down"]
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    mo: MoEConfig = cfg.moe
+    d = cfg.d_model
+    dff = mo.d_ff_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    expert_keys = jax.random.split(ks[0], mo.n_experts)
+    experts = jax.vmap(lambda k: init_mlp(k, d, dff, dt))(expert_keys)
+    p = {"router": dense_init(ks[1], d, mo.n_experts, dt), "experts": experts}
+    if mo.n_shared_experts:
+        p["shared"] = init_mlp(ks[2], d, dff * mo.n_shared_experts, dt)
+    return p
+
+
+def moe_apply_dense_ref(params: dict, cfg: ModelConfig, x: Array,
+                        act: str = "silu") -> Tuple[Array, Array]:
+    """Reference oracle: computes *every* expert for every token and combines
+    with router weights (no capacity drops).  O(T·E) compute — tests only."""
+    mo: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    logits = (xt @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, mo.top_k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    wfull = jnp.zeros_like(probs)
+    wfull = jax.vmap(lambda w, g, i: w.at[i].set(g))(wfull, gate_vals, gate_idx)
+    h_all = jax.vmap(lambda p: mlp_apply(p, xt, act))(params["experts"])  # (E,T,D)
+    y = jnp.einsum("etd,te->td", h_all, wfull.astype(xt.dtype))
+    if mo.n_shared_experts:
+        y = y + mlp_apply(params["shared"], xt, act)
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], mo.n_experts), axis=0)
+    aux = jnp.sum(frac_tokens * jnp.mean(probs, 0)) * mo.n_experts \
+        * mo.router_aux_weight
+    return y.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+def moe_apply_shard_map(params: dict, cfg: ModelConfig, x: Array,
+                        act: str = "silu") -> Tuple[Array, Array]:
+    """Megatron-style LOCAL MoE dispatch (§Perf hillclimb B).
+
+    Under pjit's global view, capacity dispatch builds GLOBAL (E, C, D)
+    buffers; scattering dp-sharded tokens into them leaves partial sums that
+    GSPMD resolves with (E, C, F)-sized all-reduces (measured: 4.7-18 TB per
+    step on mixtral train_4k).  shard_map makes the dispatch per-data-shard:
+    local tokens -> local capacity buffers -> TP expert matmuls -> one psum
+    over the model axis.  Weight FSDP gathers happen once at the boundary.
+    """
+    from jax.sharding import PartitionSpec as P
+    mo: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    mesh = ctx._STATE["mesh"]
+    dp = ctx._STATE["dp"]
+    tp = ctx._STATE["model"]
+
+    def local(xt, router, experts, shared):
+        with ctx.disabled():
+            return _local_impl(xt, router, experts, shared)
+
+    def _local_impl(xt, router, experts, shared):
+        T, _ = xt.shape                       # local tokens
+        E, K = mo.n_experts, mo.top_k
+        C = max(1, int(math.ceil(T * K / E * mo.capacity_factor)))
+        logits = (xt @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = lax.top_k(probs, K)
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+        eid = gate_idx.T.reshape(-1)
+        wk = gate_vals.T.reshape(-1)
+        order = jnp.argsort(eid, stable=True)
+        eid_s = eid[order]
+        tok_s = (order % T).astype(jnp.int32)
+        w_s = wk[order]
+        counts = jnp.bincount(eid, length=E)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(K * T, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+        ok = pos < C
+        dest = jnp.where(ok, eid_s * C + pos, E * C - 1)
+        src = jnp.where(ok[:, None], xt[tok_s], 0)
+        buf = jnp.zeros((E * C, D), xt.dtype).at[dest].add(src)
+        h = jax.vmap(lambda p, xe: mlp_apply(p, xe, act))(
+            experts, buf.reshape(E, C, D))            # F locally TP-sliced
+        h_flat = h.reshape(E * C, D)
+        contrib = w_s[:, None].astype(xt.dtype) * h_flat[dest]
+        contrib = jnp.where(ok[:, None], contrib, 0)
+        y = jnp.zeros((T, D), xt.dtype).at[tok_s].add(contrib)
+        if mo.n_shared_experts:
+            y = y + mlp_apply(shared, xt, act)
+        y = lax.psum(y, tp)                           # TP partial sums
+        frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+        aux = jnp.sum(frac_tokens * jnp.mean(probs, 0)) * E \
+            * mo.router_aux_weight
+        aux = lax.pmean(aux.astype(jnp.float32), dp)
+        return y, aux
+
+    shared = params.get("shared")
+    if shared is None:
+        shared = {}
+    expert_specs = {"w_gate": P(None, None, tp), "w_up": P(None, None, tp),
+                    "w_down": P(None, tp, None)}
+    shared_specs = ({"w_gate": P(None, tp), "w_up": P(None, tp),
+                     "w_down": P(tp, None)} if shared else {})
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None), P(None, None), expert_specs, shared_specs),
+        out_specs=(P(dp, None), P()),
+        check_vma=False)
+    xt = x.reshape(B * S, D)
+    y, aux = fn(xt, params["router"], params["experts"], shared)
+    return y.reshape(B, S, D), aux
+
+
+def moe_apply(params: dict, cfg: ModelConfig, x: Array,
+              act: str = "silu") -> Tuple[Array, Array]:
+    """Sort-based capacity MoE dispatch (production path).
+
+    Tokens are argsorted by expert id and scattered into a per-expert
+    (E, C, D) buffer — O(T·K) memory instead of the (T, E, C) dispatch
+    tensor of the Mesh-TF formulation.  Capacity overflow drops the lowest-
+    priority (higher k) assignments, matching standard TPU MoE stacks.
+    Expert weights are tensor-parallel over the ``model`` mesh axis
+    (d_ff_expert sharded); see dist/sharding.py.
+
+    Returns (y, aux_loss).
+    """
+    if ctx.opt("moe_shard_map") and ctx.active():
+        return moe_apply_shard_map(params, cfg, x, act)
+    mo: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = mo.n_experts, mo.top_k
+    C = max(1, int(math.ceil(T * K / E * mo.capacity_factor)))
+
+    xt = x.reshape(T, D)
+    if ctx.opt("moe_token_dp"):
+        # §Perf hillclimb B: pin dispatch tokens to the data axes so the
+        # sort/scatter pipeline never reshards the (seq-parallel) token dim
+        # across the TP axis (GSPMD otherwise emits collective-permutes of
+        # the full token buffer per layer).
+        xt = ctx.constrain(xt, "batch", None)
+    logits = (xt @ params["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, K)                      # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # k-major flatten: all first choices sort ahead of second choices, so
+    # capacity drops hit the lowest-weight assignments first.
+    eid = gate_idx.T.reshape(-1)                                   # (K*T,)
+    wk = gate_vals.T.reshape(-1)                                   # (K*T,)
+    order = jnp.argsort(eid, stable=True)
+    eid_s = eid[order]
+    tok_s = (order % T).astype(jnp.int32)
+    w_s = wk[order]
+    # position within expert group
+    counts = jnp.bincount(eid, length=E)
+    starts = jnp.cumsum(counts) - counts                           # (E,)
+    pos = jnp.arange(K * T, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+    ok = pos < C
+    # overflow handled by ZEROED scatter-adds into the last slot rather than
+    # a +1 slot: (E*C, D) keeps a shardable leading dim (an odd E*C+1 buffer
+    # forces GSPMD to replicate the whole dispatch — §Perf hillclimb B).
+    dest = jnp.where(ok, eid_s * C + pos, E * C - 1)
+    src = jnp.where(ok[:, None], xt[tok_s], 0)
+    buf = jnp.zeros((E * C, D), xt.dtype).at[dest].add(src)
+    if ctx.opt("moe_token_dp"):
+        buf = ctx.constrain(buf, "batch", None)    # capacity over data axes
+    h = jax.vmap(lambda p, xe: mlp_apply(p, xe, act))(
+        params["experts"], buf.reshape(E, C, D))
+    h_flat = h.reshape(E * C, D)
+    if ctx.opt("moe_token_dp"):
+        h_flat = ctx.constrain(h_flat, "batch", None)
+    contrib = w_s[:, None].astype(xt.dtype) * h_flat[dest]
+    contrib = jnp.where(ok[:, None], contrib, 0)
+    y = jnp.zeros((T, D), xt.dtype).at[tok_s].add(contrib)
+    if ctx.opt("moe_token_dp"):
+        y = ctx.constrain(y, "batch", None)
+
+    if mo.n_shared_experts:
+        y = y + mlp_apply(params["shared"], xt, act)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = jnp.sum(frac_tokens * frac_probs) * E * mo.router_aux_weight
+    return y.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — arXiv:2405.21060 style, used by zamba2
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+    d_proj = 2 * d_inner + 2 * s.state_dim + n_heads
+    return {
+        "w_in": dense_init(ks[0], d, d_proj, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, d_inner + 2 * s.state_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dt),
+        "w_out": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _segsum(x: Array) -> Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k], causal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh: Array, dt_h: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, init_state: Optional[Array] = None,
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan (Mamba2).
+
+    xh: (B, S, H, P) inputs; dt_h: (B, S, H) softplus'd step sizes;
+    A: (H,) negative decay rates; Bm/Cm: (B, S, N) shared across heads.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    r = lambda a, sh: a.reshape(sh)
+    x_ = r(xh, (Bsz, nc, Q, H, P))
+    dt_ = r(dt_h, (Bsz, nc, Q, H))
+    B_ = r(Bm, (Bsz, nc, Q, N))
+    C_ = r(Cm, (Bsz, nc, Q, N))
+
+    dA = dt_ * A                                                # (b,c,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))              # (b,c,h,q,q)
+    xdt = x_ * dt_[..., None]
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", C_, B_, L, xdt)
+    # chunk-final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)         # (b,c,q,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", B_, decay_states * dt_, x_)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                   # (b,c,h)
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                           # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit state *before* chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), xh.dtype)
+    final, prev_states = lax.scan(
+        scan_fn, init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,c,h,p,n)
+    # state -> output within chunk
+    state_decay = jnp.exp(dA_cs)                                # (b,c,q,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", C_, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba2_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                 cache: Optional[dict] = None,
+                 ) -> Tuple[Array, Optional[dict]]:
+    """Mamba2 block: full-seq (chunked scan) or single-step (recurrent)."""
+    s: SSMConfig = cfg.ssm
+    B, S, D = x.shape
+    d_inner = s.expand * D
+    H = d_inner // s.head_dim
+    N, P = s.state_dim, s.head_dim
+
+    proj = x @ params["w_in"]
+    z, xbc_dt = proj[..., :d_inner], proj[..., d_inner:]
+    xbc, dt_raw = xbc_dt[..., : d_inner + 2 * N], xbc_dt[..., d_inner + 2 * N:]
+
+    cw = params["conv_w"].astype(jnp.float32)                   # (W, d_conv)
+    Wc = cw.shape[0]
+    if cache is None:
+        # causal depthwise conv over sequence
+        pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (Wc - 1, 0), (0, 0)))
+        xbc_c = sum(pad[:, i:i + S] * cw[i] for i in range(Wc))
+        new_conv = None
+    else:
+        buf = jnp.concatenate([cache["conv"], xbc.astype(jnp.float32)], axis=1)
+        xbc_c = sum(buf[:, i:i + S] * cw[i] for i in range(Wc))
+        new_conv = buf[:, -(Wc - 1):]
+    xbc_c = ctx.constrain(jax.nn.silu(xbc_c).astype(x.dtype),
+                          "batch", None, "model")
+
+    xs = ctx.constrain(xbc_c[..., :d_inner].reshape(B, S, H, P),
+                       "batch", None, "model", None)
+    Bm = xbc_c[..., d_inner:d_inner + N]
+    Cm = xbc_c[..., d_inner + N:]
+    dt_h = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                                # (H,) negative
+
+    if cache is None or S > 1:
+        init = cache["state"] if cache is not None else None
+        Q = min(s.chunk, S)
+        pad = (-S) % Q
+        if pad:
+            # dt=0 padding: decay exp(0)=1 and zero state contribution
+            xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))
+            Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xs_p, dt_p, Bm_p, Cm_p = xs, dt_h, Bm, Cm
+        y, final = ssd_chunked(xs_p.astype(jnp.float32), dt_p, A,
+                               Bm_p.astype(jnp.float32),
+                               Cm_p.astype(jnp.float32), Q, init_state=init)
+        y = y[:, :S]
+        new_cache = None if cache is None else {"state": final,
+                                                "conv": new_conv}
+    else:
+        st = cache["state"]                                      # (B,H,P,N) f32
+        dA = jnp.exp(dt_h[:, 0] * A)                             # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_h[:, 0],
+                         xs[:, 0].astype(jnp.float32), Bm[:, 0].astype(jnp.float32))
+        st = st * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), st)[:, None]
+        new_cache = {"state": st, "conv": new_conv}
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rmsnorm_apply(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["w_out"], new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int) -> dict:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return {
+        "state": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_inner + 2 * s.state_dim),
+                          jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) & sLSTM (scalar)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    d_in = int(xc.proj_factor * d)
+    h = cfg.n_heads
+    hd = d_in // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_in, dt),              # x branch + z gate
+        "conv_w": (jax.random.normal(ks[1], (xc.conv_width, d_in), jnp.float32)
+                   * 0.1).astype(dt),
+        "wq": dense_init(ks[2], d_in, d_in, dt),
+        "wk": dense_init(ks[3], d_in, d_in, dt),
+        "wv": dense_init(ks[4], d_in, d_in, dt),
+        "w_i": dense_init(ks[5], d_in, h, dt, scale=0.1),
+        "w_f": dense_init(ks[6], d_in, h, dt, scale=0.1),
+        "f_bias": jnp.linspace(3.0, 6.0, h).astype(jnp.float32),
+        "norm": init_rmsnorm(d_in, dt),
+        "w_down": dense_init(ks[7], d_in, d, dt),
+    }
+
+
+def mlstm_parallel_ref(q: Array, k: Array, v: Array, i_pre: Array,
+                       f_pre: Array) -> Array:
+    """Stabilized *quadratic* parallel mLSTM — reference oracle only
+    (materializes (B,S,S,H); use mlstm_chunked in the model path).
+
+    q,k,v: (B, S, H, hd); i_pre/f_pre: (B, S, H) pre-activations (f32).
+    """
+    B, S, H, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre)                              # (B,S,H)
+    fcum = jnp.cumsum(logf, axis=1)
+    # log decay matrix: D[t,s] = fcum[t] - fcum[s] + i[s], s<=t
+    dmat = fcum[:, :, None, :] - fcum[:, None, :, :] + i_pre[:, None, :, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                      # (B,S,1,H)
+    m = jnp.maximum(m, 0.0)
+    dexp = jnp.exp(dmat - m)                                      # (B,S,S,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,S,H)
+    y = jnp.einsum("btsh,bshd->bthd", w, v.astype(jnp.float32))
+    return (y / norm[..., None]).astype(q.dtype)
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_chunked(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array,
+                  chunk: int = MLSTM_CHUNK, init_state=None,
+                  return_state: bool = False):
+    """Chunkwise-recurrent stabilized mLSTM (linear in S).
+
+    Carries (C, n, m) matrix-memory state across chunks of length Q; intra-
+    chunk uses the quadratic form on (Q, Q) tiles only.  Matches
+    mlstm_parallel_ref to numerical precision.
+    """
+    B, S, H, hd = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    r5 = lambda a: a.reshape(B, nc, Q, H, hd).astype(jnp.float32)
+    r4 = lambda a: a.reshape(B, nc, Q, H).astype(jnp.float32)
+    qc, kc, vc = r5(q), r5(k), r5(v)
+    ic, fc = r4(i_pre), r4(f_pre)
+    logf = jax.nn.log_sigmoid(fc)
+    a = jnp.cumsum(logf, axis=2)                       # in-chunk fcum  (B,nc,Q,H)
+    # For s in chunk: exponent of source s contribution at target t is
+    #   fcum_t - fcum_s + i_s = a_t - a_s + i_s = a_t + b_s,  b_s := i_s - a_s.
+    b = ic - a
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(carry, inp):
+        C, n, m = carry                                 # (B,H,hd,hd),(B,H,hd),(B,H)
+        qb, kb, vb, ab, bb = inp                        # (B,Q,H,hd)... (B,Q,H)
+        # intra-chunk log weights: ab_t + bb_s  (s <= t)
+        dmat = ab[:, :, None, :] + bb[:, None, :, :]    # (B,Q,Q,H)
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)                 # (B,Q,H)
+        m_inter = ab + m[:, None, :]                    # carry stabilizer
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), 0.0)
+        dexp = jnp.exp(dmat - m_t[:, :, None, :])
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * (hd ** -0.5)
+        w = scores * dexp
+        y_intra = jnp.einsum("btsh,bshd->bthd", w, vb)
+        inter_scale = jnp.exp(ab + m[:, None, :] - m_t)  # (B,Q,H)
+        y_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * inter_scale[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qb, n) * inter_scale
+        y = y_intra + y_inter
+        den = jnp.sum(w, axis=2) + n_inter               # q·n, (B,Q,H)
+        nrm = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        y = y / nrm[..., None]
+        # ---- state update for next chunk
+        ab_e = ab[:, -1:, :]                            # L_end (B,1,H)
+        state_exp = ab_e + bb                           # (B,Q,H): L_end + b_s
+        m_state = jnp.max(state_exp, axis=1)            # (B,H)
+        m_new = jnp.maximum(m + ab_e[:, 0], m_state)
+        decay = jnp.exp(m + ab_e[:, 0] - m_new)
+        src = jnp.exp(state_exp - m_new[:, None, :])    # (B,Q,H)
+        kw = kb * (hd ** -0.5) * src[..., None]
+        C_new = C * decay[..., None, None] + jnp.einsum("bshd,bshe->bhde", kw, vb)
+        n_new = n * decay[..., None] + jnp.sum(kw, axis=1)
+        return (C_new, n_new, m_new), y
+
+    if init_state is None:
+        init_state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                      jnp.zeros((B, H, hd), jnp.float32),
+                      jnp.full((B, H), -jnp.inf, jnp.float32))
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), a.transpose(1, 0, 2, 3),
+          b.transpose(1, 0, 2, 3))
+    final, ys = lax.scan(body, init_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    y = y.astype(q.dtype)
+    return (y, final) if return_state else y
+
+
+def mlstm_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    xc: XLSTMConfig = cfg.xlstm
+    B, S, D = x.shape
+    d_in = int(xc.proj_factor * D)
+    H = cfg.n_heads
+    hd = d_in // H
+
+    up = x @ params["w_up"]
+    xb, z = up[..., :d_in], up[..., d_in:]
+    cw = params["conv_w"].astype(jnp.float32)
+    Wc = cw.shape[0]
+    if cache is None:
+        pad = jnp.pad(xb.astype(jnp.float32), ((0, 0), (Wc - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        pad = jnp.concatenate([cache["conv"], xb.astype(jnp.float32)], axis=1)
+        new_conv = pad[:, -(Wc - 1):]
+    xc_ = jax.nn.silu(sum(pad[:, i:i + S] * cw[i] for i in range(Wc))).astype(x.dtype)
+
+    # few heads (xlstm: 4) -> TP lands on the per-head channel dim; the
+    # 'none' option keeps the recurrent chunk math replicated across TP
+    # (§Perf hillclimb C: the sharded (hd,hd) state outer products emit a
+    # collective per chunk per layer otherwise).
+    ml_tp = "model" if ctx.opt("mlstm_shard", "hd") == "hd" else None
+    q = ctx.constrain((xc_ @ params["wq"]).reshape(B, S, H, hd),
+                      "batch", None, None, ml_tp)
+    k = ctx.constrain((xc_ @ params["wk"]).reshape(B, S, H, hd),
+                      "batch", None, None, ml_tp)
+    v = ctx.constrain((xb @ params["wv"]).reshape(B, S, H, hd),
+                      "batch", None, None, ml_tp)
+    i_pre = (xc_ @ params["w_i"]).astype(jnp.float32)
+    f_pre = (xc_ @ params["w_f"]).astype(jnp.float32) + params["f_bias"]
+
+    if cache is None or S > 1:
+        if cache is None:
+            y = mlstm_chunked(q, k, v, i_pre, f_pre,
+                              chunk=min(xc.chunk, S))
+            new_cache = None
+        else:
+            # prefill: pad to a chunk multiple with no-op steps
+            # (i -> -inf: zero contribution; f -> +inf: no decay)
+            Q = min(xc.chunk, max(S, 1))
+            pad = (-S) % Q
+            pd4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            pd3 = ((0, 0), (0, pad), (0, 0))
+            qp = jnp.pad(q, pd4)
+            kp = jnp.pad(k, pd4)
+            vp = jnp.pad(v, pd4)
+            ip = jnp.pad(i_pre, pd3, constant_values=-1e9)
+            fp = jnp.pad(f_pre, pd3, constant_values=1e9)
+            init = (cache["C"], cache["n"],
+                    jnp.where(jnp.isfinite(cache["m"]), cache["m"], -jnp.inf))
+            y, (Cf, nf, mf) = mlstm_chunked(qp, kp, vp, ip, fp, chunk=Q,
+                                            init_state=init, return_state=True)
+            y = y[:, :S]
+            new_cache = {"C": Cf, "n": nf, "m": mf, "conv": new_conv}
+    else:
+        # recurrent step with max-stabilizer state m
+        C, n, mstab = cache["C"], cache["n"], cache["m"]          # f32
+        logf = jax.nn.log_sigmoid(f_pre[:, 0])                    # (B,H)
+        i0 = i_pre[:, 0]
+        m_new = jnp.maximum(logf + mstab, i0)
+        fa = jnp.exp(logf + mstab - m_new)
+        ia = jnp.exp(i0 - m_new)
+        k0 = k[:, 0].astype(jnp.float32) * (hd ** -0.5)
+        v0 = v[:, 0].astype(jnp.float32)
+        C = C * fa[..., None, None] + ia[..., None, None] * (
+            k0[..., :, None] * v0[..., None, :])                  # (B,H,hd,hd)
+        n = n * fa[..., None] + ia[..., None] * k0
+        q0 = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", q0, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q0, n)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None].astype(x.dtype)       # (B,1,H,hd)
+        new_cache = {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm_apply(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return y @ params["w_down"], new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d_in = int(xc.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    hd = d_in // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        # -inf: empty-state stabilizer (no mass recorded yet)
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, xc.conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    # input projections for 4 gates + block-diagonal (head-wise) recurrence
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, dt),
+        "r": (jax.random.normal(ks[1], (h, 4, d // h, d // h), jnp.float32)
+              * (1.0 / math.sqrt(d // h))).astype(dt),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "norm": init_rmsnorm(d, dt),
+        "w_down": dense_init(ks[2], 2 * d, d, dt),
+        "w_up": dense_init(jax.random.split(key, 4)[3], d, 2 * d, dt),
+    }
+
+
+def _slstm_cell(params, h_hd, gates_x, state):
+    """One sLSTM step.  gates_x: (B, 4D) PRE-PROJECTED input gates — the
+    input matmul is hoisted out of the sequential scan (one big sharded
+    matmul for all timesteps instead of 4096 tiny ones, each of which emits
+    TP collectives; §Perf hillclimb C).  state: dict of (B, D) f32."""
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+    B = gates_x.shape[0]
+    D = gates_x.shape[1] // 4
+    nh, hd = h_hd
+    hp = hprev.reshape(B, nh, hd)
+    rec = jnp.einsum("bhd,hgde->bghe", hp.astype(params["r"].dtype),
+                     params["r"]).astype(jnp.float32).reshape(B, 4 * D)
+    g = gates_x.astype(jnp.float32) + rec
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    fi = fi + params["f_bias"]
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, ii)
+    ia = jnp.exp(ii - m_new)
+    fa = jnp.exp(logf + m - m_new)
+    c_new = fa * c + ia * z
+    n_new = fa * n + ia
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params: dict, cfg: ModelConfig, x: Array, *,
+                cache: Optional[dict] = None) -> Tuple[Array, Optional[dict]]:
+    B, S, D = x.shape
+    nh = cfg.n_heads
+    hd = D // nh
+    if cache is None:
+        state = {k: jnp.zeros((B, D), jnp.float32) for k in ("c", "n", "h", "m")}
+    else:
+        state = cache
+
+    # hoisted input projections (one sharded matmul instead of one per
+    # timestep).  NOTE §Perf hillclimb C: forcing these replicated over TP
+    # was tried and REFUTED (+60% memory term); the remaining per-step
+    # collectives need a VMEM-resident Pallas scan (see EXPERIMENTS.md).
+    gx_all = x @ params["w_x"]
+
+    def step(st, gx_t):
+        st2 = _slstm_cell(params, (nh, hd), gx_t, st)
+        return st2, st2["h"]
+
+    if S == 1 and cache is not None:
+        state = _slstm_cell(params, (nh, hd), gx_all[:, 0], state)
+        hs = state["h"][:, None]
+        new_cache = state
+    else:
+        state, hs = lax.scan(step, state, gx_all.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+        new_cache = state if cache is not None else None
+
+    y = rmsnorm_apply(params["norm"], hs.astype(x.dtype), cfg.norm_eps)
+    up = y @ params["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jnp.concatenate([jax.nn.gelu(a) * b, y], axis=-1) @ params["w_down"]
+    return y, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    return {k: jnp.zeros((batch, cfg.d_model), jnp.float32)
+            for k in ("c", "n", "h", "m")}

@@ -1,0 +1,665 @@
+"""Generic decoder-only transformer covering all assigned architectures.
+
+Layer stacks are factored into ``prefix + period × n_repeats + suffix`` so
+that pjit lowers a single scanned block body per periodic family — this keeps
+the HLO compact enough to dry-run 104B-parameter configs on one CPU core.
+
+Supported block kinds (see configs/base.py):
+  attn_ffn, attn_moe, parallel (cohere), mamba2, mlstm, slstm
+plus an optional *shared-weight* attention block injected every
+``shared_attn_every`` layers (zamba2, arXiv:2411.15242).
+
+LazyDiT gates (core/lazy.py) attach before each attention / ffn / block
+module; in autoregressive decode the "previous step" is the previous decode
+step (our beyond-paper transfer of the paper's diffusion-step caching).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.models import layers as L
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Layer specs and stack factorization
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str
+    window: int                 # 0 = global attention
+    shared_attn_before: bool    # zamba2: run the shared attn block first
+
+
+def build_layer_specs(cfg: ModelConfig, *, window_override: Optional[int] = None
+                      ) -> Tuple[LayerSpec, ...]:
+    kinds = cfg.layer_kinds()
+    windows = cfg.layer_windows()
+    out = []
+    for i in range(cfg.n_layers):
+        w = windows[i]
+        if window_override is not None and (w == 0 or w > window_override):
+            w = window_override
+        shared = bool(cfg.shared_attn_every) and (i % cfg.shared_attn_every == 0)
+        out.append(LayerSpec(kinds[i], w, shared))
+    return tuple(out)
+
+
+def factor_stack(specs: Sequence[LayerSpec]
+                 ) -> Tuple[Tuple[LayerSpec, ...], Tuple[LayerSpec, ...], int,
+                            Tuple[LayerSpec, ...]]:
+    """(prefix, period, n_repeats, suffix) minimizing unrolled HLO size."""
+    Lz = len(specs)
+    best_cost, best = Lz + 1, (tuple(specs), (), 0, ())
+    for p in range(1, Lz + 1):
+        for k in range(0, min(p, max(Lz - p, 0)) + 1):
+            n = (Lz - k) // p
+            if n < 1:
+                continue
+            body = specs[k:k + n * p]
+            if any(body[i] != body[i - p] for i in range(p, len(body))):
+                continue
+            suffix = specs[k + n * p:]
+            cost = k + p + len(suffix)
+            if cost < best_cost or (cost == best_cost and n > best[2]):
+                best_cost = cost
+                best = (tuple(specs[:k]), tuple(specs[k:k + p]), n, tuple(suffix))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _attn_is_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla is not None
+
+
+def init_block(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    lz = cfg.lazy
+    if spec.kind in ("attn_ffn", "attn_moe", "parallel"):
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["attn"] = (L.init_mla(ks[0], cfg) if _attn_is_mla(cfg)
+                     else L.init_attention(ks[0], cfg))
+        if spec.kind != "parallel":
+            p["norm2"] = L.init_rmsnorm(cfg.d_model, dt)
+        if spec.kind == "attn_moe":
+            p["moe"] = L.init_moe(ks[1], cfg)
+        else:
+            p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt)
+        if lz.enabled and lz.gate_attn:
+            p["g_attn"] = lazy_lib.init_lazy_gate(ks[2], cfg.d_model)
+        if lz.enabled and lz.gate_ffn:
+            p["g_ffn"] = lazy_lib.init_lazy_gate(ks[3], cfg.d_model)
+    elif spec.kind == "mamba2":
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["mamba"] = L.init_mamba2(ks[0], cfg)
+        if lz.enabled and lz.gate_ffn:
+            p["g_block"] = lazy_lib.init_lazy_gate(ks[2], cfg.d_model)
+    elif spec.kind == "mlstm":
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xblock"] = L.init_mlstm(ks[0], cfg)
+        if lz.enabled and lz.gate_ffn:
+            p["g_block"] = lazy_lib.init_lazy_gate(ks[2], cfg.d_model)
+    elif spec.kind == "slstm":
+        p["norm1"] = L.init_rmsnorm(cfg.d_model, dt)
+        p["xblock"] = L.init_slstm(ks[0], cfg)
+        if lz.enabled and lz.gate_ffn:
+            p["g_block"] = lazy_lib.init_lazy_gate(ks[2], cfg.d_model)
+    else:
+        raise ValueError(spec.kind)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int) -> dict:
+    c: Dict[str, Any] = {}
+    if spec.kind in ("attn_ffn", "attn_moe", "parallel"):
+        c["attn"] = (L.init_mla_cache(cfg, batch, max_len, spec.window)
+                     if _attn_is_mla(cfg)
+                     else L.init_attention_cache(cfg, batch, max_len, spec.window))
+    elif spec.kind == "mamba2":
+        c["ssm"] = L.init_mamba2_cache(cfg, batch)
+    elif spec.kind == "mlstm":
+        c["ssm"] = L.init_mlstm_cache(cfg, batch)
+    elif spec.kind == "slstm":
+        c["ssm"] = L.init_slstm_cache(cfg, batch)
+    if spec.shared_attn_before and cfg.shared_attn_every:
+        # the shared block shares *weights* across invocations, but each
+        # invocation sees different activations -> its own KV cache.
+        c["shared_attn"] = L.init_attention_cache(cfg, batch, max_len,
+                                                  spec.window)
+    return c
+
+
+
+def init_block_lazy_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                          seq: int) -> dict:
+    """Previous-step module outputs (the LazyDiT cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    z = jnp.zeros((batch, seq, cfg.d_model), dt)
+    if spec.kind in ("attn_ffn", "attn_moe", "parallel"):
+        return {"attn": z, "ffn": z}
+    return {"block": z}
+
+
+_ZERO_SCORES = ("attn", "ffn", "block")
+
+
+def _empty_scores(batch: int) -> Dict[str, Array]:
+    return {k: jnp.zeros((batch,), jnp.float32) for k in _ZERO_SCORES}
+
+
+def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
+                cos: Array, sin: Array,
+                cache: Optional[dict] = None,
+                decode_index: Optional[Array] = None,
+                shared_attn: Optional[dict] = None,
+                lazy_cache: Optional[dict] = None,
+                lazy_mode: str = "off",
+                plan: Tuple[bool, bool] = (False, False),
+                prime: bool = False,
+                ) -> Tuple[Array, dict, dict, Dict[str, Array], Array]:
+    """One decoder block.  Returns
+    (x, new_cache, new_lazy_cache, scores, aux_loss)."""
+    B = x.shape[0]
+    aux = jnp.zeros((), jnp.float32)
+    scores = _empty_scores(B)
+    new_cache: Dict[str, Any] = {}
+    new_lazy: Dict[str, Any] = dict(lazy_cache) if lazy_cache else {}
+    lz = cfg.lazy
+
+    if spec.shared_attn_before and shared_attn is not None:
+        h = L.rmsnorm_apply(shared_attn["norm"], x, cfg.norm_eps)
+        y, nsc = L.attention_apply(
+            shared_attn["attn"], cfg, h, cos=cos, sin=sin, window=spec.window,
+            cache=cache.get("shared_attn") if cache else None,
+            decode_index=decode_index)
+        if nsc is not None:
+            new_cache["shared_attn"] = nsc
+        x = x + y
+
+    def run_gated(name: str, gate_key: str, z: Array, fn):
+        nonlocal aux
+        gate = params.get(gate_key)
+        cache_y = (new_lazy.get(name)
+                   if (lazy_cache is not None and not prime) else None)
+        out = lazy_lib.lazy_execute(
+            fn, z, gate=gate, cache_y=cache_y, mode=lazy_mode,
+            threshold=lz.threshold,
+            plan_skip=(plan[0] if name == "attn" else plan[1]) and not prime)
+        if lazy_cache is not None:
+            new_lazy[name] = out.new_cache
+        if out.score is not None:
+            scores[name if name in scores else "block"] = out.score
+        return out.y
+
+    plan_skip_attn = (lazy_mode == "plan" and plan[0]
+                      and lazy_cache is not None)
+
+    if spec.kind in ("attn_ffn", "attn_moe"):
+        z1 = L.rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+
+        def attn_fn(z):
+            nonlocal new_cache
+            if _attn_is_mla(cfg):
+                y, nc = L.mla_apply(params["attn"], cfg, z, cos=cos, sin=sin,
+                                    window=spec.window, cache=cache.get("attn") if cache else None,
+                                    decode_index=decode_index)
+            else:
+                y, nc = L.attention_apply(params["attn"], cfg, z, cos=cos, sin=sin,
+                                          window=spec.window,
+                                          cache=cache.get("attn") if cache else None,
+                                          decode_index=decode_index)
+            if nc is not None:
+                new_cache["attn"] = nc
+            return y
+
+        if plan_skip_attn and cache is not None:
+            # lazy plan skips the module but the KV write must still land
+            # (AR-decode correctness; see layers.attention_kv_write).
+            kv_write = L.mla_kv_write if _attn_is_mla(cfg) else L.attention_kv_write
+            new_cache["attn"] = kv_write(params["attn"], cfg, z1, cos=cos,
+                                         sin=sin, cache=cache["attn"],
+                                         decode_index=decode_index)
+            x = x + new_lazy["attn"]
+        else:
+            x = x + run_gated("attn", "g_attn", z1, attn_fn)
+        z2 = L.rmsnorm_apply(params["norm2"], x, cfg.norm_eps)
+        if spec.kind == "attn_moe":
+            def ffn_fn(z):
+                nonlocal aux
+                y, a = L.moe_apply(params["moe"], cfg, z, cfg.act)
+                aux = aux + a
+                return y
+        else:
+            def ffn_fn(z):
+                return L.mlp_apply(params["ffn"], z, cfg.act)
+        x = x + run_gated("ffn", "g_ffn", z2, ffn_fn)
+
+    elif spec.kind == "parallel":
+        # cohere/command-r: attn and ffn in parallel off one norm
+        z1 = L.rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+
+        def attn_fn(z):
+            nonlocal new_cache
+            y, nc = L.attention_apply(params["attn"], cfg, z, cos=cos, sin=sin,
+                                      window=spec.window,
+                                      cache=cache.get("attn") if cache else None,
+                                      decode_index=decode_index)
+            if nc is not None:
+                new_cache["attn"] = nc
+            return y
+
+        def ffn_fn(z):
+            return L.mlp_apply(params["ffn"], z, cfg.act)
+
+        x = x + run_gated("attn", "g_attn", z1, attn_fn) \
+              + run_gated("ffn", "g_ffn", z1, ffn_fn)
+
+    elif spec.kind in ("mamba2", "mlstm", "slstm"):
+        z1 = L.rmsnorm_apply(params["norm1"], x, cfg.norm_eps)
+        apply = {"mamba2": L.mamba2_apply, "mlstm": L.mlstm_apply,
+                 "slstm": L.slstm_apply}[spec.kind]
+        pkey = "mamba" if spec.kind == "mamba2" else "xblock"
+
+        def blk_fn(z):
+            nonlocal new_cache
+            y, nc = apply(params[pkey], cfg, z,
+                          cache=cache.get("ssm") if cache else None)
+            if nc is not None:
+                new_cache["ssm"] = nc
+            return y
+
+        # NOTE (DESIGN.md §Arch-applicability): the lazy skip gates the block
+        # *output*; the recurrent state must advance even on skip, so in
+        # masked/soft modes the block still runs (state side effect) and only
+        # the output mixes.  In plan mode a skipped step freezes the state —
+        # recorded as an approximation in EXPERIMENTS.md.
+        x = x + run_gated("block", "g_block", z1, blk_fn)
+    else:
+        raise ValueError(spec.kind)
+
+    # passthrough caches for modules that did not update (plan-skip case)
+    if cache is not None:
+        for k, v in cache.items():
+            new_cache.setdefault(k, v)
+    return x, new_cache, new_lazy, scores, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig, *, window_override: Optional[int] = None) -> dict:
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dt)
+    if cfg.frontend_dim:
+        params["frontend_proj"] = L.dense_init(keys[2], cfg.frontend_dim,
+                                               cfg.d_model, dt)
+    if cfg.shared_attn_every:
+        params["shared_attn"] = {
+            "norm": L.init_rmsnorm(cfg.d_model, dt),
+            "attn": L.init_attention(keys[3], cfg),
+        }
+    pkeys = jax.random.split(keys[4], max(len(prefix), 1))
+    params["prefix"] = tuple(init_block(pkeys[i], cfg, s)
+                             for i, s in enumerate(prefix))
+    if nrep:
+        period_params = []
+        for j, s in enumerate(period):
+            rkeys = jax.random.split(jax.random.fold_in(keys[5], j), nrep)
+            period_params.append(jax.vmap(lambda k: init_block(k, cfg, s))(rkeys))
+        params["period"] = tuple(period_params)
+    else:
+        params["period"] = ()
+    skeys = jax.random.split(keys[6], max(len(suffix), 1))
+    params["suffix"] = tuple(init_block(skeys[i], cfg, s)
+                             for i, s in enumerate(suffix))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    return cfg.mla.qk_rope_head_dim if cfg.mla else cfg.resolved_head_dim
+
+
+def _rope_tables(cfg: ModelConfig, positions: Array) -> Tuple[Array, Array]:
+    return L.rope_cos_sin(positions, _rope_dim(cfg), cfg.rope_theta,
+                          cfg.mrope_sections if cfg.rope_type == "mrope" else ())
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, tokens: Optional[Array],
+                 embeds: Optional[Array]) -> Array:
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+        if tokens is not None:
+            x = jnp.concatenate([x, params["embed"][tokens]], axis=1)
+        return x
+    return params["embed"][tokens]
+
+
+def forward(params: dict, cfg: ModelConfig, *,
+            tokens: Optional[Array] = None,
+            embeds: Optional[Array] = None,
+            positions: Optional[Array] = None,
+            window_override: Optional[int] = None,
+            remat: bool = False,
+            return_hidden: bool = False,
+            carry_sharding=None) -> Tuple[Array, Array]:
+    """Full-sequence forward.  Returns (logits | final hidden, aux_loss).
+
+    ``carry_sharding``: optional PartitionSpec applied to the layer-boundary
+    activations (Megatron-style sequence parallelism: shard S over the
+    ``model`` axis between blocks so remat storage is 1/TP of the naive
+    layout; see dist/sharding.py)."""
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    x = embed_inputs(params, cfg, tokens, embeds)
+    B, S, D = x.shape
+
+    def constrain(h):
+        if carry_sharding is not None:
+            return jax.lax.with_sharding_constraint(h, carry_sharding)
+        return h
+    if positions is None:
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(jnp.arange(S)[None, None],
+                                         (len(cfg.mrope_sections), B, S))
+        else:
+            positions = jnp.arange(S)
+    cos, sin = _rope_tables(cfg, positions)
+    aux_total = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+
+    def run(p, spec, x):
+        return apply_block(p, cfg, spec, x, cos=cos, sin=sin,
+                           shared_attn=shared)
+
+    for p, spec in zip(params["prefix"], prefix):
+        x, _, _, _, aux = run(p, spec, x)
+        aux_total += aux
+
+    if nrep:
+        def body(carry, layer_params):
+            x, aux_acc = carry
+            for j, spec in enumerate(period):
+                x, _, _, _, a = run(layer_params[j], spec, x)
+                aux_acc = aux_acc + a
+            return (constrain(x), aux_acc), None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = lax.scan(body_fn, (constrain(x), aux_total),
+                                     params["period"])
+
+    for p, spec in zip(params["suffix"], suffix):
+        x, _, _, _, aux = run(p, spec, x)
+        aux_total += aux
+
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                      window_override: Optional[int] = None) -> dict:
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    cache: Dict[str, Any] = {
+        "prefix": tuple(init_block_cache(cfg, s, batch, max_len) for s in prefix),
+        "suffix": tuple(init_block_cache(cfg, s, batch, max_len) for s in suffix),
+    }
+    if nrep:
+        cache["period"] = tuple(
+            jax.tree.map(lambda a: jnp.broadcast_to(a, (nrep,) + a.shape).copy()
+                         if hasattr(a, "shape") else a,
+                         init_block_cache(cfg, s, batch, max_len))
+            for s in period)
+    else:
+        cache["period"] = ()
+    return cache
+
+
+def init_lazy_decode_cache(cfg: ModelConfig, batch: int, *,
+                           window_override: Optional[int] = None) -> dict:
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    lc: Dict[str, Any] = {
+        "prefix": tuple(init_block_lazy_cache(cfg, s, batch, 1) for s in prefix),
+        "suffix": tuple(init_block_lazy_cache(cfg, s, batch, 1) for s in suffix),
+    }
+    if nrep:
+        lc["period"] = tuple(
+            jax.tree.map(lambda a: jnp.broadcast_to(a, (nrep,) + a.shape).copy(),
+                         init_block_lazy_cache(cfg, s, batch, 1))
+            for s in period)
+    else:
+        lc["period"] = ()
+    return lc
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
+                cache: dict, *,
+                embeds: Optional[Array] = None,
+                lazy_cache: Optional[dict] = None,
+                lazy_mode: str = "off",
+                lazy_first_step: bool = False,
+                window_override: Optional[int] = None,
+                last_logit_only: bool = False,
+                ) -> Tuple[Array, dict, Optional[dict], Dict[str, Array]]:
+    """One serving step.
+
+    Decode: ``tokens`` (B, 1) at absolute position ``index`` -> logits (B,1,V).
+    Prefill: ``tokens`` (B, S>1) with ``index == 0`` against a *fresh* cache —
+    fills every layer cache in one pass and returns (B, S, V) logits.
+
+    Lazy modes use the previous *decode step*'s module outputs as the cache
+    (beyond-paper transfer; DESIGN.md §4)."""
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    x = embed_inputs(params, cfg, tokens, embeds)
+    B, S = x.shape[0], x.shape[1]
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to((index + jnp.arange(S))[None, None, :],
+                               (len(cfg.mrope_sections), B, S))
+    else:
+        pos = index + jnp.arange(S)
+    cos, sin = _rope_tables(cfg, pos)
+    shared = params.get("shared_attn")
+    new_cache: Dict[str, Any] = {"prefix": [], "suffix": [], "period": ()}
+    new_lazy: Dict[str, Any] = {"prefix": [], "suffix": [], "period": ()} \
+        if lazy_cache is not None else None
+    all_scores = []
+
+    def run(p, spec, x, c, lzc):
+        return apply_block(
+            p, cfg, spec, x, cos=cos, sin=sin, cache=c, decode_index=index,
+            shared_attn=shared, lazy_cache=lzc, lazy_mode=lazy_mode,
+            prime=lazy_first_step)
+
+    for i, (p, spec) in enumerate(zip(params["prefix"], prefix)):
+        lzc = lazy_cache["prefix"][i] if lazy_cache else None
+        x, nc, nlz, sc, _ = run(p, spec, x, cache["prefix"][i], lzc)
+        new_cache["prefix"].append(nc)
+        if new_lazy is not None:
+            new_lazy["prefix"].append(nlz)
+        all_scores.append(sc)
+
+    if nrep:
+        def body(x, xs):
+            layer_params, layer_cache, layer_lazy = xs
+            ncs, nlzs, scs = [], [], []
+            for j, spec in enumerate(period):
+                lzc = layer_lazy[j] if layer_lazy is not None else None
+                x, nc, nlz, sc, _ = run(layer_params[j], spec, x,
+                                        layer_cache[j], lzc)
+                ncs.append(nc)
+                nlzs.append(nlz)
+                scs.append(sc)
+            return x, (tuple(ncs), tuple(nlzs), tuple(scs))
+
+        lazy_xs = (lazy_cache["period"] if lazy_cache is not None
+                   else tuple(None for _ in period))
+        x, (pcache, plazy, pscores) = lax.scan(
+            body, x, (params["period"], cache["period"], lazy_xs))
+        new_cache["period"] = pcache
+        if new_lazy is not None:
+            new_lazy["period"] = plazy
+        for j in range(len(period)):
+            # pscores[j][k] has a leading (nrep,) dim from the scan
+            all_scores.append({k: jnp.mean(v, axis=0)
+                               for k, v in pscores[j].items()})
+
+    for i, (p, spec) in enumerate(zip(params["suffix"], suffix)):
+        lzc = lazy_cache["suffix"][i] if lazy_cache else None
+        x, nc, nlz, sc, _ = run(p, spec, x, cache["suffix"][i], lzc)
+        new_cache["suffix"].append(nc)
+        if new_lazy is not None:
+            new_lazy["suffix"].append(nlz)
+        all_scores.append(sc)
+
+    new_cache["prefix"] = tuple(new_cache["prefix"])
+    new_cache["suffix"] = tuple(new_cache["suffix"])
+    if new_lazy is not None:
+        new_lazy["prefix"] = tuple(new_lazy["prefix"])
+        new_lazy["suffix"] = tuple(new_lazy["suffix"])
+
+    if last_logit_only:
+        x = x[:, -1:]
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    scores = {}
+    if all_scores:
+        scores = {k: jnp.stack([s[k] for s in all_scores]).mean(0)
+                  for k in all_scores[0]}
+    return logits, new_cache, new_lazy, scores
+
+
+def decode_step_unrolled(params: dict, cfg: ModelConfig, tokens: Array,
+                         index: Array, cache: dict, lazy_cache: dict, *,
+                         plan_step,
+                         window_override: Optional[int] = None,
+                         ) -> Tuple[Array, dict, dict]:
+    """Plan-mode serving step: layers unrolled so per-(layer, module) static
+    booleans remove skipped modules from the compiled HLO (LazyDiT's compute
+    saving, visible in cost analysis — DESIGN.md §3 'plan' mode).
+
+    plan_step: (n_layers, 2) bool array for THIS decode step (attn, ffn).
+    Skipped attention still writes KV (layers.attention_kv_write)."""
+    specs = build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = factor_stack(specs)
+    x = params["embed"][tokens]
+    B, S = x.shape[0], x.shape[1]
+    pos = index + jnp.arange(S)
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to(pos[None, None, :],
+                               (len(cfg.mrope_sections), B, S))
+    cos, sin = _rope_tables(cfg, pos)
+    shared = params.get("shared_attn")
+
+    def at(tree, i):
+        return jax.tree.map(lambda a: a[i], tree)
+
+    # enumerate (layer_params, spec, cache, lazy, writeback_fn)
+    new_cache = jax.tree.map(lambda a: a, cache)
+    new_lazy = jax.tree.map(lambda a: a, lazy_cache)
+    li = 0
+    plan_step = np.asarray(plan_step)
+
+    def run(p, spec, x, c, lz, plan):
+        return apply_block(p, cfg, spec, x, cos=cos, sin=sin, cache=c,
+                           decode_index=index, shared_attn=shared,
+                           lazy_cache=lz, lazy_mode="plan",
+                           plan=(bool(plan[0]), bool(plan[1])))
+
+    for i, spec in enumerate(prefix):
+        x, nc, nlz, _, _ = run(params["prefix"][i], spec, x,
+                               cache["prefix"][i], lazy_cache["prefix"][i],
+                               plan_step[li])
+        new_cache["prefix"] = tuple(nc if j == i else new_cache["prefix"][j]
+                                    for j in range(len(prefix)))
+        new_lazy["prefix"] = tuple(nlz if j == i else new_lazy["prefix"][j]
+                                   for j in range(len(prefix)))
+        li += 1
+
+    if nrep:
+        pc = [list() for _ in period]
+        plz = [list() for _ in period]
+        for r in range(nrep):
+            for j, spec in enumerate(period):
+                x, nc, nlz, _, _ = run(at(params["period"][j], r), spec, x,
+                                       at(cache["period"][j], r),
+                                       at(lazy_cache["period"][j], r),
+                                       plan_step[li])
+                pc[j].append(nc)
+                plz[j].append(nlz)
+                li += 1
+        new_cache["period"] = tuple(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *pc[j])
+            for j in range(len(period)))
+        new_lazy["period"] = tuple(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *plz[j])
+            for j in range(len(period)))
+
+    for i, spec in enumerate(suffix):
+        x, nc, nlz, _, _ = run(params["suffix"][i], spec, x,
+                               cache["suffix"][i], lazy_cache["suffix"][i],
+                               plan_step[li])
+        new_cache["suffix"] = tuple(nc if j == i else new_cache["suffix"][j]
+                                    for j in range(len(suffix)))
+        new_lazy["suffix"] = tuple(nlz if j == i else new_lazy["suffix"][j]
+                                   for j in range(len(suffix)))
+        li += 1
+
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    if cfg.final_logit_softcap:
+        logits = jnp.tanh(logits / cfg.final_logit_softcap) * cfg.final_logit_softcap
+    return logits, new_cache, new_lazy
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))

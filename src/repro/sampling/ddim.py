@@ -1,0 +1,133 @@
+"""DDIM sampler (Song et al. 2020) with classifier-free guidance and
+LazyDiT cache threading across denoising steps."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import dit as dit_lib
+
+Array = jax.Array
+
+
+class DiffusionSchedule(NamedTuple):
+    betas: Array                 # (T,)
+    alphas_cumprod: Array        # (T,)
+
+    @property
+    def n_train_steps(self) -> int:
+        return self.betas.shape[0]
+
+
+def linear_schedule(n_steps: int = 1000, beta_start: float = 1e-4,
+                    beta_end: float = 0.02) -> DiffusionSchedule:
+    betas = jnp.linspace(beta_start, beta_end, n_steps, dtype=jnp.float32)
+    return DiffusionSchedule(betas, jnp.cumprod(1.0 - betas))
+
+
+def sampling_timesteps(n_train: int, n_sample: int) -> np.ndarray:
+    """DDIM timestep subset, descending (e.g. 1000 train -> 50 sample)."""
+    step = n_train // n_sample
+    ts = (np.arange(0, n_sample) * step + 1).clip(0, n_train - 1)
+    return ts[::-1].copy()
+
+
+def q_sample(sched: DiffusionSchedule, x0: Array, t: Array, noise: Array) -> Array:
+    """Forward diffusion: z_t = sqrt(a_t) x0 + sqrt(1-a_t) eps."""
+    a = sched.alphas_cumprod[t]
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    return (jnp.sqrt(a).reshape(shape) * x0
+            + jnp.sqrt(1.0 - a).reshape(shape) * noise)
+
+
+def ddim_step(sched: DiffusionSchedule, z_t: Array, eps: Array,
+              t: Array, t_prev: Array) -> Array:
+    """z_{t'} = sqrt(a_{t'}) * (z_t - sqrt(1-a_t) eps)/sqrt(a_t)
+              + sqrt(1-a_{t'}) * eps   (eta = 0)."""
+    a_t = sched.alphas_cumprod[t]
+    a_p = jnp.where(t_prev >= 0, sched.alphas_cumprod[jnp.maximum(t_prev, 0)], 1.0)
+    shape = (-1,) + (1,) * (z_t.ndim - 1)
+    a_t, a_p = a_t.reshape(shape), a_p.reshape(shape)
+    x0 = (z_t - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+
+
+def cfg_eps(eps_cond: Array, eps_uncond: Array, w: float) -> Array:
+    """Paper Eq.: hat_eps = w*eps_cond - (w-1)*eps_uncond."""
+    return w * eps_cond - (w - 1.0) * eps_uncond
+
+
+def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
+                key, labels: Array, n_steps: int, cfg_scale: float = 1.5,
+                lazy_mode: str = "off",
+                plan: Optional[np.ndarray] = None,
+                collect_scores: bool = False,
+                collect_traces: bool = False,
+                ) -> Tuple[Array, Dict]:
+    """Full DDIM sampling loop for the DiT denoiser.
+
+    CFG doubles the batch (cond rows + null-label rows); the lazy cache is
+    per batch row, so cond/uncond streams each keep their own cache —
+    matching the paper's implementation.
+
+    plan: (n_steps, L, 2) static booleans for 'plan' mode.
+    Returns (samples (B,H,W,C), aux) where aux may contain per-step probe
+    scores and/or module output traces (for the similarity benchmarks).
+    """
+    B = labels.shape[0]
+    H = cfg.dit_input_size
+    C = cfg.dit_in_channels
+    z = jax.random.normal(key, (B, H, H, C), jnp.float32)
+    ts = sampling_timesteps(sched.n_train_steps, n_steps)
+
+    use_cfg = cfg_scale != 1.0
+    if use_cfg:
+        y_all = jnp.concatenate([labels, jnp.full_like(labels, cfg.dit_n_classes)])
+    else:
+        y_all = labels
+
+    lazy_cache = None
+    if lazy_mode != "off":
+        lazy_cache = dit_lib.init_dit_lazy_cache(cfg, 2 * B if use_cfg else B)
+
+    @functools.partial(jax.jit, static_argnames=("plan_row", "first"))
+    def model_eval(z, t_scalar, lazy_cache, plan_row, first):
+        zz = jnp.concatenate([z, z]) if use_cfg else z
+        tt = jnp.full((zz.shape[0],), t_scalar, jnp.float32)
+        pr = np.asarray(plan_row) if plan_row is not None else None
+        out, new_lazy, scores = dit_lib.dit_forward(
+            params, cfg, zz, tt, y_all, lazy_cache=lazy_cache,
+            lazy_mode=lazy_mode, plan_row=pr, first_step=first)
+        eps_all, _ = dit_lib.split_eps(out, C)
+        if use_cfg:
+            e_c, e_u = jnp.split(eps_all, 2)
+            eps = cfg_eps(e_c, e_u, cfg_scale)
+        else:
+            eps = eps_all
+        return eps, new_lazy, scores
+
+    score_log, trace_log = [], []
+    for i, t in enumerate(ts):
+        t_prev = ts[i + 1] if i + 1 < len(ts) else -1
+        plan_row = None
+        if lazy_mode == "plan" and i > 0:
+            plan_row = tuple(tuple(bool(b) for b in r) for r in plan[i])
+        eps, lazy_cache, scores = model_eval(z, float(t), lazy_cache, plan_row,
+                                             i == 0)
+        z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev))
+        if collect_scores and scores:
+            score_log.append(jax.tree.map(np.asarray, scores))
+        if collect_traces and lazy_cache is not None:
+            trace_log.append(jax.tree.map(np.asarray, lazy_cache))
+
+    aux = {}
+    if score_log:
+        aux["scores"] = score_log
+    if trace_log:
+        aux["traces"] = trace_log
+    return z, aux

@@ -1,0 +1,100 @@
+"""Batched serving engine: one-shot prefill + jitted decode loop with
+optional LazyDiT-style lazy decode (masked or planned)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+Array = jax.Array
+
+
+class GenerationResult(NamedTuple):
+    tokens: np.ndarray            # (B, prompt + generated)
+    scores: Optional[np.ndarray]  # (steps, n_module_kinds) mean probe scores
+    realized_lazy_ratio: float
+
+
+class Engine:
+    """Static-batch decode engine.
+
+    All sequences in a batch share one position counter (standard static
+    batching; continuous batching is out of scope for the dry-run target).
+    ``lazy_mode``: 'off' | 'masked' (per-sample select, faithful semantics)
+    — 'plan' mode lives in the unrolled benchmark path (benchmarks/bench_compute).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
+                 lazy_mode: str = "off",
+                 window_override: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.lazy_mode = lazy_mode
+        self.window_override = window_override
+
+        @functools.partial(jax.jit, static_argnames=())
+        def _prefill(params, tokens, cache):
+            logits, cache, _, _ = tf.decode_step(
+                params, cfg, tokens, jnp.int32(0), cache,
+                window_override=window_override)
+            return logits, cache
+
+        @functools.partial(jax.jit, static_argnames=("first",))
+        def _decode(params, tok, index, cache, lazy_cache, first=False):
+            logits, cache, lazy_cache, scores = tf.decode_step(
+                params, cfg, tok, index, cache, lazy_cache=lazy_cache,
+                lazy_mode=lazy_mode, lazy_first_step=first,
+                window_override=window_override)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache, lazy_cache, scores
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    def generate(self, prompt: np.ndarray, n_new: int, key=None
+                 ) -> GenerationResult:
+        """prompt: (B, P) int32.  Greedy decoding."""
+        cfg = self.cfg
+        B, P = prompt.shape
+        assert P + n_new <= self.max_len
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cache = tf.init_decode_cache(cfg, B, self.max_len,
+                                     window_override=self.window_override)
+        lazy_cache = None
+        if self.lazy_mode != "off":
+            lazy_cache = tf.init_lazy_decode_cache(
+                cfg, B, window_override=self.window_override)
+
+        prompt_j = jnp.asarray(prompt, jnp.int32)
+        if P > 1:
+            logits, cache = self._prefill(self.params, prompt_j, cache)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            start = P
+        else:
+            nxt = prompt_j[:, 0]
+            start = P if P else 0
+
+        toks = [prompt]
+        score_log = []
+        for i in range(n_new):
+            # the first lazy step primes the cache (runs every module)
+            first = self.lazy_mode != "off" and i == 0
+            nxt, cache, lazy_cache, scores = self._decode(
+                self.params, nxt[:, None], jnp.int32(start + i), cache,
+                lazy_cache, first=first)
+            if scores and not first:
+                score_log.append(np.array([float(jnp.mean(v))
+                                           for v in scores.values()]))
+            toks.append(np.asarray(nxt)[:, None])
+
+        scores_arr = np.stack(score_log) if score_log else None
+        ratio = float((scores_arr > self.cfg.lazy.threshold).mean()) \
+            if scores_arr is not None else 0.0
+        return GenerationResult(np.concatenate(toks, axis=1), scores_arr, ratio)

@@ -1,0 +1,194 @@
+"""Training loops.
+
+Two phases mirror the paper:
+  1. ``diffusion_train_step`` — standard DiT pretraining (full params).
+  2. ``lazy_train_step`` — the paper's 500-step lazy learning: base weights
+     FROZEN, only the probe weights train.  Per batch we sample a sampling-
+     step pair (t_prev -> t), run the frozen model at t_prev to fill the
+     step cache (stop_gradient), then run soft-mode at t with
+     loss = ||eps_theta - eps||^2 + L_lazy  (paper Eq. 5).
+Also ``lm_train_step`` for the assigned LLM architectures.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.models import dit as dit_lib
+from repro.models import transformer as tf_lib
+from repro.sampling import ddim
+from repro.train import optim
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Gate-parameter masking (freeze everything but the lazy probes)
+# ---------------------------------------------------------------------------
+
+GATE_KEYS = ("g_attn", "g_ffn", "g_block")
+
+
+def gate_mask(params) -> dict:
+    """Pytree of bools: True only under lazy-gate subtrees."""
+    def walk(node, in_gate):
+        if isinstance(node, dict):
+            return {k: walk(v, in_gate or k in GATE_KEYS) for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(v, in_gate) for v in node)
+        return in_gate
+    return walk(params, False)
+
+
+# ---------------------------------------------------------------------------
+# DiT diffusion pretraining
+# ---------------------------------------------------------------------------
+
+
+def diffusion_loss(params, cfg: ModelConfig, sched: ddim.DiffusionSchedule,
+                   x0: Array, y: Array, key) -> Array:
+    kt, kn = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.randint(kt, (B,), 0, sched.n_train_steps)
+    noise = jax.random.normal(kn, x0.shape, jnp.float32)
+    z_t = ddim.q_sample(sched, x0, t, noise)
+    out, _, _ = dit_lib.dit_forward(params, cfg, z_t, t.astype(jnp.float32), y)
+    eps, _ = dit_lib.split_eps(out, cfg.dit_in_channels)
+    return jnp.mean((eps.astype(jnp.float32) - noise) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def diffusion_train_step(params, opt_state, cfg: ModelConfig,
+                         sched: ddim.DiffusionSchedule, x0, y, key,
+                         lr: float = 1e-4):
+    loss, grads = jax.value_and_grad(diffusion_loss)(params, cfg, sched, x0, y, key)
+    grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+    params, opt_state = optim.adamw_update(opt_state, grads, params, lr=lr)
+    return params, opt_state, {"loss": loss, "gnorm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Lazy learning (paper §3.3)
+# ---------------------------------------------------------------------------
+
+
+def lazy_learning_loss(params, frozen_params, cfg: ModelConfig,
+                       sched: ddim.DiffusionSchedule, x0: Array, y: Array,
+                       key, n_sample_steps: int) -> Tuple[Array, Dict]:
+    """Soft-mode loss at a sampled sampling-step transition.
+
+    The cache comes from the *frozen* model evaluated at the previous
+    (noisier) sampling step t_prev, exactly the tensor the deployed sampler
+    would have cached."""
+    kt, kn, kn2 = jax.random.split(key, 3)
+    B = x0.shape[0]
+    ts = ddim.sampling_timesteps(sched.n_train_steps, n_sample_steps)  # descending
+    idx = jax.random.randint(kt, (B,), 1, len(ts))          # position in schedule
+    t = jnp.asarray(ts)[idx]
+    t_prev = jnp.asarray(ts)[idx - 1]                       # noisier step
+
+    noise = jax.random.normal(kn, x0.shape, jnp.float32)
+    z_prev = ddim.q_sample(sched, x0, t_prev, noise)
+    # fill cache at t_prev with frozen weights (priming pass, no grad)
+    cache0 = dit_lib.init_dit_lazy_cache(cfg, B)
+    _, cache, _ = dit_lib.dit_forward(
+        frozen_params, cfg, z_prev, t_prev.astype(jnp.float32), y,
+        lazy_cache=cache0, lazy_mode="soft", first_step=True)
+    cache = jax.lax.stop_gradient(cache)
+
+    noise2 = jax.random.normal(kn2, x0.shape, jnp.float32)
+    z_t = ddim.q_sample(sched, x0, t, noise2)
+    out, _, scores = dit_lib.dit_forward(
+        params, cfg, z_t, t.astype(jnp.float32), y,
+        lazy_cache=cache, lazy_mode="soft")
+    eps, _ = dit_lib.split_eps(out, cfg.dit_in_channels)
+    dloss = jnp.mean((eps.astype(jnp.float32) - noise2) ** 2)
+    lloss = lazy_lib.lazy_loss(scores, cfg.lazy.rho_attn, cfg.lazy.rho_ffn)
+    mean_s = {k: jnp.mean(v) for k, v in scores.items()}
+    return dloss + lloss, {"diffusion_loss": dloss, "lazy_loss": lloss,
+                           **{f"s_{k}": v for k, v in mean_s.items()}}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_sample_steps", "lr"))
+def lazy_train_step(params, opt_state, cfg: ModelConfig,
+                    sched: ddim.DiffusionSchedule, x0, y, key,
+                    n_sample_steps: int = 50, lr: float = 1e-4):
+    """Paper recipe: AdamW 1e-4, only probes trainable."""
+    frozen = jax.lax.stop_gradient(params)
+    (loss, aux), grads = jax.value_and_grad(lazy_learning_loss, has_aux=True)(
+        params, frozen, cfg, sched, x0, y, key, n_sample_steps)
+    grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+    params, opt_state = optim.adamw_update(opt_state, grads, params, lr=lr,
+                                           mask=gate_mask(params))
+    aux.update({"loss": loss, "gnorm": gnorm})
+    return params, opt_state, aux
+
+
+# ---------------------------------------------------------------------------
+# LM training (assigned architectures)
+# ---------------------------------------------------------------------------
+
+
+CE_CHUNK = 512
+
+
+def chunked_ce(x: Array, head: Array, tgt: Array, softcap: float = 0.0,
+               chunk: int = CE_CHUNK) -> Array:
+    """Cross-entropy with the (B, S, V) logits never fully materialized:
+    scans over sequence chunks (production necessity at vocab 256k)."""
+    B, S, D = x.shape
+    if S <= chunk:
+        logits = x @ head
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, tgt[..., None], axis=-1))
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+    nc = (S + pad) // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tc = tgt.reshape(B, nc, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(nc * chunk) < S).reshape(nc, chunk)
+
+    def body(acc, inp):
+        xb, tb, vb = inp
+        logits = xb @ head
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(nll * vb[None, :]), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc, valid))
+    return total / (B * S)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens: Array,
+            embeds: Optional[Array] = None, remat: bool = False,
+            carry_sharding=None) -> Array:
+    """Next-token CE + MoE aux.  tokens: (B, S+1)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x, aux = tf_lib.forward(params, cfg, tokens=inp, embeds=embeds,
+                            remat=remat, return_hidden=True,
+                            carry_sharding=carry_sharding)
+    if embeds is not None:
+        x = x[:, embeds.shape[1]:]               # predict only the token tail
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    ce = chunked_ce(x, head, tgt, cfg.final_logit_softcap)
+    return ce + aux
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr", "remat"))
+def lm_train_step(params, opt_state, cfg: ModelConfig, tokens, key,
+                  lr: float = 3e-4, remat: bool = False):
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, tokens, remat=remat)
+    grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+    params, opt_state = optim.adamw_update(opt_state, grads, params, lr=lr,
+                                           weight_decay=0.01)
+    return params, opt_state, {"loss": loss, "gnorm": gnorm}

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# make `import repro` work without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# keep XLA from grabbing threads it doesn't have; tests see ONE device
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

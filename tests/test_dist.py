@@ -1,0 +1,123 @@
+"""Distribution-layer units that run on ONE device: sharding rules, HLO
+analyzer, plan-mode unrolled decode, checkpoint round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.dist import hlo as hlo_lib
+from repro.models import transformer as tf
+
+
+def tiny(**kw):
+    base = dict(n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                d_ff=128, vocab_size=97, dtype="float32",
+                lazy=LazyConfig(enabled=True))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_unrolled_plan_decode_matches_scan_when_no_skip():
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = tf.init_decode_cache(cfg, B, max_len=8)
+    lazy = tf.init_lazy_decode_cache(cfg, B)
+    tok = jnp.ones((B, 1), jnp.int32)
+    # prime caches with one normal step
+    lg0, cache, lazy, _ = tf.decode_step(params, cfg, tok, jnp.int32(0), cache,
+                                         lazy_cache=lazy, lazy_mode="masked",
+                                         lazy_first_step=True)
+    plan = np.zeros((cfg.n_layers, 2), bool)
+    lg_a, cache_a, _ = tf.decode_step_unrolled(params, cfg, tok, jnp.int32(1),
+                                               cache, lazy, plan_step=plan)
+    lg_b, cache_b, _, _ = tf.decode_step(params, cfg, tok, jnp.int32(1), cache)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_unrolled_plan_skip_uses_cache_and_writes_kv():
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    B = 2
+    cache = tf.init_decode_cache(cfg, B, max_len=8)
+    lazy = tf.init_lazy_decode_cache(cfg, B)
+    tok = jnp.ones((B, 1), jnp.int32)
+    _, cache, lazy, _ = tf.decode_step(params, cfg, tok, jnp.int32(0), cache,
+                                       lazy_cache=lazy, lazy_mode="masked",
+                                       lazy_first_step=True)
+    plan = np.ones((cfg.n_layers, 2), bool)      # skip EVERYTHING
+    lg, cache2, lazy2 = tf.decode_step_unrolled(params, cfg, tok, jnp.int32(1),
+                                                cache, lazy, plan_step=plan)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+    # lazy cache unchanged (all modules reused)
+    for a, b in zip(jax.tree.leaves(lazy), jax.tree.leaves(lazy2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # but attention KV at position 1 WAS written (kv-write on skip)
+    k_before = jax.tree.leaves(cache)[0]
+    k_after = jax.tree.leaves(cache2)[0]
+    assert not np.array_equal(np.asarray(k_before), np.asarray(k_after))
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    """The loop-aware analyzer must multiply by scan trip counts: a scanned
+    matmul repeated N times reports ~N× the FLOPs of a single one."""
+    w = jnp.ones((64, 64))
+
+    def one(x):
+        return x @ w
+
+    def scanned(x):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    x = jnp.ones((32, 64))
+    f1 = hlo_lib.analyze_module(jax.jit(one).lower(x).compile().as_text())
+    f10 = hlo_lib.analyze_module(jax.jit(scanned).lower(x).compile().as_text())
+    assert f1["flops"] > 0
+    ratio = f10["flops"] / f1["flops"]
+    assert 8 <= ratio <= 12, ratio
+
+
+def test_hlo_collective_parse():
+    txt = """
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[16,128]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  ROOT %ar = f32[16,128]{1,0} all-reduce(%ag), to_apply=%add
+}
+"""
+    coll = hlo_lib.collective_bytes(txt)
+    assert coll["all-gather"]["bytes"] == 16 * 128 * 4
+    assert coll["all-reduce"]["count"] == 1
+
+
+def test_param_spec_rules_shapes_only():
+    """Rule sanity without building a mesh: path-based dims selection."""
+    from repro.dist.sharding import param_spec
+    import jax.sharding as js
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # with axis sizes 1 everything divides; check the AXES chosen
+    spec = param_spec("prefix/0/attn/wq", (64, 64), mesh)
+    assert spec == js.PartitionSpec(("data",), "model")
+    spec = param_spec("prefix/0/attn/wo", (64, 64), mesh)
+    assert spec == js.PartitionSpec("model", ("data",))
+    spec = param_spec("embed", (128, 64), mesh)
+    assert spec == js.PartitionSpec("model", ("data",))
+    spec = param_spec("period/0/moe/experts/w_gate", (4, 64, 128), mesh)
+    assert spec[0] is None
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    back = restore_checkpoint(path, zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

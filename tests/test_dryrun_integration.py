@@ -1,0 +1,56 @@
+"""Integration: the dry-run path (sharded lower+compile) on 8 fake host
+devices in a subprocess (device count is locked at first jax init, so this
+cannot run in the main test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+import jax.numpy as jnp
+from repro.configs.base import LazyConfig, INPUT_SHAPES, InputShape
+from repro.configs.registry import get_config
+from repro.dist import ctx, sharding as sh, hlo as hlo_lib
+from repro.launch import dryrun as dr
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+results = {}
+for arch in ("llama3_2_1b", "mixtral_8x22b", "zamba2_7b"):
+    cfg = get_config(arch).reduced(d_model=128, n_heads=4, n_kv_heads=4,
+                                   head_dim=32, vocab_size=256)
+    cfg = cfg.replace(lazy=LazyConfig(enabled=False))
+    for shape in (InputShape("t", 64, 8, "train"), InputShape("d", 64, 8, "decode")):
+        with mesh, ctx.activation_sharding(mesh):
+            fn, args = dr.build_step(cfg, shape, mesh, window_override=None)
+            compiled = fn.lower(*args).compile()
+        mod = hlo_lib.analyze_module(compiled.as_text())
+        results[f"{arch}/{shape.kind}"] = {
+            "flops": mod["flops"],
+            "n_coll": sum(v["count"] for v in mod["collective"].values()),
+        }
+print("RESULT " + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_8dev_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    results = json.loads(line[len("RESULT "):])
+    assert len(results) == 6
+    for k, v in results.items():
+        assert v["flops"] > 0, k
+        if "train" in k:
+            # sharded training must communicate
+            assert v["n_coll"] > 0, k
