@@ -7,13 +7,81 @@
   bench_roofline      — §Roofline table from dry-run artifacts
 
 Prints ``name,field,...`` CSV rows.  PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` runs a minutes-not-hours CI path instead of the full suites:
+a barely-trained fixture driven end-to-end (train -> lazy-learn -> DDIM
+plan-mode sampling -> compiled-HLO FLOP accounting) asserting structure,
+not numbers.
 """
+import argparse
 import sys
 import time
 import traceback
 
 
+def smoke() -> list:
+    """Fast end-to-end sanity for CI (see .github/workflows/ci.yml)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import lazy_dit_fixture
+    from repro.core import lazy as lazy_lib
+    from repro.dist import hlo as hlo_lib
+    from repro.models import dit as dit_lib
+    from repro.sampling import ddim
+
+    rows = []
+    cfg, params, sched = lazy_dit_fixture(pretrain=3, lazy_steps=2)
+    labels = jnp.arange(2) % cfg.dit_n_classes
+    plan = lazy_lib.uniform_plan(4, cfg.n_layers, 2, 0.5, seed=0)
+    x, _ = ddim.ddim_sample(params, cfg, sched, key=jax.random.PRNGKey(0),
+                            labels=labels, n_steps=4, lazy_mode="plan",
+                            plan=plan.skip)
+    assert bool(jnp.all(jnp.isfinite(x))), "plan-mode sampling produced NaNs"
+    rows.append(("smoke_sample",
+                 "shape=" + "x".join(str(d) for d in x.shape),
+                 f"lazy_ratio={plan.lazy_ratio:.2f}"))
+
+    B = 2
+    xb = jnp.zeros((B, cfg.dit_input_size, cfg.dit_input_size,
+                    cfg.dit_in_channels), jnp.float32)
+    t = jnp.zeros((B,), jnp.float32)
+    y = jnp.zeros((B,), jnp.int32)
+    cache = dit_lib.init_dit_lazy_cache(cfg, B)
+    flops = {}
+    for ratio in (0.0, 0.5):
+        pr = np.zeros((cfg.n_layers, 2), bool)
+        pr.reshape(-1)[: int(round(ratio * pr.size))] = True
+
+        def step(x, c, pr=pr):
+            out, nc, _ = dit_lib.dit_forward(params, cfg, x, t, y,
+                                             lazy_cache=c, lazy_mode="plan",
+                                             plan_row=pr)
+            return out, nc
+
+        hlo = jax.jit(step).lower(xb, cache).compile().as_text()
+        flops[ratio] = hlo_lib.analyze_module(hlo)["flops"]
+    saving = 1.0 - flops[0.5] / flops[0.0]
+    assert saving > 0.2, f"plan skip removed only {saving:.1%} of HLO flops"
+    rows.append(("smoke_hlo", f"base_gflops={flops[0.0] / 1e9:.3f}",
+                 f"flop_reduction_at_50pct={saving:.1%}"))
+    return rows
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI sanity path instead of the full suites")
+    args = ap.parse_args()
+    if args.smoke:
+        t0 = time.time()
+        print("# === smoke ===", flush=True)
+        for row in smoke():
+            print(",".join(str(x) for x in row), flush=True)
+        print(f"# smoke done in {time.time() - t0:.1f}s", flush=True)
+        return
+
     import benchmarks.bench_similarity as b_sim
     import benchmarks.bench_lazy_tradeoff as b_lazy
     import benchmarks.bench_compute as b_comp

@@ -39,10 +39,20 @@ Array = jax.Array
 # ---------------------------------------------------------------------------
 
 
+GATE_W_INIT_SCALE = 0.1
+
+
 def init_lazy_gate(key, d_model: int, dtype="float32", init_bias: float = -2.0) -> dict:
     """Probe params.  ``init_bias`` < 0 starts the model diligent (s ~ 0.12),
-    matching the paper's observation that laziness must be *learned*."""
-    w = jax.random.normal(key, (d_model, 1), jnp.float32) / math.sqrt(d_model)
+    matching the paper's observation that laziness must be *learned*.
+
+    The weight is initialized SMALL (0.1/sqrt(d)) so the pre-sigmoid spread
+    (~0.1 on unit-RMS inputs) stays far inside the 2.0 bias margin: with a
+    1/sqrt(d) init the single-token decode probe (no sequence pooling to
+    average the noise down) crosses the 0.5 threshold on ~2% of inputs and
+    an *untrained* model starts skipping modules."""
+    w = (jax.random.normal(key, (d_model, 1), jnp.float32)
+         * (GATE_W_INIT_SCALE / math.sqrt(d_model)))
     return {"w": w.astype(dtype), "b": jnp.full((1,), init_bias, dtype)}
 
 
@@ -174,14 +184,16 @@ def plan_from_scores(scores: np.ndarray, threshold: float = 0.5) -> LazyPlan:
 def plan_with_target_ratio(scores: np.ndarray, target: float,
                            per_step: bool = True) -> LazyPlan:
     """Pick the top-q scoring module calls to hit a target lazy ratio
-    exactly — the knob the paper turns via the penalty rho, exposed directly
+    — the knob the paper turns via the penalty rho, exposed directly
     for deployment ('50% lazy ratio' rows of Tables 1/2).
 
     ``per_step=True`` allocates the skip budget uniformly per sampling step
     AND rotates a forced-refresh hole (period REFRESH): a static plan that
     skips the same module every step lets its cache go stale for the whole
     trajectory, which the paper's dynamic gates never do — the refresh
-    rotation recovers that behaviour in a compiled plan."""
+    rotation recovers that behaviour in a compiled plan.  The rotation caps
+    the achievable per-step ratio at 1 - 1/REFRESH (0.75): targets above
+    that are clipped to the feasible set, not errored."""
     REFRESH = 4
     s = np.asarray(scores, np.float64).copy()
     T = s.shape[0]
@@ -206,11 +218,16 @@ def plan_with_target_ratio(scores: np.ndarray, target: float,
         return LazyPlan(skip)
     s[0] = -np.inf                       # never skip the first step
     flat = s.reshape(-1)
-    n_skip = int(round(target * flat.size))
+    # pick indices, not a threshold compare: a `s >= thresh` select would
+    # over-skip on duplicate scores and — for targets above (T-1)/T, where
+    # the budget exceeds the finite entries — sweep in the -inf step-0
+    # sentinels themselves.
+    n_skip = min(int(round(target * flat.size)), int(np.isfinite(flat).sum()))
     if n_skip == 0:
         return LazyPlan(skip)
-    thresh_idx = np.argsort(flat)[-n_skip]
-    return LazyPlan(s >= flat[thresh_idx])
+    skip_flat = np.zeros(flat.size, bool)
+    skip_flat[np.argsort(flat)[-n_skip:]] = True
+    return LazyPlan(skip_flat.reshape(s.shape))
 
 
 def uniform_plan(n_steps: int, n_layers: int, n_modules: int,

@@ -1,0 +1,11 @@
+"""Distribution layer.
+
+Three orthogonal pieces (DESIGN.md §Dist):
+  * ``ctx``      — thread-local activation-sharding context; layers call
+                   ``ctx.constrain`` unconditionally and it is a no-op
+                   outside an ``activation_sharding`` block.
+  * ``sharding`` — path-rule parameter / cache / batch PartitionSpecs.
+  * ``hlo``      — loop-aware static analysis of compiled HLO text
+                   (FLOPs, bytes, collective traffic) for the roofline.
+"""
+from repro.dist import ctx, hlo, sharding  # noqa: F401

@@ -1,0 +1,135 @@
+"""Thread-local activation-sharding context.
+
+Model code (models/layers.py) calls ``ctx.constrain(x, *axes)`` at every
+layer boundary it wants pinned.  Outside an ``activation_sharding`` block —
+unit tests, single-device benchmarks — constrain is the identity, so the
+same layer code runs sharded and unsharded without branches.
+
+Axis vocabulary: ``"batch"`` maps to ALL data-parallel mesh axes (``data``,
+plus ``pod`` on multi-pod meshes) as one PartitionSpec entry; ``"model"``
+maps to the tensor-parallel axis; ``None`` leaves a dim replicated.  A dim
+whose size does not divide the mapped axis product is silently left
+unconstrained rather than erroring — rule-of-least-surprise for reduced
+test configs on production meshes.
+
+The state is thread-local so concurrent dry-runs (launch/dryrun.py sweeps
+driven from a thread pool) cannot observe each other's mesh.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+class _State(threading.local):
+    """Dict-like thread-local view; layers read ``_STATE["mesh"]`` etc."""
+
+    def __init__(self):
+        self.mesh = None
+        self.dp: Tuple[str, ...] = ()
+        self.model: Optional[str] = None
+        self.opts: dict = {}
+        self.active: bool = False
+
+    def __getitem__(self, key: str) -> Any:
+        return getattr(self, key)
+
+    def snapshot(self) -> dict:
+        return {"mesh": self.mesh, "dp": self.dp, "model": self.model,
+                "opts": self.opts, "active": self.active}
+
+    def restore(self, snap: dict) -> None:
+        for k, v in snap.items():
+            setattr(self, k, v)
+
+
+_STATE = _State()
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """Every mesh axis that is not the tensor-parallel one (pod, data)."""
+    return tuple(n for n in mesh.axis_names if n != MODEL_AXIS)
+
+
+@contextmanager
+def activation_sharding(mesh, **opts):
+    """Enable activation sharding constraints on ``mesh`` for this thread.
+
+    ``opts`` are free-form hillclimb knobs read back via ``ctx.opt``
+    (e.g. ``moe_token_dp``, ``moe_shard_map``, ``mlstm_shard``).
+    """
+    snap = _STATE.snapshot()
+    _STATE.mesh = mesh
+    _STATE.dp = data_axes(mesh)
+    _STATE.model = MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None
+    _STATE.opts = dict(opts)
+    _STATE.active = True
+    try:
+        yield mesh
+    finally:
+        _STATE.restore(snap)
+
+
+@contextmanager
+def disabled():
+    """Temporarily suppress constraints (e.g. inside shard_map bodies,
+    where activations are already device-local and a nested
+    with_sharding_constraint would be wrong)."""
+    prev = _STATE.active
+    _STATE.active = False
+    try:
+        yield
+    finally:
+        _STATE.active = prev
+
+
+def active() -> bool:
+    return bool(_STATE.active and _STATE.mesh is not None)
+
+
+def opt(name: str, default: Any = None) -> Any:
+    """Read a context option; ``default`` when inactive or unset."""
+    if not active():
+        return default
+    return _STATE.opts.get(name, default)
+
+
+def _axis_entry(mesh, axis: Optional[str], dim: int):
+    """Map one logical axis name to a PartitionSpec entry for a dim of
+    size ``dim`` — or None when unmapped / not divisible."""
+    if axis is None:
+        return None
+    if axis == "batch":
+        names = _STATE.dp
+    elif axis == MODEL_AXIS:
+        names = (_STATE.model,) if _STATE.model else ()
+    else:
+        names = (axis,) if axis in mesh.axis_names else ()
+    if not names:
+        return None
+    size = math.prod(mesh.shape[n] for n in names)
+    if size <= 1 or dim % size != 0:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def constrain(x, *axes):
+    """PartitionSpec-based ``with_sharding_constraint``; identity when the
+    context is inactive.  ``axes``: one entry per leading dim of ``x``
+    (trailing dims default to None)."""
+    if not active():
+        return x
+    mesh = _STATE.mesh
+    spec = [_axis_entry(mesh, a, x.shape[i]) for i, a in enumerate(axes)]
+    spec += [None] * (x.ndim - len(spec))
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

@@ -1,0 +1,392 @@
+"""Loop-aware static analysis of compiled HLO text.
+
+``Compiled.cost_analysis()`` counts each ``while`` (lax.scan) body ONCE, so
+a 32-layer model scanned over its period reports ~1/32 of the executed
+FLOPs — useless for a roofline.  ``analyze_module`` re-walks the HLO text
+with the call graph intact and multiplies loop bodies by their trip count
+(XLA records it in ``backend_config={"known_trip_count":{"n":N}}``; the
+fallback reads the loop-condition's ``compare(counter, constant)``).
+
+Cost model (intentionally simple, documented in DESIGN.md §Roofline):
+  * dot          : 2 · |out| · prod(contracting dims)
+  * convolution  : 2 · |out| · |kernel| / out_features  (approximate)
+  * elementwise  : |out| (one flop per element, transcendentals included)
+  * reduce       : |input|
+  * fusion       : flops of the fused computation; BYTES of the fusion
+                   instruction's own operands/output only (internals never
+                   touch HBM — that is what fusion means)
+  * while        : (body + cond) · trip_count
+  * collectives  : tallied separately per op with payload bytes;
+                   ``collective_seconds`` turns them into an ICI time term.
+
+Pure text processing — no jax import, usable on saved HLO dumps.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# ops whose operands/output are not real memory traffic
+_FREE_BYTES = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+})
+
+# pointwise ops: one flop per output element
+_ELEMENTWISE = frozenset({
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "abs", "negate", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "and", "or", "xor", "not", "select", "compare",
+    "clamp", "remainder", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "tanh", "sqrt", "rsqrt", "cbrt", "power", "sine",
+    "cosine", "tan", "atan2", "logistic", "erf", "is-finite", "popcnt",
+    "count-leading-zeros", "stochastic-convert",
+})
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*?(\d+)")
+
+
+class _Instr:
+    __slots__ = ("name", "op", "shapes", "operands", "attrs", "const_int")
+
+    def __init__(self, name, op, shapes, operands, attrs, const_int):
+        self.name = name
+        self.op = op
+        self.shapes = shapes          # [(dtype, (dims...)), ...]
+        self.operands = operands      # operand instruction names
+        self.attrs = attrs
+        self.const_int = const_int
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _elems(shapes) -> int:
+    return sum(math.prod(s) for _, s in shapes)
+
+
+def _nbytes(shapes) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * math.prod(s) for dt, s in shapes)
+
+
+def _split_instruction(line: str) -> Optional[Tuple[str, str, str, str, str]]:
+    """-> (name, type_str, op, operand_str, attrs) or None."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # type: balanced parens for tuple types, else up to the space before op
+    if rest.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp:]
+    rest = rest.lstrip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    op = om.group(1)
+    depth, j = 0, om.end() - 1
+    for j in range(om.end() - 1, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    operand_str = rest[om.end():j]
+    attrs = rest[j + 1:]
+    return name, type_str, op, operand_str, attrs
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, List[_Instr]], str]:
+    """-> ({computation_name: [instructions]}, entry_name)."""
+    comps: Dict[str, List[_Instr]] = {}
+    entry = ""
+    cur: Optional[List[_Instr]] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            h = _HEADER_RE.match(line)
+            if h and "=" not in line.split("(")[0]:
+                cur = comps.setdefault(h.group(2), [])
+                if h.group(1):
+                    entry = h.group(2)
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        parsed = _split_instruction(line)
+        if parsed is None:
+            continue
+        name, type_str, op, operand_str, attrs = parsed
+        shapes = _parse_shapes(type_str)
+        operands = _OPERAND_NAME_RE.findall(operand_str)
+        const_int = None
+        if op == "constant":
+            cm = re.fullmatch(r"-?\d+", operand_str.strip())
+            if cm:
+                const_int = int(cm.group(0))
+        cur.append(_Instr(name, op, shapes, operands, attrs, const_int))
+    if not entry and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _branch_computations(attrs: str) -> List[str]:
+    m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+    if not m:
+        return []
+    return [_OPERAND_NAME_RE.match(p.strip()).group(1)
+            for p in m.group(1).split(",") if p.strip()]
+
+
+def _trip_count(instr: _Instr, comps) -> int:
+    m = _TRIP_RE.search(instr.attrs)
+    if m:
+        return max(1, int(m.group(1)))
+    cond_name = _called(instr.attrs, "condition")
+    cond = comps.get(cond_name, [])
+    consts = {i.name: i.const_int for i in cond if i.const_int is not None}
+    for i in cond:
+        if i.op != "compare":
+            continue
+        dm = re.search(r"direction=(\w+)", i.attrs)
+        direction = dm.group(1) if dm else "LT"
+        for opnd in i.operands:
+            if consts.get(opnd) is not None:
+                n = consts[opnd]
+                return max(1, n + 1 if direction == "LE" else n)
+    return 1
+
+
+def _base_collective(op: str) -> Optional[str]:
+    for base in _COLLECTIVE_OPS:
+        if op == base or op == base + "-start":
+            return base
+    return None
+
+
+def _collective_payload(op: str, shapes) -> int:
+    """Payload bytes of a collective.  An async ``-start`` op's shape is the
+    (operands..., result) tuple — count the result only, so async and sync
+    forms of the same program tally identically.  Sync variadic collectives
+    tuple their RESULTS, so there the full sum is correct."""
+    if op.endswith("-start") and len(shapes) > 1:
+        return _nbytes(shapes[-1:])
+    return _nbytes(shapes)
+
+
+def _instr_flops(instr: _Instr, name_shapes) -> float:
+    op = instr.op
+    out = _elems(instr.shapes)
+    if op == "dot":
+        lhs = name_shapes.get(instr.operands[0]) if instr.operands else None
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+        contr = 1
+        if lhs and cm and cm.group(1):
+            dims = lhs[0][1]
+            for d in cm.group(1).split(","):
+                if int(d) < len(dims):
+                    contr *= dims[int(d)]
+        # a while-loop dot result is tupled with the counter: only the array
+        # output participates, which _elems already sums correctly
+        return 2.0 * out * contr
+    if op == "convolution":
+        rhs = name_shapes.get(instr.operands[1]) if len(instr.operands) > 1 else None
+        if rhs:
+            kdims = rhs[0][1]
+            ofeat = kdims[-1] if kdims else 1
+            return 2.0 * out * (math.prod(kdims) / max(ofeat, 1))
+        return 2.0 * out
+    if op in _ELEMENTWISE:
+        return float(out)
+    if op in ("reduce", "reduce-window"):
+        in_shapes = name_shapes.get(instr.operands[0]) if instr.operands else None
+        return float(_elems(in_shapes)) if in_shapes else float(out)
+    return 0.0
+
+
+def _instr_bytes(instr: _Instr, name_shapes) -> float:
+    if instr.op in _FREE_BYTES:
+        return 0.0
+    total = _nbytes(instr.shapes)
+    for opnd in instr.operands:
+        sh = name_shapes.get(opnd)
+        if sh:
+            total += _nbytes(sh)
+    return float(total)
+
+
+def _merge_coll(dst: Dict, src: Dict, scale: int = 1) -> None:
+    for k, v in src.items():
+        d = dst.setdefault(k, {"bytes": 0, "count": 0})
+        d["bytes"] += v["bytes"] * scale
+        d["count"] += v["count"] * scale
+
+
+def _comp_totals(name: str, comps, memo) -> Dict:
+    if name in memo:
+        return memo[name]
+    memo[name] = {"flops": 0.0, "bytes": 0.0, "collective": {}}  # cycle guard
+    instrs = comps.get(name, [])
+    name_shapes = {i.name: i.shapes for i in instrs}
+    flops = 0.0
+    nbytes = 0.0
+    coll: Dict[str, Dict[str, int]] = {}
+    for instr in instrs:
+        op = instr.op
+        base = _base_collective(op)
+        if base is not None:
+            d = coll.setdefault(base, {"bytes": 0, "count": 0})
+            d["bytes"] += _collective_payload(op, instr.shapes)
+            d["count"] += 1
+            continue
+        if op.endswith("-done") or op == "copy-start":
+            continue
+        if op == "while":
+            trip = _trip_count(instr, comps)
+            for key in ("body", "condition"):
+                sub_name = _called(instr.attrs, key)
+                if sub_name:
+                    sub = _comp_totals(sub_name, comps, memo)
+                    flops += sub["flops"] * trip
+                    nbytes += sub["bytes"] * trip
+                    _merge_coll(coll, sub["collective"], trip)
+            continue
+        if op == "fusion":
+            sub_name = _called(instr.attrs, "calls")
+            if sub_name:
+                sub = _comp_totals(sub_name, comps, memo)
+                flops += sub["flops"]
+                _merge_coll(coll, sub["collective"])
+            nbytes += _instr_bytes(instr, name_shapes)
+            continue
+        if op in ("call", "async-start", "custom-call"):
+            sub_name = (_called(instr.attrs, "calls")
+                        or _called(instr.attrs, "to_apply"))
+            if sub_name:
+                sub = _comp_totals(sub_name, comps, memo)
+                flops += sub["flops"]
+                nbytes += sub["bytes"]
+                _merge_coll(coll, sub["collective"])
+            else:
+                nbytes += _instr_bytes(instr, name_shapes)
+            continue
+        if op == "conditional":
+            branches = _branch_computations(instr.attrs)
+            subs = [_comp_totals(b, comps, memo) for b in branches]
+            if subs:
+                worst = max(subs, key=lambda s: s["flops"])
+                flops += worst["flops"]
+                nbytes += worst["bytes"]
+                _merge_coll(coll, worst["collective"])
+            continue
+        flops += _instr_flops(instr, name_shapes)
+        nbytes += _instr_bytes(instr, name_shapes)
+    memo[name] = {"flops": flops, "bytes": nbytes, "collective": coll}
+    return memo[name]
+
+
+def analyze_module(hlo_text: str) -> Dict:
+    """Analyze one HLO module's text.
+
+    Returns ``{"flops", "bytes", "collective"}`` where flops/bytes are
+    per-device (SPMD-partitioned modules are already per-shard) and
+    ``collective`` maps op name -> {"bytes", "count"} with while-loop
+    bodies scaled by trip count.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    if not entry:
+        return {"flops": 0.0, "bytes": 0.0, "collective": {}}
+    totals = _comp_totals(entry, comps, {})
+    return {"flops": totals["flops"], "bytes": totals["bytes"],
+            "collective": dict(totals["collective"])}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Flat (loop-unaware) collective tally over raw HLO text — works on
+    snippets that are not a complete module.  Async ``-start``/``-done``
+    pairs count once."""
+    out: Dict[str, Dict[str, int]] = {}
+    for line in hlo_text.splitlines():
+        parsed = _split_instruction(line)
+        if parsed is None:
+            continue
+        _, type_str, op, _, _ = parsed
+        base = _base_collective(op)
+        if base is None:
+            continue
+        d = out.setdefault(base, {"bytes": 0, "count": 0})
+        d["bytes"] += _collective_payload(op, _parse_shapes(type_str))
+        d["count"] += 1
+    return out
+
+
+def collective_seconds(coll: Dict[str, Dict[str, int]], n_shards: int,
+                       link_bw: float) -> float:
+    """Ring-algorithm ICI time estimate for a collective tally.
+
+    A ring over the FULL (unsharded) buffer moves ``full·(n-1)/n`` per
+    link.  The tallied bytes are each op's RESULT: the full buffer for
+    all-gather / all-reduce / all-to-all, but the 1/n-size shard for
+    reduce-scatter — so reduce-scatter scales by ``(n-1)`` to recover the
+    full-buffer ring.  All-reduce is reduce-scatter + all-gather (2×);
+    permutes and broadcasts move the payload once.
+    """
+    if link_bw <= 0:
+        return 0.0
+    frac = (n_shards - 1) / n_shards if n_shards > 1 else 0.0
+    total = 0.0
+    for op, d in coll.items():
+        b = float(d["bytes"])
+        if op == "all-reduce":
+            total += 2.0 * b * frac / link_bw
+        elif op == "reduce-scatter":
+            total += b * (n_shards - 1) / link_bw
+        elif op in ("all-gather", "all-to-all", "ragged-all-to-all"):
+            total += b * frac / link_bw
+        else:  # permute / broadcast
+            total += b / link_bw
+    return total

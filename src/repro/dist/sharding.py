@@ -1,0 +1,157 @@
+"""Path-rule parameter / cache / batch shardings (DESIGN.md §Dist).
+
+One rule table covers every assigned architecture because the layer library
+(models/layers.py) uses a consistent naming convention:
+
+  column-parallel (in-dim FSDP over data axes, out-dim over ``model``):
+      wq wk wv  w_gate w_up  w_in w_x w_i w_f  w_dkv w_uk w_uv
+      router lm_head frontend_proj
+  row-parallel (in-dim over ``model``, out-dim FSDP over data axes):
+      wo w_down w_out
+  embed: vocab over ``model`` (logit all-gather at the head), d over data.
+
+Everything else — norms, biases, conv filters, gate probes, recurrence
+matrices — is replicated: each is O(d) or O(hd^2) and sharding them buys
+nothing but collectives.  Stacked leaves (vmapped experts / scanned layer
+periods) get ``None`` on every leading dim and the 2-D rule on the last
+two.  A dim that does not divide its assigned axes falls back to None.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+from repro.dist.ctx import MODEL_AXIS, data_axes
+
+# rule tables keyed on the LAST path component
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "w_gate", "w_up", "w_in", "w_x", "w_i", "w_f",
+    "w_dkv", "w_uk", "w_uv", "router", "lm_head", "frontend_proj",
+})
+_ROW_PARALLEL = frozenset({"wo", "w_down", "w_out"})
+_EMBED = frozenset({"embed"})
+
+# cache leaves with a (batch, seq, heads, head_dim)-like layout
+_KV_LEAVES = frozenset({"k", "v", "k_rope", "c_kv"})
+
+
+def _axes_size(mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[n] for n in axes) if axes else 1
+
+
+def _data_entry(mesh, dim: int, use_data: bool):
+    da = data_axes(mesh)
+    if not use_data or not da or dim % _axes_size(mesh, da) != 0:
+        return None
+    return da
+
+
+def _model_entry(mesh, dim: int):
+    if MODEL_AXIS not in mesh.axis_names:
+        return None
+    if dim % mesh.shape[MODEL_AXIS] != 0:
+        return None
+    return MODEL_AXIS
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh, *,
+               mode: str = "fsdp") -> PartitionSpec:
+    """PartitionSpec for one parameter leaf.
+
+    ``path``: '/'-joined tree path (e.g. "period/0/moe/experts/w_gate").
+    ``mode``: 'fsdp' shards the non-TP dim over the data axes;
+    'tp_only' keeps params replicated across data (weight-stationary TP).
+    """
+    name = path.rsplit("/", 1)[-1]
+    ndim = len(shape)
+    known = name in _COL_PARALLEL or name in _ROW_PARALLEL or name in _EMBED
+    if ndim < 2 or not known:
+        return PartitionSpec(*([None] * ndim))
+    use_data = mode == "fsdp"
+    d_in, d_out = shape[-2], shape[-1]
+    if name in _ROW_PARALLEL or name in _EMBED:
+        # embed shares the row-parallel layout: vocab over TP (logit
+        # all-gather at the head), d over data
+        tail = (_model_entry(mesh, d_in), _data_entry(mesh, d_out, use_data))
+    else:  # column-parallel
+        tail = (_data_entry(mesh, d_in, use_data), _model_entry(mesh, d_out))
+    return PartitionSpec(*([None] * (ndim - 2)), *tail)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            parts.append(str(k.name))
+        elif isinstance(k, FlattenedIndexKey):
+            parts.append(str(k.key))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(params, mesh, *, mode: str = "fsdp"):
+    """Pytree of NamedShardings matching ``params`` (abstract or concrete)."""
+    def one(path, leaf):
+        spec = param_spec(_path_str(path), tuple(leaf.shape), mesh, mode=mode)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(mesh, batch: int, ndim: int) -> NamedSharding:
+    """Global-batch inputs: leading dim over the data axes, rest replicated."""
+    first = _data_entry(mesh, batch, True)
+    return NamedSharding(mesh, PartitionSpec(first, *([None] * (ndim - 1))))
+
+
+def seq_parallel_spec(mesh) -> PartitionSpec:
+    """Megatron-style sequence parallelism for (B, S, D) layer-boundary
+    activations: B over data, S over ``model`` — remat storage is 1/TP of
+    the replicated layout and GSPMD inserts the gather/scatter pair at each
+    block's TP region."""
+    da = data_axes(mesh) or None
+    mdl = MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None
+    return PartitionSpec(da, mdl, None)
+
+
+def cache_shardings(cache, mesh, batch: int, *,
+                    mode: Optional[str] = None,
+                    shard_heads: bool = False):
+    """NamedShardings for a decode / lazy cache pytree.
+
+    The batch dim — position 0, or 1 under the ``period`` subtree whose
+    stacked leaves carry a leading n_repeats dim — is sharded over the
+    data axes when it matches the global batch (position-based, so an
+    n_repeats that happens to equal the batch is never mistaken for it).
+    KV-like leaves can additionally shard heads (``shard_heads`` /
+    ``mode='heads'``) or the window dim (``mode='seq'``) over ``model``.
+    ``pos`` index vectors and scalar stats stay replicated.
+    """
+    heads = shard_heads or mode == "heads"
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        parts = _path_str(path).split("/")
+        name = parts[-1]
+        start = 1 if parts[0] == "period" else 0
+        bi = start if (name != "pos" and len(shape) > start
+                       and shape[start] == batch) else None
+        if bi is not None:
+            spec[bi] = _data_entry(mesh, shape[bi], True)
+        if bi is not None and name in _KV_LEAVES:
+            if heads and len(shape) > bi + 2:
+                spec[bi + 2] = _model_entry(mesh, shape[bi + 2])
+            elif mode == "seq" and len(shape) > bi + 1:
+                spec[bi + 1] = _model_entry(mesh, shape[bi + 1])
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

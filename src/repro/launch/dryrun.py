@@ -290,6 +290,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax<=0.4.x wraps it in a list
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     # loop-aware static analysis: cost_analysis() counts while (scan) bodies
     # ONCE — analyze_module scales by trip count (see dist/hlo.py)

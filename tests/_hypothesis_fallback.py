@@ -1,0 +1,94 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container that runs tier-1 has no hypothesis wheel; rather than skip
+the property tests we run them over a deterministic pseudo-random sample
+of the strategy space (seeded, so failures reproduce).  Only the tiny API
+surface the suite uses is provided: ``given``, ``settings``, and
+``strategies.integers/floats/booleans``.  Shrinking, the example database,
+and health checks are intentionally absent.
+
+Registered from conftest.py via ``install()`` ONLY when the real package
+is missing, so environments with hypothesis keep full property testing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sampler, boundary):
+        self._sampler = sampler
+        self._boundary = boundary   # deterministic edge examples, tried first
+
+    def boundary(self):
+        return list(self._boundary)
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     [min_value, max_value])
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     [min_value, max_value])
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.choice([False, True]), [False, True])
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            # boundary examples first (hypothesis-style minimal cases), then
+            # seeded random draws up to the example budget
+            examples = [tuple(s.boundary()[0] for s in strats),
+                        tuple(s.boundary()[-1] for s in strats)]
+            while len(examples) < limit:
+                examples.append(tuple(s.sample(rng) for s in strats))
+            for values in examples[:limit]:
+                try:
+                    fn(*args, *values, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {values!r}: {e}"
+                    ) from e
+        # hide the strategy-filled params from pytest's fixture resolution
+        # (real hypothesis does the same)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def install():
+    """Register the fallback as ``hypothesis`` in sys.modules."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -7,3 +7,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # keep XLA from grabbing threads it doesn't have; tests see ONE device
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# determinism off-TPU: no x64 surprises, no TF32-style downcasts
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container has no hypothesis wheel — use the fallback
+    from _hypothesis_fallback import install as _install_hypothesis
+    _install_hypothesis()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute integration tests (subprocess "
+        "compiles); run by default, deselect with -m 'not slow'")
+    # force host-platform defaults BEFORE any backend initializes so the
+    # suite is bit-deterministic on CPU regardless of the machine's
+    # accelerators or env: f32 matmuls must not take a fast-path precision.
+    import jax
+    jax.config.update("jax_platforms", "cpu")
+    jax.config.update("jax_default_matmul_precision", "highest")

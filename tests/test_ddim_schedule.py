@@ -1,0 +1,88 @@
+"""Regression tests: DDIM timestep subsets when n_train % n_sample != 0,
+and gate_score numerics under bf16 inputs (f32 accumulation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lazy import gate_score, init_lazy_gate
+from repro.sampling.ddim import linear_schedule, sampling_timesteps
+
+
+# ---------------------------------------------------------------------------
+# sampling_timesteps with ragged divisors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_train,n_sample", [
+    (1000, 50),        # the even paper case
+    (1000, 7),         # ragged
+    (1000, 13),
+    (200, 30),
+    (100, 9),
+    (10, 7),           # step == 1 tail
+    (10, 9),
+])
+def test_sampling_timesteps_unique_descending_in_range(n_train, n_sample):
+    ts = sampling_timesteps(n_train, n_sample)
+    assert ts.shape == (n_sample,)
+    assert len(np.unique(ts)) == n_sample, "duplicate timesteps"
+    assert np.all(np.diff(ts) < 0), "must be strictly descending"
+    assert ts.min() >= 0 and ts.max() <= n_train - 1
+
+
+def test_sampling_timesteps_index_schedule_safely():
+    """Every emitted timestep must index the training schedule arrays."""
+    sched = linear_schedule(100)
+    ts = sampling_timesteps(100, 7)
+    a = sched.alphas_cumprod[jnp.asarray(ts)]
+    assert a.shape == (7,)
+    assert bool(jnp.all((a > 0) & (a <= 1)))
+
+
+# ---------------------------------------------------------------------------
+# gate_score under bf16
+# ---------------------------------------------------------------------------
+
+
+def test_gate_score_bf16_f32_accumulation():
+    """bf16 probes must accumulate in f32: finite scores in (0, 1) that
+    agree with the f32 reference to bf16 resolution, even for long
+    sequences where a bf16 mean would lose mass."""
+    B, N, D = 2, 2048, 64
+    key = jax.random.PRNGKey(0)
+    gate32 = init_lazy_gate(key, D, dtype="float32")
+    gate16 = jax.tree.map(lambda a: a.astype(jnp.bfloat16), gate32)
+    z32 = jax.random.normal(jax.random.PRNGKey(1), (B, N, D), jnp.float32)
+    z16 = z32.astype(jnp.bfloat16)
+
+    s_ref = gate_score(gate32, z32)
+    s_b16 = gate_score(gate16, z16)
+    assert s_b16.dtype == jnp.float32
+    s_b16 = np.asarray(s_b16)
+    assert np.all(np.isfinite(s_b16))
+    assert np.all((s_b16 > 0) & (s_b16 < 1))
+    np.testing.assert_allclose(s_b16, np.asarray(s_ref), atol=2e-2)
+
+
+def test_gate_score_bf16_extreme_inputs_finite():
+    """Large-magnitude bf16 activations: sigmoid saturates instead of
+    producing inf/nan."""
+    D = 32
+    gate = jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                        init_lazy_gate(jax.random.PRNGKey(0), D))
+    z = (jnp.ones((1, 4, D), jnp.float32) * 3e4).astype(jnp.bfloat16)
+    s = np.asarray(gate_score(gate, z))
+    assert np.all(np.isfinite(s))
+    assert np.all((s >= 0) & (s <= 1))
+
+
+def test_untrained_gate_is_diligent_on_unit_rms_inputs():
+    """Regression for the serving divergence: with the small probe init an
+    untrained gate stays below threshold on unit-RMS inputs — single-token
+    decode included (no pooling to average the noise)."""
+    D = 64
+    gate = init_lazy_gate(jax.random.PRNGKey(0), D)
+    z = jax.random.normal(jax.random.PRNGKey(2), (4096, 1, D))
+    s = np.asarray(gate_score(gate, z))
+    assert float(s.max()) < 0.5

@@ -1,0 +1,72 @@
+"""Regressions for dist-layer edges beyond the seed's test_dist.py:
+reduce-scatter ring accounting, async collective payloads, and stacked
+(period) cache leaves whose n_repeats dim collides with the batch size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import hlo as hlo_lib
+from repro.dist import sharding as sh
+
+
+def test_reduce_scatter_seconds_match_all_gather():
+    """A reduce-scatter's tallied bytes are the 1/n-size result; its ring
+    time must equal the all-gather of the same full buffer, not be n×
+    cheaper."""
+    n = 4
+    ag = {"all-gather": {"bytes": 32768, "count": 1}}       # full result
+    rs = {"reduce-scatter": {"bytes": 32768 // n, "count": 1}}  # shard result
+    bw = 1e9
+    t_ag = hlo_lib.collective_seconds(ag, n, bw)
+    t_rs = hlo_lib.collective_seconds(rs, n, bw)
+    np.testing.assert_allclose(t_rs, t_ag, rtol=1e-12)
+    # all-reduce = reduce-scatter + all-gather
+    ar = {"all-reduce": {"bytes": 32768, "count": 1}}
+    np.testing.assert_allclose(hlo_lib.collective_seconds(ar, n, bw),
+                               t_ag + t_rs, rtol=1e-12)
+
+
+def test_async_collective_payload_matches_sync():
+    """-start ops carry an (operands, result) tuple shape; only the result
+    counts, so async and sync forms of one program tally identically."""
+    sync = """
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  ROOT %ag = f32[16,128]{1,0} all-gather(%p0), dimensions={0}
+}
+"""
+    asyn = """
+ENTRY %main (p0: f32[4,128]) -> f32[16,128] {
+  %p0 = f32[4,128]{1,0} parameter(0)
+  %ags = (f32[4,128]{1,0}, f32[16,128]{1,0}) all-gather-start(%p0), dimensions={0}
+  ROOT %agd = f32[16,128]{1,0} all-gather-done(%ags)
+}
+"""
+    a = hlo_lib.collective_bytes(sync)["all-gather"]
+    b = hlo_lib.collective_bytes(asyn)["all-gather"]
+    assert a == b == {"bytes": 16 * 128 * 4, "count": 1}
+
+
+def test_cache_shardings_stacked_nrep_equal_to_batch():
+    """Period caches carry a leading n_repeats dim; when n_repeats == B the
+    batch dim must still resolve by POSITION (dim 1 under 'period'), and
+    heads mode must land on the heads dim, not the window."""
+    B = 4
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    nrep, W, KV, hd = B, 8, 2, 16       # adversarial: nrep == batch
+    cache = {
+        "prefix": ({"attn": {"k": jax.ShapeDtypeStruct((B, W, KV, hd), jnp.float32),
+                             "pos": jax.ShapeDtypeStruct((W,), jnp.int32)}},),
+        "period": ({"attn": {"k": jax.ShapeDtypeStruct((nrep, B, W, KV, hd), jnp.float32),
+                             "pos": jax.ShapeDtypeStruct((nrep, W), jnp.int32)}},),
+        "suffix": (),
+    }
+    shd = sh.cache_shardings(cache, mesh, B, shard_heads=True)
+    pk = shd["prefix"][0]["attn"]["k"].spec
+    assert pk[0] == ("data",) and pk[2] == "model", pk
+    sk = shd["period"][0]["attn"]["k"].spec
+    assert sk[0] is None, "n_repeats dim must not be sharded as batch"
+    assert sk[1] == ("data",), "batch is dim 1 under period"
+    assert sk[3] == "model", "heads mode must hit the heads dim"
+    # pos vectors replicated even when a dim size collides with B
+    assert all(e is None for e in shd["period"][0]["attn"]["pos"].spec)

@@ -1,0 +1,126 @@
+"""Unit tests for core/lazy.py static-plan logic (DESIGN.md §3 'plan' mode):
+target-ratio budgeting, the step-0 rule, and the forced-refresh rotation."""
+import numpy as np
+import pytest
+
+from repro.core import lazy as lazy_lib
+
+
+T, L, M = 20, 4, 2
+PER = L * M
+
+
+def scores(seed=0):
+    return np.random.default_rng(seed).random((T, L, M))
+
+
+# ---------------------------------------------------------------------------
+# plan_with_target_ratio
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target", [0.1, 0.25, 0.3, 0.5])
+def test_target_ratio_hit_within_one_module(target):
+    """Per-step skip counts land on the budget exactly; the global ratio is
+    within one module-call-per-step of the target."""
+    plan = lazy_lib.plan_with_target_ratio(scores(), target)
+    budget = int(round(target * T * PER / (T - 1)))
+    for t in range(1, T):
+        assert plan.skip[t].sum() == min(budget, PER), t
+    assert abs(plan.lazy_ratio - target) <= 1.0 / PER + 1e-9
+
+
+def test_step_zero_never_skips():
+    for target in (0.2, 0.5, 0.9):
+        plan = lazy_lib.plan_with_target_ratio(scores(1), target)
+        assert not plan.skip[0].any()
+        plan_g = lazy_lib.plan_with_target_ratio(scores(1), target,
+                                                 per_step=False)
+        assert not plan_g.skip[0].any()
+
+
+def test_refresh_rotation_forces_module_runs():
+    """Module j may not skip on step t when j % REFRESH == t % REFRESH: no
+    module's cache can go stale for the whole trajectory (the static-plan
+    analogue of the paper's dynamic gates re-running modules)."""
+    REFRESH = 4
+    # adversarial scores: module 0 maximally attractive to skip everywhere
+    s = scores(2)
+    s[:, 0, 0] = 1.0
+    plan = lazy_lib.plan_with_target_ratio(s, 0.5)
+    flat = plan.skip.reshape(T, PER)
+    for t in range(1, T):
+        forced = np.arange(PER) % REFRESH == t % REFRESH
+        assert not flat[t][forced].any(), t
+    # module 0 must therefore run at least every REFRESH steps
+    runs = ~flat[:, 0]
+    assert runs.reshape(-1)[::1].any()
+    longest_gap = 0
+    gap = 0
+    for r in runs:
+        gap = 0 if r else gap + 1
+        longest_gap = max(longest_gap, gap)
+    assert longest_gap < REFRESH
+
+
+def test_high_scores_preferred():
+    """The budget goes to the highest-scoring (laziest) module calls."""
+    s = np.full((T, L, M), 0.1)
+    s[:, 1, 1] = 0.9
+    plan = lazy_lib.plan_with_target_ratio(s, 1.0 / PER)
+    # one skip per step; it must be the high-score module except on its
+    # forced-refresh steps
+    idx = 1 * M + 1
+    for t in range(1, T):
+        if idx % 4 == t % 4:
+            continue
+        assert plan.skip[t, 1, 1], t
+
+
+def test_zero_and_degenerate_targets():
+    assert lazy_lib.plan_with_target_ratio(scores(), 0.0).lazy_ratio == 0.0
+    one_step = np.random.default_rng(0).random((1, L, M))
+    assert not lazy_lib.plan_with_target_ratio(one_step, 0.9).skip.any()
+
+
+def test_global_mode_ratio():
+    plan = lazy_lib.plan_with_target_ratio(scores(3), 0.4, per_step=False)
+    assert not plan.skip[0].any()
+    assert abs(plan.lazy_ratio - 0.4) < 0.05
+
+
+def test_global_mode_extreme_target_keeps_step0():
+    """Regression: targets above (T-1)/T used to sweep the step-0 -inf
+    sentinels into the skip set; duplicate scores used to over-skip."""
+    plan = lazy_lib.plan_with_target_ratio(scores(5), 0.97, per_step=False)
+    assert not plan.skip[0].any()
+    assert plan.skip[1:].all()            # budget capped at the feasible set
+    dup = np.full((T, L, M), 0.5)
+    plan_d = lazy_lib.plan_with_target_ratio(dup, 0.25, per_step=False)
+    assert not plan_d.skip[0].any()
+    assert plan_d.skip.sum() == int(round(0.25 * T * PER))
+
+
+# ---------------------------------------------------------------------------
+# uniform_plan
+# ---------------------------------------------------------------------------
+
+
+def test_uniform_plan_seeded_and_step0():
+    a = lazy_lib.uniform_plan(T, L, M, 0.5, seed=7)
+    b = lazy_lib.uniform_plan(T, L, M, 0.5, seed=7)
+    c = lazy_lib.uniform_plan(T, L, M, 0.5, seed=8)
+    np.testing.assert_array_equal(a.skip, b.skip)
+    assert not np.array_equal(a.skip, c.skip)
+    assert not a.skip[0].any()
+    assert a.skip.shape == (T, L, M)
+    # ratio statistically near the request (step 0 forced diligent)
+    expected = 0.5 * (T - 1) / T
+    assert abs(a.lazy_ratio - expected) < 0.15
+
+
+def test_plan_from_scores_threshold_and_step0():
+    s = scores(4)
+    plan = lazy_lib.plan_from_scores(s, threshold=0.6)
+    assert not plan.skip[0].any()
+    np.testing.assert_array_equal(plan.skip[1:], s[1:] > 0.6)
