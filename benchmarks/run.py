@@ -5,6 +5,8 @@
   bench_compute       — paper Tables 3/6 (TMACs / compiled-FLOPs vs ratio)
   bench_kernels       — Pallas kernels vs oracles
   bench_roofline      — §Roofline table from dry-run artifacts
+  bench_serving       — continuous vs static batching throughput at lazy
+                        ratios (emits artifacts/BENCH_serving.json)
 
 Prints ``name,field,...`` CSV rows.  PYTHONPATH=src python -m benchmarks.run
 
@@ -66,6 +68,11 @@ def smoke() -> list:
     assert saving > 0.2, f"plan skip removed only {saving:.1%} of HLO flops"
     rows.append(("smoke_hlo", f"base_gflops={flops[0.0] / 1e9:.3f}",
                  f"flop_reduction_at_50pct={saving:.1%}"))
+
+    # serving: continuous vs static batching on a tiny config; emits
+    # artifacts/BENCH_serving.json so the bench trajectory populates in CI
+    import benchmarks.bench_serving as b_serve
+    rows.extend(b_serve.run_smoke())
     return rows
 
 
@@ -87,10 +94,11 @@ def main() -> None:
     import benchmarks.bench_compute as b_comp
     import benchmarks.bench_kernels as b_kern
     import benchmarks.bench_roofline as b_roof
+    import benchmarks.bench_serving as b_serve
 
     suites = [("similarity", b_sim), ("lazy_tradeoff", b_lazy),
               ("compute", b_comp), ("kernels", b_kern),
-              ("roofline", b_roof)]
+              ("roofline", b_roof), ("serving", b_serve)]
     failed = 0
     for name, mod in suites:
         t0 = time.time()

@@ -74,23 +74,48 @@ class LazyOut(NamedTuple):
     score: Optional[Array]   # (B,) laziness score; None in plan mode
 
 
+def _not_fresh(fresh: Array, ndim: int) -> Array:
+    """~fresh broadcast to ``ndim`` trailing dims.  ``fresh`` is (B,) host-
+    batched or 0-d under the per-slot vmap of decode_step_mixed."""
+    return jnp.logical_not(jnp.reshape(fresh, (-1,) + (1,) * (ndim - 1)))
+
+
 def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
                  gate: Optional[dict],
                  cache_y: Optional[Array],
                  mode: str,
                  threshold: float = 0.5,
-                 plan_skip: bool = False) -> LazyOut:
+                 plan_skip=False,
+                 fresh: Optional[Array] = None) -> LazyOut:
     """Run/skip one gated module.
 
     ``fn`` computes the module on the modulated input ``z``; ``cache_y`` is
     the previous diffusion/decode step's output for this module (None on the
     first step -> always run).
+
+    ``plan_skip`` is either a static bool (compile-time skip: the module is
+    absent from the HLO — the paper's FLOP saving) or a traced boolean array
+    (continuous batching: slots sit at different request steps, so the skip
+    decision is a per-slot ``where`` select; see DESIGN.md §Serve).
+    ``fresh`` (per-sample bool) marks slots whose lazy cache was just reset
+    (request admitted this step): a fresh slot never serves its cache.
     """
-    if mode == "off" or gate is None:
+    if mode == "off" or (gate is None and mode != "plan"):
         y = fn(z)
         return LazyOut(y, y, None)
 
+    # plan mode does not read the gate: skips come from the plan, so it
+    # works (and its accounted savings are real) even with no probe params
     if mode == "plan":
+        if isinstance(plan_skip, jax.Array):
+            y = fn(z)
+            if cache_y is None:
+                return LazyOut(y, y, None)
+            skip = jnp.reshape(plan_skip, (-1,) + (1,) * (y.ndim - 1))
+            if fresh is not None:
+                skip = jnp.logical_and(skip, _not_fresh(fresh, y.ndim))
+            y = jnp.where(skip, cache_y, y)
+            return LazyOut(y, y, None)
         if plan_skip and cache_y is not None:
             return LazyOut(cache_y, cache_y, None)   # module absent from HLO
         y = fn(z)
@@ -104,11 +129,16 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
     if mode == "soft":
         y_new = fn(z)
         mix = s[:, None, None].astype(y_new.dtype)
+        if fresh is not None:
+            # fresh slots must not blend their zeroed cache into the output
+            mix = mix * _not_fresh(fresh, y_new.ndim).astype(mix.dtype)
         y = (1 - mix) * y_new + mix * cache_y
         return LazyOut(y, y, s)
     if mode == "masked":
         y_new = fn(z)
         skip = (s > threshold)[:, None, None]
+        if fresh is not None:
+            skip = jnp.logical_and(skip, _not_fresh(fresh, y_new.ndim))
         y = jnp.where(skip, cache_y, y_new)
         return LazyOut(y, y, s)
     raise ValueError(f"unknown lazy mode: {mode}")
@@ -148,6 +178,42 @@ def realized_lazy_ratio(scores_over_steps: Array, threshold: float = 0.5) -> Arr
 
 def init_step_cache(module_shapes: Dict[str, Tuple[int, ...]], dtype) -> Dict[str, Array]:
     return {k: jnp.zeros(sh, dtype) for k, sh in module_shapes.items()}
+
+
+# ---------------------------------------------------------------------------
+# Per-slot step-cache helpers (continuous batching; serving/slots.py)
+#
+# A slot pool stacks one single-sequence cache per slot along a leading axis.
+# Every leaf of a stacked tree is (n_slots, *single_leaf_shape); these
+# helpers init/reset/gather/scatter along that axis so a request joining a
+# slot never observes the previous occupant's cached module outputs.
+# ---------------------------------------------------------------------------
+
+
+def stack_for_slots(single_cache, n_slots: int):
+    """Stack one single-sequence cache tree into an ``n_slots``-slot pool."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_slots,) + a.shape).copy()
+        if hasattr(a, "shape") else a, single_cache)
+
+
+def slot_cache_reset(stacked, slot: int):
+    """Zero slot ``slot``'s entries (request admitted / evicted): the next
+    occupant starts from an empty step cache and must prime it (``fresh``)."""
+    return jax.tree.map(lambda a: a.at[slot].set(jnp.zeros_like(a[slot])),
+                        stacked)
+
+
+def slot_cache_gather(stacked, slot: int):
+    """Extract slot ``slot``'s single-sequence cache tree."""
+    return jax.tree.map(lambda a: a[slot], stacked)
+
+
+def slot_cache_scatter(stacked, slot: int, single):
+    """Write a single-sequence cache tree into slot ``slot`` (admission:
+    the request's freshly prefilled cache replaces the evictee's)."""
+    return jax.tree.map(lambda big, small: big.at[slot].set(small),
+                        stacked, single)
 
 
 # ---------------------------------------------------------------------------

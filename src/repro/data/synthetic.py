@@ -9,7 +9,8 @@ device_put with the train-step's input sharding by the launcher.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional, Tuple
+from dataclasses import dataclass
+from typing import Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +71,42 @@ class MarkovTokenDataset:
                                    for c in cur])
                 out[:, t + 1] = choice
             yield out
+
+
+@dataclass
+class RequestSpec:
+    """One serving request of a synthetic trace (serving/scheduler.py)."""
+
+    rid: int
+    arrival: float            # virtual-seconds arrival time (Poisson process)
+    prompt: np.ndarray        # (P,) int32 token ids
+    max_new: int              # decode-output budget
+
+
+def request_trace(n_requests: int, vocab: int, *, seed: int = 0,
+                  mean_interarrival: float = 0.5,
+                  short_prompt: Tuple[int, int] = (2, 6),
+                  long_prompt: Tuple[int, int] = (8, 16),
+                  short_output: Tuple[int, int] = (3, 6),
+                  long_output: Tuple[int, int] = (8, 14),
+                  long_frac: float = 0.35) -> List[RequestSpec]:
+    """Deterministic synthetic request trace: seeded Poisson arrivals with a
+    two-component (short/long) prompt/output length mixture.  Shared by the
+    serving tests and benchmarks/bench_serving.py so both see the same
+    workload for a given seed."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival, n_requests))
+    reqs = []
+    for i in range(n_requests):
+        is_long = rng.random() < long_frac
+        plo, phi = long_prompt if is_long else short_prompt
+        olo, ohi = long_output if is_long else short_output
+        prompt = rng.integers(0, vocab,
+                              int(rng.integers(plo, phi + 1))).astype(np.int32)
+        reqs.append(RequestSpec(rid=i, arrival=float(arrivals[i]),
+                                prompt=prompt,
+                                max_new=int(rng.integers(olo, ohi + 1))))
+    return reqs
 
 
 def frontend_stub_embeddings(rng: np.random.Generator, batch: int, n_frames: int,

@@ -1,8 +1,19 @@
-"""Serving launcher: batched greedy decode with optional lazy modes.
+"""Serving launcher: static-batch greedy decode or a trace-driven
+continuous-batching workload, with optional lazy modes.
 
+  # static batch, masked lazy decode
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_9b --lazy masked
+
+  # static batch under a 50% uniform lazy plan
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
+      --lazy plan --lazy-ratio 0.5
+
+  # continuous batching over a synthetic Poisson trace with mixed lengths
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
+      --workload --n-requests 16 --arrival-rate 2.0 --lazy plan
 """
 import argparse
+import time
 
 import jax
 import numpy as np
@@ -10,18 +21,44 @@ import numpy as np
 from repro.checkpoint.io import restore_checkpoint
 from repro.configs.base import LazyConfig
 from repro.configs.registry import get_config
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import request_trace
 from repro.models import transformer as tf
-from repro.serving.engine import Engine
+from repro.serving.engine import ContinuousBatchingEngine, Engine
+
+
+def build_plan(args, cfg, n_steps: int) -> lazy_lib.LazyPlan:
+    """--plan loads a saved (T, L, 2) bool skip array (.npy/.npz); otherwise
+    a uniform random plan at --lazy-ratio (the ablation baseline)."""
+    if args.plan:
+        data = np.load(args.plan)
+        skip = data[data.files[0]] if hasattr(data, "files") else data
+        return lazy_lib.LazyPlan(np.asarray(skip, bool))
+    return lazy_lib.uniform_plan(n_steps, cfg.n_layers, 2, args.lazy_ratio,
+                                 seed=args.seed)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_2_1b")
-    ap.add_argument("--lazy", default="off", choices=["off", "masked"])
+    ap.add_argument("--lazy", default="off", choices=["off", "masked", "plan"])
+    ap.add_argument("--lazy-ratio", type=float, default=0.5,
+                    help="uniform-plan skip ratio for --lazy plan")
+    ap.add_argument("--plan", default="",
+                    help="path to a saved (T, L, 2) bool skip plan")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--n-new", type=int, default=16)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    # trace-driven continuous-batching workload
+    ap.add_argument("--workload", action="store_true",
+                    help="serve a synthetic Poisson request trace through "
+                         "the continuous-batching engine")
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean request arrivals per virtual second")
+    ap.add_argument("--n-slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -30,15 +67,53 @@ def main():
     params = tf.init_lm(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         params = restore_checkpoint(args.ckpt, params)
+
+    if args.workload:
+        # two prompt-length buckets (like bench_serving) bound the jitted
+        # prefill retrace count while keeping the length mixture
+        trace = request_trace(args.n_requests, cfg.vocab_size, seed=args.seed,
+                              mean_interarrival=1.0 / args.arrival_rate,
+                              short_prompt=(4, 4), long_prompt=(12, 12))
+        max_len = max(len(r.prompt) + r.max_new for r in trace) + 8
+        plan = (build_plan(args, cfg, n_steps=16)
+                if args.lazy == "plan" else None)
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=args.n_slots,
+                                       max_len=max_len, lazy_mode=args.lazy,
+                                       plan=plan)
+        t0 = time.perf_counter()
+        res = eng.run(trace)
+        wall = time.perf_counter() - t0
+        s = res.metrics.summary()
+        n_tok = sum(len(res.outputs[r.rid]) - len(r.prompt) for r in trace)
+        print(f"arch={cfg.name} lazy={args.lazy} policy=continuous "
+              f"slots={args.n_slots} requests={len(trace)}")
+        print(f"  service clock : {s['requests_per_s']:.3f} req/s, "
+              f"{s['tokens_per_s']:.2f} tok/s over {s['virtual_time_s']:.2f}s")
+        print(f"  latency       : p50={s['latency_p50_s']:.2f}s "
+              f"p95={s['latency_p95_s']:.2f}s  "
+              f"ttft p50={s['ttft_p50_s']:.2f}s p95={s['ttft_p95_s']:.2f}s")
+        print(f"  realized lazy ratio: {s['realized_lazy_ratio']:.1%}  "
+              f"mean active slots: {s['mean_active_slots']:.2f}  "
+              f"mean queue depth: {s['mean_queue_depth']:.2f}")
+        print(f"  host wall-clock: {wall:.2f}s "
+              f"({n_tok / max(wall, 1e-9):.1f} tok/s)")
+        return
+
+    plan = build_plan(args, cfg, n_steps=args.n_new) \
+        if args.lazy == "plan" else None
     eng = Engine(cfg, params, max_len=args.prompt_len + args.n_new + 8,
-                 lazy_mode=args.lazy)
-    prompt = np.random.default_rng(0).integers(
+                 lazy_mode=args.lazy, plan=plan)
+    prompt = np.random.default_rng(args.seed).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
     res = eng.generate(prompt, n_new=args.n_new)
+    wall = time.perf_counter() - t0
     print(f"arch={cfg.name} lazy={args.lazy}")
     for row in res.tokens:
         print("  ", row.tolist())
-    print(f"realized lazy ratio: {res.realized_lazy_ratio:.1%}")
+    print(f"tokens/sec: {args.batch * args.n_new / max(wall, 1e-9):.1f} "
+          f"(wall {wall:.2f}s)  realized lazy ratio: "
+          f"{res.realized_lazy_ratio:.1%}")
 
 
 if __name__ == "__main__":

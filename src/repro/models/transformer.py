@@ -172,11 +172,18 @@ def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
                 shared_attn: Optional[dict] = None,
                 lazy_cache: Optional[dict] = None,
                 lazy_mode: str = "off",
-                plan: Tuple[bool, bool] = (False, False),
+                plan: Tuple = (False, False),
                 prime: bool = False,
+                fresh: Optional[Array] = None,
                 ) -> Tuple[Array, dict, dict, Dict[str, Array], Array]:
     """One decoder block.  Returns
-    (x, new_cache, new_lazy_cache, scores, aux_loss)."""
+    (x, new_cache, new_lazy_cache, scores, aux_loss).
+
+    ``plan`` entries are static bools (unrolled plan mode: skipped modules
+    vanish from the HLO) or traced boolean arrays (mixed-position serving:
+    per-slot ``where`` select, see DESIGN.md §Serve).  ``fresh`` is a
+    per-sample bool — slots whose lazy cache was reset this step never
+    serve it, the per-slot analogue of the static ``prime`` flag."""
     B = x.shape[0]
     aux = jnp.zeros((), jnp.float32)
     scores = _empty_scores(B)
@@ -199,17 +206,23 @@ def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
         gate = params.get(gate_key)
         cache_y = (new_lazy.get(name)
                    if (lazy_cache is not None and not prime) else None)
+        p_entry = plan[0] if name == "attn" else plan[1]
+        if prime:
+            p_entry = False
         out = lazy_lib.lazy_execute(
             fn, z, gate=gate, cache_y=cache_y, mode=lazy_mode,
-            threshold=lz.threshold,
-            plan_skip=(plan[0] if name == "attn" else plan[1]) and not prime)
+            threshold=lz.threshold, plan_skip=p_entry, fresh=fresh)
         if lazy_cache is not None:
             new_lazy[name] = out.new_cache
         if out.score is not None:
             scores[name if name in scores else "block"] = out.score
         return out.y
 
-    plan_skip_attn = (lazy_mode == "plan" and plan[0]
+    # compile-time attention skip (+ mandatory KV write) only for STATIC
+    # plans; traced per-slot plans go through run_gated's where-select.
+    plan_skip_attn = (lazy_mode == "plan"
+                      and not isinstance(plan[0], jax.Array)
+                      and bool(plan[0]) and not prime
                       and lazy_cache is not None)
 
     if spec.kind in ("attn_ffn", "attn_moe"):
@@ -482,6 +495,8 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
                 lazy_cache: Optional[dict] = None,
                 lazy_mode: str = "off",
                 lazy_first_step: bool = False,
+                fresh: Optional[Array] = None,
+                plan_row: Optional[Array] = None,
                 window_override: Optional[int] = None,
                 last_logit_only: bool = False,
                 ) -> Tuple[Array, dict, Optional[dict], Dict[str, Array]]:
@@ -492,7 +507,12 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
     fills every layer cache in one pass and returns (B, S, V) logits.
 
     Lazy modes use the previous *decode step*'s module outputs as the cache
-    (beyond-paper transfer; DESIGN.md §4)."""
+    (beyond-paper transfer; DESIGN.md §4).
+
+    ``plan_row``: traced (n_layers, 2) bool — this step's plan-mode skips,
+    applied as per-sample where-selects (serving path; the unrolled
+    compile-time plan lives in decode_step_unrolled).  ``fresh``: per-sample
+    bool, suppresses lazy-cache reuse for just-admitted slots."""
     specs = build_layer_specs(cfg, window_override=window_override)
     prefix, period, nrep, suffix = factor_stack(specs)
     x = embed_inputs(params, cfg, tokens, embeds)
@@ -509,15 +529,18 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
         if lazy_cache is not None else None
     all_scores = []
 
-    def run(p, spec, x, c, lzc):
+    def run(p, spec, x, c, lzc, pl=None):
         return apply_block(
             p, cfg, spec, x, cos=cos, sin=sin, cache=c, decode_index=index,
             shared_attn=shared, lazy_cache=lzc, lazy_mode=lazy_mode,
-            prime=lazy_first_step)
+            prime=lazy_first_step, fresh=fresh,
+            plan=(pl[0], pl[1]) if pl is not None else (False, False))
 
+    n_pre, n_per = len(prefix), len(period)
     for i, (p, spec) in enumerate(zip(params["prefix"], prefix)):
         lzc = lazy_cache["prefix"][i] if lazy_cache else None
-        x, nc, nlz, sc, _ = run(p, spec, x, cache["prefix"][i], lzc)
+        pl = plan_row[i] if plan_row is not None else None
+        x, nc, nlz, sc, _ = run(p, spec, x, cache["prefix"][i], lzc, pl)
         new_cache["prefix"].append(nc)
         if new_lazy is not None:
             new_lazy["prefix"].append(nlz)
@@ -525,12 +548,13 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
 
     if nrep:
         def body(x, xs):
-            layer_params, layer_cache, layer_lazy = xs
+            layer_params, layer_cache, layer_lazy, pr = xs
             ncs, nlzs, scs = [], [], []
             for j, spec in enumerate(period):
                 lzc = layer_lazy[j] if layer_lazy is not None else None
+                pl = pr[j] if pr is not None else None
                 x, nc, nlz, sc, _ = run(layer_params[j], spec, x,
-                                        layer_cache[j], lzc)
+                                        layer_cache[j], lzc, pl)
                 ncs.append(nc)
                 nlzs.append(nlz)
                 scs.append(sc)
@@ -538,8 +562,10 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
 
         lazy_xs = (lazy_cache["period"] if lazy_cache is not None
                    else tuple(None for _ in period))
+        plan_xs = (plan_row[n_pre:n_pre + nrep * n_per].reshape(nrep, n_per, -1)
+                   if plan_row is not None else None)
         x, (pcache, plazy, pscores) = lax.scan(
-            body, x, (params["period"], cache["period"], lazy_xs))
+            body, x, (params["period"], cache["period"], lazy_xs, plan_xs))
         new_cache["period"] = pcache
         if new_lazy is not None:
             new_lazy["period"] = plazy
@@ -550,7 +576,9 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
 
     for i, (p, spec) in enumerate(zip(params["suffix"], suffix)):
         lzc = lazy_cache["suffix"][i] if lazy_cache else None
-        x, nc, nlz, sc, _ = run(p, spec, x, cache["suffix"][i], lzc)
+        pl = (plan_row[n_pre + nrep * n_per + i]
+              if plan_row is not None else None)
+        x, nc, nlz, sc, _ = run(p, spec, x, cache["suffix"][i], lzc, pl)
         new_cache["suffix"].append(nc)
         if new_lazy is not None:
             new_lazy["suffix"].append(nlz)
@@ -574,6 +602,52 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
         scores = {k: jnp.stack([s[k] for s in all_scores]).mean(0)
                   for k in all_scores[0]}
     return logits, new_cache, new_lazy, scores
+
+
+def decode_step_mixed(params: dict, cfg: ModelConfig, tokens: Array,
+                      index: Array, cache: dict, *,
+                      lazy_cache: Optional[dict] = None,
+                      lazy_mode: str = "off",
+                      fresh: Optional[Array] = None,
+                      plan_rows: Optional[Array] = None,
+                      window_override: Optional[int] = None,
+                      ) -> Tuple[Array, dict, Optional[dict], Dict[str, Array]]:
+    """Mixed-position decode over a slot pool (continuous batching).
+
+    Retires the static engine's shared-position-counter assumption: every
+    slot carries its own absolute position, ring-buffer ``pos`` vector, and
+    lazy cache, implemented as ``jax.vmap`` of the single-sequence
+    ``decode_step`` over the slot axis.
+
+      tokens:    (B,) int32 — current input token per slot
+      index:     (B,) int32 — absolute decode position per slot
+      cache:     slot-stacked decode cache, leaves (B, *single_leaf)
+                 (build with lazy.stack_for_slots over a batch-1 cache)
+      lazy_cache: slot-stacked lazy cache or None
+      fresh:     (B,) bool — slot admitted this step; its (zeroed) lazy
+                 cache is never served (per-slot analogue of the static
+                 prime flag)
+      plan_rows: (B, n_layers, 2) bool — each slot's CURRENT plan row
+                 (slots sit at different request steps, so plan booleans
+                 are per-slot traced values; DESIGN.md §Serve)
+
+    Returns (logits (B, 1, V), new_cache, new_lazy, scores {(B,)}).
+    """
+    def one(tok, idx, c, lzc, fr, pr):
+        return decode_step(params, cfg, tok[None, None], idx, c,
+                           lazy_cache=lzc, lazy_mode=lazy_mode,
+                           fresh=fr, plan_row=pr,
+                           window_override=window_override)
+
+    axes = (0, 0, 0,
+            0 if lazy_cache is not None else None,
+            0 if fresh is not None else None,
+            0 if plan_rows is not None else None)
+    logits, new_cache, new_lazy, scores = jax.vmap(one, in_axes=axes)(
+        tokens, index, cache, lazy_cache, fresh, plan_rows)
+    # strip the inner batch-1 axis the vmap wrapped: (B, 1, 1, V) -> (B, 1, V)
+    return (logits[:, 0], new_cache, new_lazy,
+            {k: v[:, 0] for k, v in scores.items()})
 
 
 def decode_step_unrolled(params: dict, cfg: ModelConfig, tokens: Array,

@@ -1,18 +1,36 @@
-"""Batched serving engine: one-shot prefill + jitted decode loop with
-optional LazyDiT-style lazy decode (masked or planned)."""
+"""Serving engines.
+
+``Engine`` — static batch: all sequences share one position counter, one
+prefill + jitted decode loop.  Supports lazy modes 'off' | 'masked'
+(per-sample select) | 'plan' (a LazyPlan's boolean rows threaded into the
+decode step as traced per-step selects).
+
+``ContinuousBatchingEngine`` — slot-based continuous batching: a fixed
+pool of decode lanes over shared stacked caches (slots.SlotPool), FCFS
+join-on-free-slot admission with lazy-aware cost accounting
+(scheduler.Scheduler), one jitted *mixed-position* decode step over all
+slots (transformer.decode_step_mixed), and eviction on EOS / output budget
+/ max_len.  Each request's greedy tokens are identical to decoding it
+alone through ``Engine`` (tests/test_serving_scheduler.py); what changes
+is request-level throughput, accounted on the service clock (metrics.py).
+"""
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Iterable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.data.synthetic import RequestSpec
 from repro.models import transformer as tf
+from repro.serving import metrics as metrics_lib
+from repro.serving.scheduler import Scheduler
+from repro.serving.slots import SlotPool
 
-Array = jax.Array
+LAZY_MODES = ("off", "masked", "plan")
 
 
 class GenerationResult(NamedTuple):
@@ -21,23 +39,73 @@ class GenerationResult(NamedTuple):
     realized_lazy_ratio: float
 
 
-class Engine:
-    """Static-batch decode engine.
+class ServingResult(NamedTuple):
+    outputs: Dict[int, np.ndarray]        # rid -> (prompt + generated) int32
+    metrics: metrics_lib.ServingMetrics
 
-    All sequences in a batch share one position counter (standard static
-    batching; continuous batching is out of scope for the dry-run target).
-    ``lazy_mode``: 'off' | 'masked' (per-sample select, faithful semantics)
-    — 'plan' mode lives in the unrolled benchmark path (benchmarks/bench_compute).
-    """
+
+def _as_plan_array(plan, n_layers: int) -> np.ndarray:
+    """Normalize LazyPlan | ndarray -> (T, n_layers, 2) bool."""
+    skip = getattr(plan, "skip", plan)
+    skip = np.asarray(skip, bool)
+    if skip.ndim != 3 or skip.shape[1] != n_layers or skip.shape[2] != 2:
+        raise ValueError(
+            f"plan must be (n_steps, {n_layers}, 2) bool, got {skip.shape}")
+    return skip
+
+
+def _row_skips(row: np.ndarray, attn_like: np.ndarray) -> int:
+    """Gated module calls a plan row removes: attn-family layers consume
+    both plan columns, single-module (SSM/xLSTM) layers only column 1."""
+    return int(row[:, 0][attn_like].sum() + row[:, 1].sum())
+
+
+def _validate_prompt(prompt, n_new: int, max_len: int) -> np.ndarray:
+    prompt = np.asarray(prompt)
+    if prompt.ndim != 2:
+        raise ValueError(f"prompt must be (B, P), got shape {prompt.shape}")
+    if not np.issubdtype(prompt.dtype, np.integer):
+        raise ValueError(
+            f"prompt must be an integer token array, got dtype {prompt.dtype}")
+    if prompt.shape[1] < 1:
+        raise ValueError("prompt must contain at least one token per row")
+    if prompt.shape[1] + n_new > max_len:
+        raise ValueError(
+            f"prompt_len {prompt.shape[1]} + n_new {n_new} exceeds "
+            f"max_len {max_len}")
+    return prompt.astype(np.int32)
+
+
+class Engine:
+    """Static-batch decode engine (one shared position counter).
+
+    ``lazy_mode``: 'off' | 'masked' | 'plan'.  Plan mode threads
+    ``plan`` — a core.lazy.LazyPlan or (T, n_layers, 2) bool array — into
+    the jitted decode step as traced per-step boolean selects (one compile;
+    the compile-time FLOP-removing variant lives in decode_step_unrolled /
+    benchmarks.bench_compute)."""
 
     def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
                  lazy_mode: str = "off",
+                 plan=None,
                  window_override: Optional[int] = None):
+        if lazy_mode not in LAZY_MODES:
+            raise ValueError(
+                f"lazy_mode must be one of {LAZY_MODES}, got {lazy_mode!r}")
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.lazy_mode = lazy_mode
         self.window_override = window_override
+        self.plan = None
+        self._attn_like = metrics_lib.attn_like_mask(
+            cfg, window_override=window_override)
+        self._modules = metrics_lib.gated_module_calls(
+            cfg, window_override=window_override)
+        if lazy_mode == "plan":
+            if plan is None:
+                raise ValueError("lazy_mode='plan' requires a plan")
+            self.plan = _as_plan_array(plan, cfg.n_layers)
 
         @functools.partial(jax.jit, static_argnames=())
         def _prefill(params, tokens, cache):
@@ -47,24 +115,28 @@ class Engine:
             return logits, cache
 
         @functools.partial(jax.jit, static_argnames=("first",))
-        def _decode(params, tok, index, cache, lazy_cache, first=False):
+        def _decode(params, tok, index, cache, lazy_cache, plan_row,
+                    first=False):
             logits, cache, lazy_cache, scores = tf.decode_step(
                 params, cfg, tok, index, cache, lazy_cache=lazy_cache,
                 lazy_mode=lazy_mode, lazy_first_step=first,
-                window_override=window_override)
+                plan_row=plan_row, window_override=window_override)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt, cache, lazy_cache, scores
 
         self._prefill = _prefill
         self._decode = _decode
 
-    def generate(self, prompt: np.ndarray, n_new: int, key=None
-                 ) -> GenerationResult:
-        """prompt: (B, P) int32.  Greedy decoding."""
+    def generate(self, prompt: np.ndarray, n_new: int) -> GenerationResult:
+        """prompt: (B, P) int32.  Greedy decoding.
+
+        Emission convention (inherited from the seed engine and pinned by
+        the continuous-batching parity tests): the prefill's argmax token
+        is the first decode *input*; the emitted tokens are the ``n_new``
+        decode *outputs*."""
         cfg = self.cfg
+        prompt = _validate_prompt(prompt, n_new, self.max_len)
         B, P = prompt.shape
-        assert P + n_new <= self.max_len
-        key = key if key is not None else jax.random.PRNGKey(0)
         cache = tf.init_decode_cache(cfg, B, self.max_len,
                                      window_override=self.window_override)
         lazy_cache = None
@@ -72,29 +144,226 @@ class Engine:
             lazy_cache = tf.init_lazy_decode_cache(
                 cfg, B, window_override=self.window_override)
 
+        # single-token prompts go through the same prefill path (S==1 decode
+        # against the fresh cache): position 0 is written and the first
+        # decode step is not special-cased.
         prompt_j = jnp.asarray(prompt, jnp.int32)
-        if P > 1:
-            logits, cache = self._prefill(self.params, prompt_j, cache)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            start = P
-        else:
-            nxt = prompt_j[:, 0]
-            start = P if P else 0
+        logits, cache = self._prefill(self.params, prompt_j, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        start = P
 
         toks = [prompt]
         score_log = []
+        plan_skips = 0
         for i in range(n_new):
             # the first lazy step primes the cache (runs every module)
             first = self.lazy_mode != "off" and i == 0
+            plan_row = None
+            if self.plan is not None:
+                row = self.plan[i % len(self.plan)]
+                if not first:
+                    plan_skips += _row_skips(row, self._attn_like)
+                plan_row = jnp.asarray(row)
             nxt, cache, lazy_cache, scores = self._decode(
                 self.params, nxt[:, None], jnp.int32(start + i), cache,
-                lazy_cache, first=first)
+                lazy_cache, plan_row, first=first)
             if scores and not first:
                 score_log.append(np.array([float(jnp.mean(v))
                                            for v in scores.values()]))
             toks.append(np.asarray(nxt)[:, None])
 
         scores_arr = np.stack(score_log) if score_log else None
-        ratio = float((scores_arr > self.cfg.lazy.threshold).mean()) \
-            if scores_arr is not None else 0.0
-        return GenerationResult(np.concatenate(toks, axis=1), scores_arr, ratio)
+        if self.plan is not None:
+            ratio = plan_skips / max(self._modules * n_new, 1)
+        elif scores_arr is not None:
+            ratio = float((scores_arr > self.cfg.lazy.threshold).mean())
+        else:
+            ratio = 0.0
+        return GenerationResult(np.concatenate(toks, axis=1), scores_arr,
+                                float(ratio))
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching with lazy-aware FCFS scheduling.
+
+    ``batch_synchronous=True`` turns admission into static batching (new
+    requests join only when the pool has fully drained) — the baseline
+    bench_serving compares against with otherwise identical machinery.
+    ``cost_budget`` caps the scheduler's lazy-aware step-cost estimate
+    (virtual seconds per decode step); None means slots are the only limit.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict, *,
+                 n_slots: int = 4, max_len: int = 512,
+                 lazy_mode: str = "off", plan=None,
+                 eos_id: Optional[int] = None,
+                 cost_budget: Optional[float] = None,
+                 batch_synchronous: bool = False,
+                 window_override: Optional[int] = None):
+        if lazy_mode not in LAZY_MODES:
+            raise ValueError(
+                f"lazy_mode must be one of {LAZY_MODES}, got {lazy_mode!r}")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.lazy_mode = lazy_mode
+        self.eos_id = eos_id
+        self.cost_budget = cost_budget
+        self.batch_synchronous = batch_synchronous
+        self.window_override = window_override
+        self._attn_like = metrics_lib.attn_like_mask(
+            cfg, window_override=window_override)
+        self.modules_per_slot = metrics_lib.gated_module_calls(
+            cfg, window_override=window_override)
+        self.plan = None
+        self.plan_ratio = 0.0
+        if lazy_mode == "plan":
+            if plan is None:
+                raise ValueError("lazy_mode='plan' requires a plan")
+            self.plan = _as_plan_array(plan, cfg.n_layers)
+            total = self.modules_per_slot * len(self.plan)
+            self.plan_ratio = sum(
+                _row_skips(r, self._attn_like) for r in self.plan) / max(total, 1)
+
+        @jax.jit
+        def _prefill(params, tokens, cache):
+            logits, cache, _, _ = tf.decode_step(
+                params, cfg, tokens, jnp.int32(0), cache,
+                window_override=window_override)
+            return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                    cache)
+
+        @jax.jit
+        def _step(params, tok, index, cache, lazy_cache, fresh, plan_rows):
+            return tf.decode_step_mixed(
+                params, cfg, tok, index, cache, lazy_cache=lazy_cache,
+                lazy_mode=lazy_mode, fresh=fresh, plan_rows=plan_rows,
+                window_override=window_override)
+
+        self._prefill = _prefill
+        self._step = _step
+
+    # ------------------------------------------------------------ internals
+    def _plan_rows(self, pool: SlotPool) -> jnp.ndarray:
+        rows = np.zeros((self.n_slots, self.cfg.n_layers, 2), bool)
+        for i in pool.active_slots():
+            s = pool.slots[i]
+            if not s.fresh:
+                rows[i] = self.plan[s.t % len(self.plan)]
+        return jnp.asarray(rows)
+
+    def _step_accounting(self, pool: SlotPool, scores
+                         ) -> Tuple[float, float]:
+        """(executed, skipped) gated module calls for this decode step.
+        Masked mode estimates per-slot skips from the layer-averaged probe
+        scores (the same statistic Engine's realized ratio thresholds)."""
+        M = self.modules_per_slot
+        executed = skipped = 0.0
+        kinds = (["attn", "ffn"] if self._attn_like.any() else [])
+        if not self._attn_like.all():
+            kinds.append("block")
+        thr = self.cfg.lazy.threshold
+        # one device->host transfer per score key, not one per (slot, kind)
+        sc = {k: np.asarray(v) for k, v in scores.items()} if scores else {}
+        for i in pool.active_slots():
+            s = pool.slots[i]
+            if self.plan is not None and not s.fresh:
+                k = _row_skips(self.plan[s.t % len(self.plan)],
+                               self._attn_like)
+            elif self.lazy_mode == "masked" and not s.fresh and sc:
+                k = M * float(np.mean([sc[k][i] > thr for k in kinds]))
+            else:
+                k = 0.0
+            executed += M - k
+            skipped += k
+        return executed, skipped
+
+    # ------------------------------------------------------------ main loop
+    def run(self, requests: Iterable[RequestSpec]) -> ServingResult:
+        """Serve a trace to completion on the virtual service clock."""
+        lazy = self.lazy_mode != "off"
+        requests = list(requests)
+        # validate the whole trace up front: a malformed request must fail
+        # fast, not abort the run mid-flight after others completed
+        for req in requests:
+            try:
+                _validate_prompt(req.prompt[None], 1, self.max_len)
+            except ValueError as e:
+                raise ValueError(f"request rid={req.rid}: {e}") from e
+        sched = Scheduler(self.n_slots, cost_budget=self.cost_budget,
+                          batch_synchronous=self.batch_synchronous)
+        sched.submit(requests)
+        pool = SlotPool(self.cfg, self.n_slots, self.max_len, lazy=lazy,
+                        window_override=self.window_override)
+        met = metrics_lib.ServingMetrics(self.n_slots, self.modules_per_slot)
+        outputs: Dict[int, np.ndarray] = {}
+        now = 0.0
+
+        while sched.has_pending() or pool.any_active():
+            if not pool.any_active():
+                na = sched.next_arrival()
+                if na is not None and na > now:
+                    now = na                      # idle: jump to next arrival
+
+            free = pool.free_slots()
+            n_active = self.n_slots - len(free)
+            admitted = sched.admit(now, len(free),
+                                   [self.plan_ratio] * n_active,
+                                   self.plan_ratio)
+            for req in admitted:
+                # the prompt plus one decode step must fit; an output budget
+                # beyond max_len is truncated by eviction, not rejected
+                prompt = _validate_prompt(req.prompt[None], 1, self.max_len)
+                cache1 = tf.init_decode_cache(
+                    self.cfg, 1, self.max_len,
+                    window_override=self.window_override)
+                tok0, cache1 = self._prefill(
+                    self.params, jnp.asarray(prompt, jnp.int32), cache1)
+                now += metrics_lib.prefill_cost(prompt.shape[1], self.n_slots)
+                i = free.pop(0)
+                pool.admit(i, req, cache1, int(tok0[0]))
+                met.record_admit(req.rid, req.arrival, now, prompt.shape[1])
+                # empty output budget, or the model's very first greedy
+                # token is EOS (a naturally empty response): complete now
+                if req.max_new <= 0 or (self.eos_id is not None
+                                        and int(tok0[0]) == self.eos_id):
+                    outputs[req.rid] = np.asarray(req.prompt, np.int32)
+                    met.record_completion(req.rid, now, 0)
+                    pool.evict(i)
+
+            active = pool.active_slots()
+            if not active:
+                continue
+
+            fresh = pool.fresh_vector() if lazy else None
+            plan_rows = self._plan_rows(pool) if self.plan is not None else None
+            logits, cache, lazy_cache, scores = self._step(
+                self.params, pool.token_vector(), pool.index_vector(),
+                pool.cache, pool.lazy_cache, fresh, plan_rows)
+            pool.cache = cache
+            if lazy:
+                pool.lazy_cache = lazy_cache
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+
+            executed, skipped = self._step_accounting(pool, scores)
+            now += metrics_lib.step_cost(executed, self.n_slots,
+                                         self.modules_per_slot)
+            met.record_step(now, len(active), sched.queue_depth(),
+                            executed, skipped, len(active))
+
+            for i in active:
+                pool.advance(i, nxt[i])
+                s = pool.slots[i]
+                if s.produced == 1:
+                    met.record_first_token(s.req.rid, now)
+                if (pool.should_evict(i)
+                        or (self.eos_id is not None
+                            and int(nxt[i]) == self.eos_id)):
+                    outputs[s.req.rid] = np.concatenate(
+                        [np.asarray(s.req.prompt, np.int32),
+                         np.asarray(s.tokens, np.int32)])
+                    met.record_completion(s.req.rid, now, s.produced)
+                    pool.evict(i)
+
+        return ServingResult(outputs, met)

@@ -1,0 +1,142 @@
+"""Serving metrics and the service-clock cost model.
+
+The container has no accelerator, so wall-clock on this host says nothing
+about served throughput: masked-mode selects and inactive slots still burn
+host FLOPs that a compiled plan (decode_step_unrolled, bench_compute) or a
+paged production runtime would never issue.  The *service clock* projects
+those measured HLO savings onto the request level instead: a decode step is
+charged
+
+    step_time = STEP_OVERHEAD + MODULE_COST * executed / (n_slots * M)
+
+where ``executed`` counts gated module calls actually run for active slots
+(skipped and idle-slot calls are free, i.e. a compacted/paged execution)
+and ``M`` is the per-slot gated-module-call count.  A full step of a full
+pool costs exactly 1.0 virtual second.  Prefilling a P-token prompt costs
+``STEP_OVERHEAD + MODULE_COST * P / n_slots``.  The same constants drive
+the scheduler's lazy-aware admission estimate (scheduler.py), so metrics
+and scheduling decisions agree.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# one full-pool, no-skip decode step == STEP_OVERHEAD + MODULE_COST == 1.0
+STEP_OVERHEAD = 0.2     # dispatch / collectives / sampling floor
+MODULE_COST = 0.8       # the gated-module compute the lazy plan can remove
+
+
+def attn_like_mask(cfg: ModelConfig, *,
+                   window_override: Optional[int] = None) -> np.ndarray:
+    """(n_layers,) bool — layers of the attn family, which carry TWO gated
+    modules (attn + ffn) and consume both plan columns; SSM/xLSTM layers
+    carry one and consume only column 1.  The single source of truth for
+    plan-skip and step-cost accounting."""
+    from repro.models.transformer import build_layer_specs
+    specs = build_layer_specs(cfg, window_override=window_override)
+    return np.array([s.kind in ("attn_ffn", "attn_moe", "parallel")
+                     for s in specs], bool)
+
+
+def gated_module_calls(cfg: ModelConfig, *,
+                       window_override: Optional[int] = None) -> int:
+    """Gated module calls per slot per decode step."""
+    mask = attn_like_mask(cfg, window_override=window_override)
+    return int(mask.sum()) + mask.size
+
+
+def step_cost(executed_calls: float, n_slots: int, modules_per_slot: int,
+              *, step_overhead: float = STEP_OVERHEAD,
+              module_cost: float = MODULE_COST) -> float:
+    """Virtual seconds for one mixed-position decode step."""
+    return step_overhead + module_cost * executed_calls / (
+        n_slots * modules_per_slot)
+
+
+def prefill_cost(prompt_len: int, n_slots: int, *,
+                 step_overhead: float = STEP_OVERHEAD,
+                 module_cost: float = MODULE_COST) -> float:
+    """Virtual seconds to prefill one P-token prompt into a free slot."""
+    return step_overhead + module_cost * prompt_len / n_slots
+
+
+class ServingMetrics:
+    """Per-step and per-request accounting for a serving run."""
+
+    def __init__(self, n_slots: int, modules_per_slot: int):
+        self.n_slots = n_slots
+        self.modules_per_slot = modules_per_slot
+        self.steps: List[Dict] = []
+        self.requests: Dict[int, Dict] = {}
+        self._executed = 0.0
+        self._skipped = 0.0
+        self._tokens_out = 0
+        self._t_end = 0.0
+
+    # ------------------------------------------------------------ recording
+    def record_admit(self, rid: int, arrival: float, now: float,
+                     prompt_len: int) -> None:
+        self.requests[rid] = {"arrival": arrival, "admit": now,
+                              "prompt_len": prompt_len,
+                              "first_token": None, "done": None, "n_out": 0}
+        self._t_end = max(self._t_end, now)
+
+    def record_step(self, now: float, n_active: int, queue_depth: int,
+                    executed_calls: float, skipped_calls: float,
+                    tokens_out: int) -> None:
+        self.steps.append({"t": now, "n_active": n_active,
+                           "queue_depth": queue_depth,
+                           "executed": executed_calls,
+                           "skipped": skipped_calls,
+                           "tokens": tokens_out})
+        self._executed += executed_calls
+        self._skipped += skipped_calls
+        self._tokens_out += tokens_out
+        self._t_end = max(self._t_end, now)
+
+    def record_first_token(self, rid: int, now: float) -> None:
+        if self.requests[rid]["first_token"] is None:
+            self.requests[rid]["first_token"] = now
+
+    def record_completion(self, rid: int, now: float, n_out: int) -> None:
+        self.requests[rid]["done"] = now
+        self.requests[rid]["n_out"] = n_out
+        self._t_end = max(self._t_end, now)
+
+    # ------------------------------------------------------------ summaries
+    def realized_lazy_ratio(self) -> float:
+        total = self._executed + self._skipped
+        return float(self._skipped / total) if total else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values() if r["done"] is not None]
+        t0 = min((r["arrival"] for r in self.requests.values()), default=0.0)
+        span = max(self._t_end - t0, 1e-9)
+        lat = np.array([r["done"] - r["arrival"] for r in done]) \
+            if done else np.zeros(1)
+        ttft = np.array([r["first_token"] - r["arrival"] for r in done
+                         if r["first_token"] is not None])
+        if ttft.size == 0:
+            ttft = np.zeros(1)
+        qd = np.array([s["queue_depth"] for s in self.steps]) \
+            if self.steps else np.zeros(1)
+        act = np.array([s["n_active"] for s in self.steps]) \
+            if self.steps else np.zeros(1)
+        return {
+            "n_requests": float(len(done)),
+            "n_steps": float(len(self.steps)),
+            "virtual_time_s": float(span),
+            "requests_per_s": float(len(done) / span),
+            "tokens_per_s": float(self._tokens_out / span),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "realized_lazy_ratio": self.realized_lazy_ratio(),
+            "mean_queue_depth": float(qd.mean()),
+            "mean_active_slots": float(act.mean()),
+        }

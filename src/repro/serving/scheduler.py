@@ -1,0 +1,86 @@
+"""Request scheduling for the continuous-batching engine.
+
+FCFS admission with join-on-free-slot: a pending request is admitted the
+moment (a) it has arrived on the virtual clock, (b) a slot is free, and
+(c) the *lazy-aware* step-cost estimate stays inside the cost budget.
+
+The lazy-aware part: each slot's planned skip budget (the fraction of its
+gated module calls a lazy plan removes) discounts its contribution to the
+estimated cost of the next decode step, using the same service-clock
+constants as metrics.py.  Under a cost budget, lazy slots therefore pack
+denser than diligent ones — the scheduler converts LazyDiT's per-request
+compute savings into admission headroom.
+
+``batch_synchronous=True`` degrades admission to static batching (join only
+when the pool has fully drained); it is the baseline bench_serving compares
+against, using identical machinery so the comparison is apples-to-apples.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, List, Optional, Sequence
+
+from repro.data.synthetic import RequestSpec
+from repro.serving import metrics as metrics_lib
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, *,
+                 cost_budget: Optional[float] = None,
+                 batch_synchronous: bool = False,
+                 step_overhead: float = metrics_lib.STEP_OVERHEAD,
+                 module_cost: float = metrics_lib.MODULE_COST):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = n_slots
+        self.cost_budget = cost_budget
+        self.batch_synchronous = batch_synchronous
+        self.step_overhead = step_overhead
+        self.module_cost = module_cost
+        self.pending: deque = deque()
+
+    # ------------------------------------------------------------ queue ops
+    def submit(self, requests: Iterable[RequestSpec]) -> None:
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self.pending.extend(reqs)
+
+    def has_pending(self) -> bool:
+        return bool(self.pending)
+
+    def queue_depth(self) -> int:
+        return len(self.pending)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.pending[0].arrival if self.pending else None
+
+    # ------------------------------------------------------------ cost model
+    def estimate_step_cost(self, slot_skip_ratios: Sequence[float]) -> float:
+        """Modeled virtual seconds of the next decode step, given each
+        active slot's planned skip ratio (0.0 = diligent, runs everything)."""
+        executed_frac = sum(1.0 - r for r in slot_skip_ratios)
+        return self.step_overhead + self.module_cost * executed_frac / self.n_slots
+
+    # ------------------------------------------------------------ admission
+    def admit(self, now: float, free_slots: int,
+              active_skip_ratios: Sequence[float],
+              new_skip_ratio: float = 0.0) -> List[RequestSpec]:
+        """Pop the FCFS-eligible requests that join this scheduling round.
+
+        ``active_skip_ratios``: planned skip ratio of each currently active
+        slot; ``new_skip_ratio``: the ratio an admitted request will run at.
+        """
+        if self.batch_synchronous and active_skip_ratios:
+            return []
+        out: List[RequestSpec] = []
+        ratios = list(active_skip_ratios)
+        while (self.pending and len(out) < free_slots
+               and self.pending[0].arrival <= now + 1e-9):
+            # progress guarantee: an empty pool always admits its first
+            # request, even under a budget below the one-slot step cost
+            if (self.cost_budget is not None and ratios
+                    and self.estimate_step_cost(ratios + [new_skip_ratio])
+                    > self.cost_budget + 1e-9):
+                break
+            out.append(self.pending.popleft())
+            ratios.append(new_skip_ratio)
+        return out

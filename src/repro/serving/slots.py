@@ -1,0 +1,122 @@
+"""Fixed-capacity slot pool over shared stacked KV / lazy caches.
+
+A slot is one decode lane of the continuous-batching engine.  Device state
+is a pair of slot-stacked cache trees (every leaf is (n_slots, *single)),
+built from batch-1 caches with lazy.stack_for_slots; requests join by
+scattering their freshly prefilled batch-1 cache into a free slot index and
+leave by simply marking the slot free (the next occupant's scatter
+overwrites everything, including the ring-buffer ``pos`` vectors, so stale
+keys can never leak across requests).
+
+Host state is per-slot bookkeeping: the request, its absolute position
+counter, decode-step counter (plan row index), and freshness flag.  The
+position counters are per-slot — the whole point of the mixed-position
+decode step (models/transformer.decode_step_mixed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import RequestSpec
+from repro.models import transformer as tf
+
+
+@dataclass
+class Slot:
+    req: Optional[RequestSpec] = None
+    index: int = 0          # absolute position of the NEXT decode write
+    produced: int = 0       # decode outputs emitted so far
+    t: int = 0              # decode-step counter (selects the plan row)
+    fresh: bool = False     # admitted this step: lazy cache must not serve
+    last_token: int = 0     # input token for the next decode step
+    tokens: List[int] = field(default_factory=list)   # decode outputs
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+class SlotPool:
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, *,
+                 lazy: bool = False, window_override: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.window_override = window_override
+        single = tf.init_decode_cache(cfg, 1, max_len,
+                                      window_override=window_override)
+        self.cache = lazy_lib.stack_for_slots(single, n_slots)
+        self.lazy_cache = None
+        if lazy:
+            self.lazy_cache = lazy_lib.stack_for_slots(
+                tf.init_lazy_decode_cache(cfg, 1,
+                                          window_override=window_override),
+                n_slots)
+        self.slots = [Slot() for _ in range(n_slots)]
+
+    # ------------------------------------------------------------ inventory
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    def any_active(self) -> bool:
+        return any(s.active for s in self.slots)
+
+    # ------------------------------------------------------------ lifecycle
+    def admit(self, i: int, req: RequestSpec, prefilled_cache,
+              first_token: int) -> None:
+        """Join ``req`` on free slot ``i`` with its prefilled batch-1 cache;
+        ``first_token`` is the prefill's greedy argmax (the first decode
+        input, matching the static Engine's semantics)."""
+        assert not self.slots[i].active, f"slot {i} is occupied"
+        self.cache = lazy_lib.slot_cache_scatter(self.cache, i, prefilled_cache)
+        if self.lazy_cache is not None:
+            self.lazy_cache = lazy_lib.slot_cache_reset(self.lazy_cache, i)
+        self.slots[i] = Slot(req=req, index=len(req.prompt), fresh=True,
+                             last_token=int(first_token))
+
+    def evict(self, i: int) -> None:
+        self.slots[i] = Slot()
+
+    def advance(self, i: int, token: int) -> None:
+        s = self.slots[i]
+        s.tokens.append(int(token))
+        s.last_token = int(token)
+        s.index += 1
+        s.produced += 1
+        s.t += 1
+        s.fresh = False
+
+    def should_evict(self, i: int) -> bool:
+        """EOS handling lives in the engine; this covers budget/capacity."""
+        s = self.slots[i]
+        return s.produced >= s.req.max_new or s.index >= self.max_len
+
+    # ------------------------------------------------- decode-step vectors
+    def token_vector(self) -> jnp.ndarray:
+        return jnp.asarray([s.last_token for s in self.slots], jnp.int32)
+
+    def index_vector(self) -> jnp.ndarray:
+        # inactive slots hold a harmless in-range position; their writes are
+        # garbage by construction and fully overwritten at next admission
+        return jnp.asarray([min(s.index, self.max_len - 1)
+                            for s in self.slots], jnp.int32)
+
+    def fresh_vector(self) -> jnp.ndarray:
+        return jnp.asarray([s.fresh for s in self.slots], bool)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s.active for s in self.slots], bool)
+
+    def step_vector(self) -> np.ndarray:
+        return np.array([s.t for s in self.slots], np.int64)

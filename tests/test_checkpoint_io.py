@@ -1,0 +1,68 @@
+"""checkpoint/io.py: save/restore roundtrip on a reduced llama3_2_1b tree."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+from repro.configs.registry import get_config
+from repro.models import transformer as tf
+
+
+def _params():
+    cfg = get_config("llama3_2_1b").reduced()
+    return cfg, tf.init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def test_roundtrip_preserves_structure_dtypes_values(tmp_path):
+    cfg, params = _params()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params, extra={"step": 7})
+
+    # restore into a template of zeros: every value must come from disk
+    template = jax.tree.map(jnp.zeros_like, params)
+    restored = restore_checkpoint(path, template)
+
+    assert (jax.tree_util.tree_structure(restored)
+            == jax.tree_util.tree_structure(params))
+    orig_leaves = jax.tree_util.tree_leaves(params)
+    rest_leaves = jax.tree_util.tree_leaves(restored)
+    assert len(orig_leaves) == len(rest_leaves) > 0
+    for a, b in zip(orig_leaves, rest_leaves):
+        assert np.asarray(b).dtype == np.asarray(a).dtype
+        assert np.asarray(b).shape == np.asarray(a).shape
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def test_roundtrip_preserves_extra_entries(tmp_path):
+    _, params = _params()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params, extra={"step": 7, "lr": 1e-3})
+    data = np.load(path)
+    assert int(data["__extra__/step"]) == 7
+    assert float(data["__extra__/lr"]) == pytest.approx(1e-3)
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    cfg, params = _params()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params)
+    bad_cfg = cfg.replace(d_ff=cfg.d_ff // 2)
+    bad_template = tf.init_lm(jax.random.PRNGKey(1), bad_cfg)
+    with pytest.raises(AssertionError):
+        restore_checkpoint(path, bad_template)
+
+
+def test_restore_applies_template_dtype(tmp_path):
+    """Restore casts to the template leaf dtype (shard-aware restore keeps
+    the caller's dtype policy, e.g. bf16 params from an f32 save)."""
+    _, params = _params()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, params)
+    template = jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16) if a.dtype == jnp.float32 else a,
+        params)
+    restored = restore_checkpoint(path, template)
+    for t, r in zip(jax.tree_util.tree_leaves(template),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.asarray(r).dtype == np.asarray(t).dtype

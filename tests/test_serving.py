@@ -66,6 +66,68 @@ def test_engine_lazy_masked_decode():
     assert np.all((res.scores >= 0) & (res.scores <= 1))
 
 
+def test_engine_single_token_prompt_goes_through_prefill():
+    """P == 1 must use the same prefill path as P > 1: position 0 is
+    written, and generation matches a manual stepwise decode."""
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.array([[5], [41]], np.int32)
+    res = Engine(cfg, params, max_len=16).generate(prompt, n_new=4)
+
+    cache = tf.init_decode_cache(cfg, 2, max_len=16)
+    lg, cache, _, _ = tf.decode_step(params, cfg, jnp.asarray(prompt),
+                                     jnp.int32(0), cache)
+    nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+    expect = [prompt]
+    for i in range(4):
+        lg, cache, _, _ = tf.decode_step(params, cfg, nxt[:, None],
+                                         jnp.int32(1 + i), cache)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)
+        expect.append(np.asarray(nxt)[:, None])
+    np.testing.assert_array_equal(res.tokens, np.concatenate(expect, axis=1))
+
+
+def test_engine_validates_prompt_early():
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=16)
+    with pytest.raises(ValueError, match="integer"):
+        eng.generate(np.zeros((2, 4), np.float32), n_new=2)
+    with pytest.raises(ValueError, match="shape"):
+        eng.generate(np.zeros(4, np.int32), n_new=2)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(np.zeros((2, 4), np.int32), n_new=100)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.generate(np.zeros((2, 0), np.int32), n_new=2)
+
+
+def test_engine_plan_mode():
+    """Plan mode threads LazyPlan rows as traced selects: tokens stay
+    parity-exact when the plan never skips, and the realized ratio reflects
+    the plan when it does."""
+    from repro.core import lazy as lazy_lib
+    cfg = tiny(lazy=LazyConfig(enabled=True, mode="plan"))
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 4)).astype(np.int32)
+    n_new = 6
+    empty = lazy_lib.uniform_plan(n_new, cfg.n_layers, 2, 0.0)
+    res_off = Engine(cfg, params, max_len=32, lazy_mode="off").generate(
+        prompt, n_new=n_new)
+    res_p0 = Engine(cfg, params, max_len=32, lazy_mode="plan",
+                    plan=empty).generate(prompt, n_new=n_new)
+    np.testing.assert_array_equal(res_off.tokens, res_p0.tokens)
+    assert res_p0.realized_lazy_ratio == 0.0
+
+    half = lazy_lib.uniform_plan(n_new, cfg.n_layers, 2, 0.5, seed=1)
+    res_p5 = Engine(cfg, params, max_len=32, lazy_mode="plan",
+                    plan=half).generate(prompt, n_new=n_new)
+    assert res_p5.tokens.shape == (2, 4 + n_new)
+    assert 0.1 < res_p5.realized_lazy_ratio < 0.7
+    with pytest.raises(ValueError, match="requires a plan"):
+        Engine(cfg, params, max_len=32, lazy_mode="plan")
+
+
 def test_masked_mode_with_diligent_gates_matches_off():
     """Untrained probes (init bias -2 -> s≈0.12 < 0.5) must never skip:
     masked-mode generation equals off-mode token-for-token."""
