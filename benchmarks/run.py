@@ -7,6 +7,9 @@
   bench_roofline      — §Roofline table from dry-run artifacts
   bench_serving       — continuous vs static batching throughput at lazy
                         ratios (emits artifacts/BENCH_serving.json)
+  bench_cache_policies — head-to-head skip/reuse policies (repro.cache)
+                        on DiT sampling + LLM decode (emits
+                        artifacts/BENCH_cache_policies.json)
 
 Prints ``name,field,...`` CSV rows.  PYTHONPATH=src python -m benchmarks.run
 
@@ -73,6 +76,11 @@ def smoke() -> list:
     # artifacts/BENCH_serving.json so the bench trajectory populates in CI
     import benchmarks.bench_serving as b_serve
     rows.extend(b_serve.run_smoke())
+
+    # cache policies head-to-head on tiny configs; emits
+    # artifacts/BENCH_cache_policies.json (uploaded as a CI artifact)
+    import benchmarks.bench_cache_policies as b_cache
+    rows.extend(b_cache.run_smoke())
     return rows
 
 
@@ -95,10 +103,12 @@ def main() -> None:
     import benchmarks.bench_kernels as b_kern
     import benchmarks.bench_roofline as b_roof
     import benchmarks.bench_serving as b_serve
+    import benchmarks.bench_cache_policies as b_cache
 
     suites = [("similarity", b_sim), ("lazy_tradeoff", b_lazy),
               ("compute", b_comp), ("kernels", b_kern),
-              ("roofline", b_roof), ("serving", b_serve)]
+              ("roofline", b_roof), ("serving", b_serve),
+              ("cache_policies", b_cache)]
     failed = 0
     for name, mod in suites:
         t0 = time.time()

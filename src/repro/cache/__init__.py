@@ -1,0 +1,25 @@
+"""repro.cache — pluggable skip/reuse policy subsystem.
+
+See policy.py for the interface/registry, policies.py for the built-in
+policies (none | stride | lazy_gate | smoothcache | static_router | plan),
+and calibrate.py for the probe pass that emits the reusable calibration
+artifact the training-free policies consume.  DESIGN.md §Cache documents
+how each policy maps onto the lazy executor's modes.
+
+``calibrate`` is intentionally not imported here: it pulls in the samplers
+(sampling/ddim, models/transformer), which themselves route decisions
+through this package — import ``repro.cache.calibrate`` explicitly.
+"""
+from repro.cache.policy import (CachePolicy, available_policies,
+                                from_legacy, get_policy, register_policy,
+                                resolve)
+from repro.cache.policies import (LazyGatePolicy, NonePolicy, PlanPolicy,
+                                  SmoothCachePolicy, StaticRouterPolicy,
+                                  StridePolicy, noop_plan_row)
+
+__all__ = [
+    "CachePolicy", "available_policies", "from_legacy", "get_policy",
+    "register_policy", "resolve",
+    "LazyGatePolicy", "NonePolicy", "PlanPolicy", "SmoothCachePolicy",
+    "StaticRouterPolicy", "StridePolicy", "noop_plan_row",
+]

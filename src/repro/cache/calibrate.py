@@ -1,0 +1,246 @@
+"""Calibration probe pass for training-free cache policies.
+
+SmoothCache's (arXiv:2411.10510) key observation: the per-module
+consecutive-step output error measured on ONE probe run is stable across
+inputs, so a single calibration pass yields a reusable skip schedule.
+This module runs that probe — a no-skip pass that still threads the lazy
+cache, so every gated module's previous-step output is available — and
+records, per (step, layer, module),
+
+    rel_err[t, l, m] = ||Y_t - Y_{t-1}||_F / ||Y_{t-1}||_F   (batch mean)
+
+with +inf on step 0 (no previous step: never skippable).  The result is a
+``CalibrationArtifact``: a small JSON any policy can load (schema
+documented in DESIGN.md §Cache) — `smoothcache` thresholds it directly,
+`static_router` uses it as skip affinities.
+
+Probes exist for both executors:
+  * ``calibrate_dit`` — DDIM sampling of the DiT denoiser (the paper's
+    setting; module axis = (attn, ffn)).
+  * ``calibrate_lm``  — autoregressive decode of the generic transformer
+    (our beyond-paper transfer; single-module SSM/xLSTM layers map onto
+    column 1 with column 0 pinned +inf, matching the plan-column
+    convention of serving/metrics.attn_like_mask).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+SCHEMA = "repro.cache.calibration/v1"
+_EPS = 1e-12
+
+
+@dataclass
+class CalibrationArtifact:
+    kind: str                    # 'dit' | 'lm'
+    arch: str
+    n_steps: int
+    n_layers: int
+    modules: Tuple[str, ...]     # plan-column names, e.g. ('attn', 'ffn')
+    rel_err: np.ndarray          # (T, L, M) float64; non-finite = never skip
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.rel_err = np.asarray(self.rel_err, np.float64)
+        expect = (self.n_steps, self.n_layers, len(self.modules))
+        if self.rel_err.shape != expect:
+            raise ValueError(f"rel_err shape {self.rel_err.shape} != "
+                             f"(n_steps, n_layers, n_modules) {expect}")
+
+    # ------------------------------------------------------------ transforms
+    def resampled(self, n_steps: int) -> np.ndarray:
+        """Nearest-step resample onto a different deployment step count."""
+        if n_steps == self.n_steps:
+            return self.rel_err
+        idx = np.round(np.linspace(0.0, self.n_steps - 1,
+                                   n_steps)).astype(int)
+        return self.rel_err[idx]
+
+    def quantile_threshold(self, q: float) -> float:
+        """Error threshold skipping ~``q`` of the calibrated module calls
+        (finite entries only) — the knob SmoothCache sweeps."""
+        finite = self.rel_err[np.isfinite(self.rel_err)]
+        if finite.size == 0:
+            return 0.0
+        return float(np.quantile(finite, q))
+
+    # ------------------------------------------------------------ (de)serialize
+    def to_json(self) -> dict:
+        err: List = np.where(np.isfinite(self.rel_err), self.rel_err,
+                             np.nan).tolist()
+
+        def scrub(x):
+            if isinstance(x, list):
+                return [scrub(v) for v in x]
+            return None if (x != x) else x          # NaN -> null
+
+        return {"schema": SCHEMA, "kind": self.kind, "arch": self.arch,
+                "n_steps": self.n_steps, "n_layers": self.n_layers,
+                "modules": list(self.modules), "rel_err": scrub(err),
+                "meta": self.meta}
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "CalibrationArtifact":
+        if obj.get("schema") != SCHEMA:
+            raise ValueError(f"not a calibration artifact "
+                             f"(schema={obj.get('schema')!r})")
+
+        def unscrub(x):
+            if isinstance(x, list):
+                return [unscrub(v) for v in x]
+            return np.inf if x is None else x       # null -> never skip
+
+        return cls(kind=obj["kind"], arch=obj["arch"],
+                   n_steps=obj["n_steps"], n_layers=obj["n_layers"],
+                   modules=tuple(obj["modules"]),
+                   rel_err=np.asarray(unscrub(obj["rel_err"]), np.float64),
+                   meta=obj.get("meta", {}))
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationArtifact":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def _rel(cur: np.ndarray, prev: np.ndarray, axes) -> float:
+    """Batch-mean relative Frobenius change between step outputs."""
+    cur = cur.astype(np.float64)
+    prev = prev.astype(np.float64)
+    num = np.sqrt(((cur - prev) ** 2).sum(axis=axes))
+    den = np.maximum(np.sqrt((prev ** 2).sum(axis=axes)), _EPS)
+    return float((num / den).mean())
+
+
+# ---------------------------------------------------------------------------
+# DiT probe
+# ---------------------------------------------------------------------------
+
+
+def calibrate_dit(params: dict, cfg, sched, *, key, labels,
+                  n_steps: int, cfg_scale: float = 1.0) -> CalibrationArtifact:
+    """Probe a DDIM sampling trajectory: run every module (an all-False
+    plan keeps the cache threaded without skipping) and profile each
+    module's consecutive-step output error."""
+    import numpy as _np
+
+    from repro.core import lazy as lazy_lib
+    from repro.sampling import ddim
+
+    plan = lazy_lib.LazyPlan(np.zeros((n_steps, cfg.n_layers, 2), bool))
+    _, aux = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                              n_steps=n_steps, cfg_scale=cfg_scale,
+                              lazy_mode="plan", plan=plan.skip,
+                              collect_traces=True)
+    traces = aux["traces"]           # list of {"attn": (L,B,N,D), "ffn": ...}
+    L = cfg.n_layers
+    rel = np.full((n_steps, L, 2), np.inf)
+    for t in range(1, len(traces)):
+        for m, name in enumerate(("attn", "ffn")):
+            cur, prev = traces[t][name], traces[t - 1][name]
+            for l in range(L):
+                rel[t, l, m] = _rel(_np.asarray(cur[l]),
+                                    _np.asarray(prev[l]), axes=(-2, -1))
+    return CalibrationArtifact(
+        kind="dit", arch=cfg.name, n_steps=n_steps, n_layers=L,
+        modules=("attn", "ffn"), rel_err=rel,
+        meta={"cfg_scale": cfg_scale, "batch": int(labels.shape[0]),
+              "sampler": "ddim"})
+
+
+# ---------------------------------------------------------------------------
+# LM decode probe
+# ---------------------------------------------------------------------------
+
+
+def _lm_layer_rows(lazy_cache, cfg, window_override) -> List[Dict[str, np.ndarray]]:
+    """Flatten a decode lazy-cache tree into per-layer module dicts in the
+    same layer order decode_step consumes plan rows (prefix, period
+    repeats, suffix)."""
+    from repro.models import transformer as tf
+
+    specs = tf.build_layer_specs(cfg, window_override=window_override)
+    prefix, period, nrep, suffix = tf.factor_stack(specs)
+    rows: List[Dict[str, np.ndarray]] = []
+    for i in range(len(prefix)):
+        rows.append({k: np.asarray(v)
+                     for k, v in lazy_cache["prefix"][i].items()})
+    for r in range(nrep):
+        for j in range(len(period)):
+            rows.append({k: np.asarray(v[r])
+                         for k, v in lazy_cache["period"][j].items()})
+    for i in range(len(suffix)):
+        rows.append({k: np.asarray(v)
+                     for k, v in lazy_cache["suffix"][i].items()})
+    return rows
+
+
+def calibrate_lm(params: dict, cfg, prompt: np.ndarray, n_steps: int, *,
+                 window_override: Optional[int] = None) -> CalibrationArtifact:
+    """Probe a greedy decode trajectory: prefill, then ``n_steps`` no-skip
+    decode steps with the lazy cache threaded, profiling each gated
+    module's consecutive-step output error.  Column 0 = attention (pinned
+    +inf for single-module SSM/xLSTM layers), column 1 = ffn/block."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tf
+
+    prompt = np.asarray(prompt, np.int32)
+    if prompt.ndim != 2:
+        raise ValueError(f"prompt must be (B, P), got {prompt.shape}")
+    B, P = prompt.shape
+    max_len = P + n_steps + 1
+    cache = tf.init_decode_cache(cfg, B, max_len,
+                                 window_override=window_override)
+    lazy_cache = tf.init_lazy_decode_cache(cfg, B,
+                                           window_override=window_override)
+
+    @jax.jit
+    def _prefill(params, tokens, cache):
+        logits, cache, _, _ = tf.decode_step(
+            params, cfg, tokens, jnp.int32(0), cache,
+            window_override=window_override)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("first",))
+    def _decode(params, tok, index, cache, lazy_cache, first):
+        logits, cache, lazy_cache, _ = tf.decode_step(
+            params, cfg, tok, index, cache, lazy_cache=lazy_cache,
+            lazy_mode="plan", lazy_first_step=first,
+            window_override=window_override)
+        return (jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                cache, lazy_cache)
+
+    nxt, cache = _prefill(params, jnp.asarray(prompt), cache)
+    rows_prev = None
+    L = cfg.n_layers
+    rel = np.full((n_steps, L, 2), np.inf)
+    for t in range(n_steps):
+        nxt, cache, lazy_cache = _decode(params, nxt[:, None],
+                                         jnp.int32(P + t), cache, lazy_cache,
+                                         first=(t == 0))
+        rows = _lm_layer_rows(lazy_cache, cfg, window_override)
+        if rows_prev is not None:
+            for l, (cur, prev) in enumerate(zip(rows, rows_prev)):
+                for name, y in cur.items():
+                    m = 0 if name == "attn" else 1
+                    rel[t, l, m] = _rel(y, prev[name], axes=(-2, -1))
+        rows_prev = rows
+    return CalibrationArtifact(
+        kind="lm", arch=cfg.name, n_steps=n_steps, n_layers=L,
+        modules=("attn", "ffn_or_block"), rel_err=rel,
+        meta={"batch": B, "prompt_len": P,
+              "window_override": window_override})

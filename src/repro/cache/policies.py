@@ -1,0 +1,241 @@
+"""Concrete cache policies.
+
+  none          — never skip; drives exec_mode 'off' (the parity baseline).
+  stride        — skip every module except on refresh steps t % stride == 0
+                  (the simplest training-free baseline).
+  lazy_gate     — the paper's learned linear probes (LazyDiT, AAAI 2025);
+                  dynamic per-sample decisions in traced code ('masked',
+                  or 'soft' for the training mixture).
+  smoothcache   — SmoothCache (Liu et al., arXiv:2411.10510): training-free.
+                  A probe run calibrates each module's consecutive-step
+                  relative error; modules whose calibrated error stays
+                  under a threshold are skipped, with a cap on consecutive
+                  reuses (the staleness guard).
+  static_router — Learning-to-Cache-style (Ma et al., arXiv:2406.01733)
+                  static per-layer schedule: a uniform-per-layer skip quota
+                  compiled into a LazyPlan from calibration (or seeded)
+                  affinities.
+  plan          — thin wrapper over an explicit core.lazy.LazyPlan (the
+                  legacy `--lazy plan` path).
+
+All static policies keep the first AND last steps always-fresh — the
+paper's observation that trajectory endpoints are least similar across
+steps (early steps shape structure; the last step is the emitted output).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.cache.policy import CachePolicy, register_policy
+from repro.core import lazy as lazy_lib
+
+
+def _as_profile(calibration, what: str) -> np.ndarray:
+    """CalibrationArtifact | ndarray -> (T, L, M) float rel-error profile."""
+    if calibration is None:
+        raise ValueError(f"{what} requires a calibration profile "
+                         "(repro.cache.calibrate) or a (T, L, M) array")
+    prof = getattr(calibration, "rel_err", calibration)
+    prof = np.asarray(prof, np.float64)
+    if prof.ndim != 3:
+        raise ValueError(f"calibration profile must be (T, L, M), "
+                         f"got shape {prof.shape}")
+    return prof
+
+
+def _resample_steps(calibration, prof: np.ndarray, n_steps: int
+                    ) -> np.ndarray:
+    """Resample a (T, L, M) profile onto ``n_steps`` rows (calibration and
+    deployment step counts need not match).  Artifacts own the rule
+    (CalibrationArtifact.resampled); the nearest-step fallback covers raw
+    arrays."""
+    if hasattr(calibration, "resampled"):
+        return np.asarray(calibration.resampled(n_steps), np.float64)
+    Tc = prof.shape[0]
+    if Tc == n_steps:
+        return prof
+    idx = np.round(np.linspace(0.0, Tc - 1, n_steps)).astype(int)
+    return prof[idx]
+
+
+# ---------------------------------------------------------------------------
+
+
+@register_policy("none")
+class NonePolicy(CachePolicy):
+    """Run everything.  The baseline every policy must token/latent-match
+    at zero skip ratio."""
+
+    exec_mode = "off"
+
+    def decide(self, step, layer, module, z=None, state=None) -> bool:
+        return False
+
+
+@register_policy("stride")
+class StridePolicy(CachePolicy):
+    """Skip every gated module except on refresh steps (t % stride == 0),
+    first/last steps always fresh.  Input- and layer-agnostic — the floor
+    any calibrated or learned policy must beat at equal ratio."""
+
+    exec_mode = "plan"
+
+    def __init__(self, stride: int = 2):
+        if stride < 2:
+            raise ValueError(f"stride must be >= 2, got {stride}")
+        self.stride = stride
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        skip = np.zeros((n_steps, n_layers, n_modules), bool)
+        for t in range(1, n_steps - 1):
+            if t % self.stride != 0:
+                skip[t] = True
+        return lazy_lib.LazyPlan(skip)
+
+    def decide(self, step, layer, module, z=None, state=None) -> bool:
+        if state is not None:
+            return super().decide(step, layer, module, z, state)
+        return step > 0 and step % self.stride != 0
+
+
+@register_policy("lazy_gate")
+class LazyGatePolicy(CachePolicy):
+    """LazyDiT's learned probes: s = sigmoid(mean_N(Z W + b)) per sample;
+    skip when s > threshold.  The decision is input-dependent, so it runs
+    inside traced code (lazy_execute modes 'masked'/'soft'); this object
+    carries the mode + threshold and reproduces the rule host-side."""
+
+    requires_gates = True
+
+    def __init__(self, threshold: float = 0.5, soft: bool = False):
+        self.threshold = float(threshold)
+        self.exec_mode = "soft" if soft else "masked"
+
+    def decide(self, step, layer, module, z=None, state=None, *,
+               gate=None, score=None) -> bool:
+        if step == 0:
+            return False                      # no cache yet: always run
+        if score is not None:
+            return bool(np.asarray(score).mean() > self.threshold)
+        if state is not None and state.get("scores") is not None:
+            sc = np.asarray(state["scores"])
+            return bool(sc[layer, module] > self.threshold)
+        if gate is not None and z is not None:
+            s = lazy_lib.gate_score(gate, z)
+            return bool(np.asarray(s).mean() > self.threshold)
+        return False                          # no information: run diligent
+
+    def distill(self, scores: np.ndarray) -> lazy_lib.LazyPlan:
+        """Batch-averaged probe scores (T, L, M) -> the calibrated static
+        plan (core.lazy.plan_from_scores) for compiled deployment."""
+        return lazy_lib.plan_from_scores(scores, threshold=self.threshold)
+
+
+@register_policy("smoothcache")
+class SmoothCachePolicy(CachePolicy):
+    """SmoothCache (arXiv:2411.10510): training-free error-threshold rule.
+
+    A probe run (repro.cache.calibrate) records each module's relative
+    consecutive-step output error  e[t,l,m] = ||Y_t - Y_{t-1}|| / ||Y_{t-1}||.
+    Module calls whose calibrated error is <= ``error_threshold`` reuse the
+    cache; ``max_skip_run`` caps consecutive reuses so no cache serves
+    stale outputs indefinitely (the same staleness bound the REFRESH
+    rotation gives target-ratio plans)."""
+
+    requires_calibration = True
+
+    def __init__(self, calibration=None, error_threshold: float = 0.1,
+                 max_skip_run: int = 3):
+        self.calibration = calibration
+        self.profile = _as_profile(calibration, "smoothcache")
+        self.error_threshold = float(error_threshold)
+        if max_skip_run < 1:
+            raise ValueError(f"max_skip_run must be >= 1, got {max_skip_run}")
+        self.max_skip_run = int(max_skip_run)
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        prof = _resample_steps(self.calibration, self.profile, n_steps)
+        if prof.shape[1:] != (n_layers, n_modules):
+            raise ValueError(
+                f"calibration profile is (T, {prof.shape[1]}, "
+                f"{prof.shape[2]}), model needs (T, {n_layers}, "
+                f"{n_modules})")
+        with np.errstate(invalid="ignore"):
+            skip = prof <= self.error_threshold
+        skip &= np.isfinite(prof)
+        skip[0] = False
+        skip[-1] = False
+        # staleness guard: force a refresh after max_skip_run reuses
+        run_len = np.zeros((n_layers, n_modules), int)
+        for t in range(n_steps):
+            hit = skip[t] & (run_len >= self.max_skip_run)
+            skip[t] &= ~hit
+            run_len = np.where(skip[t], run_len + 1, 0)
+        return lazy_lib.LazyPlan(skip)
+
+
+@register_policy("static_router")
+class StaticRouterPolicy(CachePolicy):
+    """Learning-to-Cache-style static per-layer router (arXiv:2406.01733).
+
+    L2C learns an input-independent router choosing which layers to cache
+    at each step.  The stand-in here compiles the same *shape* of schedule
+    without the training loop: per-module skip affinities (low calibrated
+    error -> attractive to cache; seeded uniform when no calibration is
+    given) fed through core.lazy.plan_with_target_ratio's per-layer mode,
+    so every layer spends the same skip quota per step."""
+
+    def __init__(self, ratio: float = 0.5, calibration=None, seed: int = 0):
+        if not 0.0 <= ratio <= 1.0:
+            raise ValueError(f"ratio must be in [0, 1], got {ratio}")
+        self.ratio = float(ratio)
+        self.seed = int(seed)
+        self.calibration = calibration
+        self.profile = (None if calibration is None
+                        else _as_profile(calibration, "static_router"))
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        if self.profile is not None:
+            prof = _resample_steps(self.calibration, self.profile, n_steps)
+            if prof.shape[1:] != (n_layers, n_modules):
+                raise ValueError(
+                    f"calibration profile is (T, {prof.shape[1]}, "
+                    f"{prof.shape[2]}), model needs (T, {n_layers}, "
+                    f"{n_modules})")
+            affinity = np.where(np.isfinite(prof), -prof, -np.inf)
+        else:
+            rng = np.random.default_rng(self.seed)
+            affinity = rng.random((n_steps, n_layers, n_modules))
+        return lazy_lib.plan_with_target_ratio(affinity, self.ratio,
+                                               per_layer=True)
+
+
+@register_policy("plan")
+class PlanPolicy(CachePolicy):
+    """Explicit LazyPlan wrapper — the legacy `--lazy plan` path expressed
+    as a policy, so pre-built/saved plans keep working unchanged."""
+
+    def __init__(self, plan=None):
+        if plan is None:
+            raise ValueError("lazy_mode='plan' requires a plan")
+        skip = np.asarray(getattr(plan, "skip", plan), bool)
+        if skip.ndim != 3:
+            raise ValueError(
+                f"plan must be (n_steps, n_layers, n_modules) bool, "
+                f"got shape {skip.shape}")
+        self.plan = lazy_lib.LazyPlan(skip)
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        T, L, M = self.plan.skip.shape
+        if (L, M) != (n_layers, n_modules):
+            raise ValueError(
+                f"plan must be (n_steps, {n_layers}, {n_modules}) bool, "
+                f"got {self.plan.skip.shape}")
+        return self.plan
+
+
+def noop_plan_row(n_layers: int, n_modules: int = 2) -> np.ndarray:
+    """All-False plan row — the no-skip baseline for HLO comparisons."""
+    return np.zeros((n_layers, n_modules), bool)

@@ -1,0 +1,194 @@
+"""Cache-policy interface and registry (`repro.cache`).
+
+LazyDiT's learned gates are ONE policy for deciding when a module's
+previous-step output is similar enough to reuse.  SmoothCache
+(arXiv:2411.10510) shows a training-free calibrate-then-threshold rule
+works too; Learning-to-Cache (arXiv:2406.01733) shows a static per-layer
+router does as well.  This package makes the skip/reuse decision a
+first-class object so policies compose with every executor in the repo —
+DiT DDIM sampling, static-batch LLM decode, and mixed-position continuous
+batching — and can be benchmarked head-to-head
+(benchmarks/bench_cache_policies.py).
+
+Execution contract (DESIGN.md §Cache): policies decide, the existing lazy
+executor (core/lazy.lazy_execute) applies.  A policy declares which
+executor mode carries its decisions:
+
+  * exec_mode 'off'           — never skip (the `none` baseline);
+  * exec_mode 'masked'/'soft' — the decision is *dynamic* (input-dependent)
+    and lives in traced code (the learned probes); the policy carries the
+    mode + threshold, and `decide` reproduces the comparison host-side;
+  * exec_mode 'plan'          — the decision is *static*: the policy
+    compiles a core.lazy.LazyPlan and serves per-step boolean rows; at
+    trace time a static row removes the module from the HLO (the measured
+    FLOP saving, `dist/hlo`).
+
+State protocol: ``init_state`` builds a host-side dict (compiled plan,
+step counter, last observed scores), ``decide``/``plan_row`` read it, and
+``update_state`` advances it once per sampling/decode step.  State is
+plain data so it can ride in slot-cache payloads (core/lazy slot helpers).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple, Type
+
+import numpy as np
+
+from repro.core import lazy as lazy_lib
+
+EXEC_MODES = ("off", "masked", "soft", "plan")
+
+
+class CachePolicy:
+    """Base skip/reuse policy.
+
+    Subclasses override ``compile_plan`` (static policies) or ``decide``
+    (dynamic policies).  ``module`` indices follow the repo-wide plan
+    column convention: column 0 = attention, column 1 = ffn (or the whole
+    block for single-module SSM/xLSTM layers).
+    """
+
+    name: str = "base"
+    exec_mode: str = "plan"
+    threshold: float = 0.5          # dynamic-decision threshold (probes)
+    requires_gates: bool = False
+    requires_calibration: bool = False
+
+    # ------------------------------------------------------------ state
+    def init_state(self, *, n_steps: int, n_layers: int,
+                   n_modules: int = 2) -> Dict:
+        return {"step": 0, "n_steps": n_steps,
+                "plan": self.compile_plan(n_steps, n_layers, n_modules),
+                "scores": None}
+
+    def update_state(self, state: Dict, *, step: Optional[int] = None,
+                     scores=None) -> Dict:
+        """Advance the host-side state one step; ``scores`` is the last
+        observed (layer-averaged) probe-score mapping, if any."""
+        state = dict(state)
+        state["step"] = (state["step"] + 1) if step is None else step + 1
+        if scores is not None:
+            state["scores"] = scores
+        return state
+
+    # ------------------------------------------------------------ schedule
+    def compile_plan(self, n_steps: int, n_layers: int,
+                     n_modules: int = 2) -> Optional[lazy_lib.LazyPlan]:
+        """Full static (n_steps, n_layers, n_modules) schedule, or None for
+        dynamic policies."""
+        return None
+
+    def plan_row(self, step: int, state: Optional[Dict] = None
+                 ) -> Optional[np.ndarray]:
+        """This step's (n_layers, n_modules) boolean skip row (static
+        policies; rows cycle when the executor runs past the plan length),
+        or None when the decision is dynamic."""
+        plan = state.get("plan") if state else None
+        if plan is None:
+            return None
+        return plan.skip[step % plan.skip.shape[0]]
+
+    # ------------------------------------------------------------ decision
+    def decide(self, step: int, layer: int, module: int, z=None,
+               state: Optional[Dict] = None) -> bool:
+        """Skip module ``module`` of layer ``layer`` at step ``step``?
+
+        The host-side reference decision — the single place a policy's rule
+        is written down.  Static policies answer from the compiled plan;
+        dynamic policies answer from observed scores (or ``z`` + gate
+        params when provided).  Traced executors apply the *same* rule via
+        lazy_execute's mode machinery.
+        """
+        row = self.plan_row(step, state)
+        if row is None:
+            return False
+        return bool(row[layer, module])
+
+    def expected_skip_ratio(self, n_steps: int, n_layers: int,
+                            n_modules: int = 2) -> float:
+        """Planned fraction of gated module calls removed (0 for dynamic
+        policies — their ratio is realized, not planned)."""
+        plan = self.compile_plan(n_steps, n_layers, n_modules)
+        return plan.lazy_ratio if plan is not None else 0.0
+
+    def describe(self) -> Dict:
+        return {"name": self.name, "exec_mode": self.exec_mode,
+                "requires_gates": self.requires_gates,
+                "requires_calibration": self.requires_calibration}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+_REGISTRY: Dict[str, Type[CachePolicy]] = {}
+
+
+def register_policy(name: str) -> Callable[[Type[CachePolicy]],
+                                           Type[CachePolicy]]:
+    def deco(cls: Type[CachePolicy]) -> Type[CachePolicy]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: str, **kwargs) -> CachePolicy:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown cache policy {name!r}; "
+                         f"registered: {available_policies()}")
+    return _REGISTRY[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Legacy-flag bridge — the old `--lazy off|masked|plan` surface maps onto
+# policies so every executor has exactly one decision path.
+# ---------------------------------------------------------------------------
+
+
+def from_legacy(lazy_mode: str, plan=None,
+                threshold: float = 0.5) -> CachePolicy:
+    """Map the pre-policy (lazy_mode, plan) calling convention onto a
+    policy object.  Kept so `--lazy` CLI flags and existing call sites
+    remain aliases rather than a second code path."""
+    if lazy_mode == "off":
+        return get_policy("none")
+    if lazy_mode in ("masked", "soft"):
+        return get_policy("lazy_gate", threshold=threshold,
+                          soft=(lazy_mode == "soft"))
+    if lazy_mode == "plan":
+        if plan is None:
+            raise ValueError("lazy_mode='plan' requires a plan")
+        return get_policy("plan", plan=plan)
+    raise ValueError(
+        f"lazy_mode must be one of ('off', 'masked', 'soft', 'plan'), "
+        f"got {lazy_mode!r}")
+
+
+def resolve(policy=None, *, lazy_mode: str = "off", plan=None,
+            threshold: float = 0.5) -> CachePolicy:
+    """Normalize (policy | name | legacy flags) -> a CachePolicy instance.
+
+    ``policy`` wins when given (a CachePolicy or registered name); the
+    legacy (lazy_mode, plan) pair is the fallback alias path.
+    """
+    if policy is None:
+        return from_legacy(lazy_mode, plan=plan, threshold=threshold)
+    if isinstance(policy, str):
+        if policy == "lazy_gate":
+            # the caller's threshold (cfg.lazy.threshold at the executors)
+            # must reach the gate policy, or the name form would decide
+            # differently from the legacy 'masked' alias
+            return get_policy(policy, threshold=threshold)
+        if policy == "plan":
+            return get_policy(policy, plan=plan)
+        return get_policy(policy)
+    if not isinstance(policy, CachePolicy):
+        raise TypeError(f"policy must be a CachePolicy or registered name, "
+                        f"got {type(policy).__name__}")
+    return policy

@@ -83,10 +83,11 @@ def _not_fresh(fresh: Array, ndim: int) -> Array:
 def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
                  gate: Optional[dict],
                  cache_y: Optional[Array],
-                 mode: str,
+                 mode: str = "off",
                  threshold: float = 0.5,
                  plan_skip=False,
-                 fresh: Optional[Array] = None) -> LazyOut:
+                 fresh: Optional[Array] = None,
+                 policy=None) -> LazyOut:
     """Run/skip one gated module.
 
     ``fn`` computes the module on the modulated input ``z``; ``cache_y`` is
@@ -99,7 +100,16 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
     decision is a per-slot ``where`` select; see DESIGN.md §Serve).
     ``fresh`` (per-sample bool) marks slots whose lazy cache was just reset
     (request admitted this step): a fresh slot never serves its cache.
+
+    ``policy`` (repro.cache.CachePolicy, duck-typed to avoid a circular
+    import) is the single authority on mode + threshold when given: every
+    executor routes its skip decision through one policy object
+    (DESIGN.md §Cache); the bare ``mode``/``threshold`` args remain as the
+    legacy alias path.
     """
+    if policy is not None:
+        mode = policy.exec_mode
+        threshold = getattr(policy, "threshold", threshold)
     if mode == "off" or (gate is None and mode != "plan"):
         y = fn(z)
         return LazyOut(y, y, None)
@@ -248,10 +258,16 @@ def plan_from_scores(scores: np.ndarray, threshold: float = 0.5) -> LazyPlan:
 
 
 def plan_with_target_ratio(scores: np.ndarray, target: float,
-                           per_step: bool = True) -> LazyPlan:
+                           per_step: bool = True,
+                           per_layer: bool = False) -> LazyPlan:
     """Pick the top-q scoring module calls to hit a target lazy ratio
     — the knob the paper turns via the penalty rho, exposed directly
     for deployment ('50% lazy ratio' rows of Tables 1/2).
+
+    Every mode keeps the FIRST and LAST steps always-fresh: the paper's
+    similarity analysis (§3.2) shows trajectory endpoints are least similar
+    across steps — early steps shape structure, and the final step is the
+    emitted output, so neither may serve a stale cache.
 
     ``per_step=True`` allocates the skip budget uniformly per sampling step
     AND rotates a forced-refresh hole (period REFRESH): a static plan that
@@ -259,35 +275,71 @@ def plan_with_target_ratio(scores: np.ndarray, target: float,
     trajectory, which the paper's dynamic gates never do — the refresh
     rotation recovers that behaviour in a compiled plan.  The rotation caps
     the achievable per-step ratio at 1 - 1/REFRESH (0.75): targets above
-    that are clipped to the feasible set, not errored."""
+    that are clipped to the feasible set, not errored.
+
+    ``per_layer=True`` (overrides ``per_step``) additionally pins a uniform
+    per-LAYER quota each step — the Learning-to-Cache-style router shape
+    (repro.cache.StaticRouterPolicy): no layer may hog the skip budget, so
+    depth-local error cannot concentrate."""
     REFRESH = 4
     s = np.asarray(scores, np.float64).copy()
     T = s.shape[0]
     skip = np.zeros_like(s, bool)
-    if target <= 0 or T < 2:
+    # T < 3: every step is the first or the last -> nothing may skip
+    if target <= 0 or T < 3:
         return LazyPlan(skip)
+    last = T - 1
+    n_skippable = T - 2
+
+    def pick(flat: np.ndarray, allowed: np.ndarray, n: int) -> np.ndarray:
+        order = [j for j in np.argsort(flat)
+                 if allowed[j] and np.isfinite(flat[j])]
+        idx = order[-min(n, len(order)):] if n else []
+        sk = np.zeros(flat.size, bool)
+        sk[idx] = True
+        return sk
+
+    if per_layer:
+        n_layers = s.shape[1]
+        m = s[0, 0].size if s.ndim > 2 else 1
+        # Bresenham accumulation of the exact per-layer-per-step quota:
+        # with few modules per layer (m = 2) an integer quota quantizes
+        # the achievable ratios to multiples of ~1/m, so small targets
+        # would round to an empty plan — spreading floor/ceil quotas over
+        # steps hits the target in aggregate while every layer still
+        # spends the same budget each step.
+        q_exact = target * T * m / n_skippable
+        acc = taken = 0.0
+        for t in range(1, last):
+            acc += q_exact
+            quota = min(int(round(acc - taken)), m)
+            taken += quota
+            for l in range(n_layers):
+                flat = s[t, l].reshape(-1)
+                # the refresh rotation indexes modules globally so holes
+                # still rotate across layers
+                gidx = l * m + np.arange(m)
+                allowed = gidx % REFRESH != t % REFRESH
+                skip[t, l] = pick(flat, allowed, quota).reshape(s.shape[2:])
+        return LazyPlan(skip)
+
     if per_step:
         per = s[0].size
-        n_skip = int(round(target * T * per / max(T - 1, 1)))
-        n_skip = min(n_skip, per)
-        for t in range(1, T):
+        n_skip = min(int(round(target * T * per / n_skippable)), per)
+        for t in range(1, last):
             flat = s[t].reshape(-1)
             # forced refresh: module j may not skip on its refresh step
-            allowed = np.ones(per, bool)
-            allowed[np.arange(per) % REFRESH == t % REFRESH] = False
-            order = np.argsort(flat)
-            order = [j for j in order if allowed[j] and np.isfinite(flat[j])]
-            idx = order[-min(n_skip, len(order)):] if n_skip else []
-            sk = np.zeros(per, bool)
-            sk[idx] = True
-            skip[t] = sk.reshape(s[t].shape)
+            allowed = np.arange(per) % REFRESH != t % REFRESH
+            skip[t] = pick(flat, allowed, n_skip).reshape(s[t].shape)
         return LazyPlan(skip)
-    s[0] = -np.inf                       # never skip the first step
+
+    s[0] = -np.inf                       # never skip the first step...
+    s[last] = -np.inf                    # ...or the last
     flat = s.reshape(-1)
     # pick indices, not a threshold compare: a `s >= thresh` select would
-    # over-skip on duplicate scores and — for targets above (T-1)/T, where
-    # the budget exceeds the finite entries — sweep in the -inf step-0
-    # sentinels themselves.
+    # over-skip on duplicate scores and — for targets above (T-2)/T, where
+    # the budget exceeds the finite entries — sweep in the first/last-step
+    # -inf sentinels themselves.
     n_skip = min(int(round(target * flat.size)), int(np.isfinite(flat).sum()))
     if n_skip == 0:
         return LazyPlan(skip)

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
 from repro.configs.base import LazyConfig, ModelConfig, InputShape
 from repro.configs.registry import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,
                                     long_context_policy)
@@ -70,6 +72,50 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
         out["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
         out["index"] = jax.ShapeDtypeStruct((), jnp.int32)
     return out
+
+
+# ---------------------------------------------------------------------------
+# cache-policy plan rows (decode dry-runs)
+# ---------------------------------------------------------------------------
+
+
+def policy_plan_step(cfg: ModelConfig, opts: dict) -> np.ndarray:
+    """--policy <name> -> one (n_layers, 2) static plan row for the decode
+    dry-run (the compiled HLO drops the skipped modules; dist/hlo then
+    quantifies the saving).  Row ``--policy-step`` of the policy's compiled
+    schedule is used — an odd mid-trajectory default, since first/last
+    steps are always fresh and even steps are stride refresh (all-fresh)
+    rows."""
+    name = opts["policy"]
+    if name == "none":
+        return cache_lib.noop_plan_row(cfg.n_layers)    # no-skip baseline
+    kw = {}
+    if name == "stride":
+        kw["stride"] = int(opts.get("stride") or 2)
+    if name in ("smoothcache", "static_router") and opts.get("calibration"):
+        kw["calibration"] = calibrate_lib.CalibrationArtifact.load(
+            opts["calibration"])
+    if name == "smoothcache":
+        if "calibration" not in kw:
+            raise ValueError("--policy smoothcache needs --calibration "
+                             "<artifact.json> (repro.cache.calibrate)")
+        thr = opts.get("error_threshold")
+        kw["error_threshold"] = (
+            thr if thr is not None
+            else kw["calibration"].quantile_threshold(
+                opts.get("policy_ratio", 0.5)))
+    if name == "static_router":
+        kw["ratio"] = opts.get("policy_ratio", 0.5)
+    pol = cache_lib.get_policy(name, **kw)
+    steps = max(int(opts.get("policy_steps") or 8), 3)
+    plan = pol.compile_plan(steps, cfg.n_layers, 2)
+    if plan is None:
+        raise ValueError(f"policy {name!r} compiles no static plan; the "
+                         "dry-run needs compile-time rows (use "
+                         "stride/smoothcache/static_router, or 'none' for "
+                         "the no-skip baseline)")
+    t = int(opts.get("policy_step", 3)) % steps
+    return np.asarray(plan.skip[t], bool)
 
 
 # ---------------------------------------------------------------------------
@@ -162,11 +208,16 @@ def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
                               shard_heads=opts.get("shard_cache_heads", False))
 
     lazy_ratio = opts.get("lazy_plan")
-    if lazy_ratio is not None:
+    if lazy_ratio is not None or opts.get("policy"):
         # §Perf: static lazy plan, layers unrolled -> skipped modules absent
-        # from the compiled HLO (the paper's technique as deployed on TPU)
-        rng = np.random.default_rng(0)
-        plan_step = rng.random((cfg.n_layers, 2)) < lazy_ratio
+        # from the compiled HLO (the paper's technique as deployed on TPU).
+        # --policy routes the row through the cache-policy subsystem;
+        # --lazy-plan <ratio> stays as the random-row alias.
+        if opts.get("policy"):
+            plan_step = policy_plan_step(cfg, opts)
+        else:
+            rng = np.random.default_rng(0)
+            plan_step = rng.random((cfg.n_layers, 2)) < lazy_ratio
         lazy_abs = jax.eval_shape(
             lambda: tf.init_lazy_decode_cache(cfg, B,
                                               window_override=window_override))
@@ -255,7 +306,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             tag: str = "", opts: Optional[dict] = None) -> dict:
     opts = opts or {}
     cfg = get_config(arch)
-    if opts.get("lazy_plan") is None:
+    if opts.get("lazy_plan") is None and not opts.get("policy"):
         # baseline dry-runs measure the un-gated model; lazy variants keep
         # their probes (the paper's added layer must be in the program).
         cfg = cfg.replace(lazy=LazyConfig(enabled=False))
@@ -319,8 +370,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         "window_override": window_override,
         "seq_parallel": seq_parallel, "remat": remat,
         "tag": tag,
+        # identity checks, not ==: 0 and 0.0 are legitimate flag values
+        # (e.g. --error-threshold 0.0) and must not match False
         "opts": {k: v for k, v in opts.items()
-                 if v not in (None, False, "fsdp", "hd")},
+                 if v is not None and v is not False
+                 and v not in ("", "fsdp", "hd")
+                 and not (k.startswith("policy_") and not opts.get("policy"))
+                 and not (k == "stride" and opts.get("policy") != "stride")},
         "n_params": n_params,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
@@ -370,6 +426,28 @@ def main():
     ap.add_argument("--shard-cache-heads", action="store_true")
     ap.add_argument("--cache-mode", default=None, choices=["heads", "seq"])
     ap.add_argument("--lazy-plan", type=float, default=None)
+    # cache-policy plan rows (repro.cache; supersedes --lazy-plan, which
+    # stays as the random-row alias)
+    ap.add_argument("--policy", default=None,
+                    choices=["none", "stride", "smoothcache",
+                             "static_router"],
+                    help="plan-compiling cache policy (repro.cache); "
+                         "dynamic policies (lazy_gate) have no static row "
+                         "to compile")
+    ap.add_argument("--policy-ratio", type=float, default=0.5,
+                    help="target ratio (static_router) / threshold "
+                         "quantile fallback (smoothcache)")
+    ap.add_argument("--policy-step", type=int, default=3,
+                    help="which schedule row the decode step compiles "
+                         "(odd default: even steps are stride refresh "
+                         "rows)")
+    ap.add_argument("--policy-steps", type=int, default=8,
+                    help="schedule horizon the policy compiles")
+    ap.add_argument("--calibration", default="",
+                    help="calibration artifact JSON for smoothcache / "
+                         "static_router")
+    ap.add_argument("--error-threshold", type=float, default=None)
+    ap.add_argument("--stride", type=int, default=2)
     ap.add_argument("--moe-token-dp", action="store_true")
     ap.add_argument("--moe-shard-map", action="store_true")
     ap.add_argument("--mlstm-shard", default="hd", choices=["hd", "none"])
@@ -379,6 +457,13 @@ def main():
             "shard_cache_heads": args.shard_cache_heads,
             "cache_mode": args.cache_mode,
             "lazy_plan": args.lazy_plan,
+            "policy": args.policy,
+            "policy_ratio": args.policy_ratio,
+            "policy_step": args.policy_step,
+            "policy_steps": args.policy_steps,
+            "calibration": args.calibration,
+            "error_threshold": args.error_threshold,
+            "stride": args.stride,
             "moe_token_dp": args.moe_token_dp,
             "moe_shard_map": args.moe_shard_map,
             "mlstm_shard": args.mlstm_shard,

@@ -1,12 +1,19 @@
 """Serving launcher: static-batch greedy decode or a trace-driven
-continuous-batching workload, with optional lazy modes.
+continuous-batching workload, with a pluggable cache policy.
 
-  # static batch, masked lazy decode
+  # static batch, masked lazy decode (legacy alias for --policy lazy_gate)
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2_9b --lazy masked
 
   # static batch under a 50% uniform lazy plan
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
       --lazy plan --lazy-ratio 0.5
+
+  # any registered cache policy (repro.cache); smoothcache/static_router
+  # self-calibrate with a quick probe decode unless --calibration is given
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
+      --policy smoothcache --error-threshold 0.15
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
+      --policy static_router --lazy-ratio 0.5 --workload
 
   # continuous batching over a synthetic Poisson trace with mixed lengths
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
@@ -18,6 +25,8 @@ import time
 import jax
 import numpy as np
 
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
 from repro.checkpoint.io import restore_checkpoint
 from repro.configs.base import LazyConfig
 from repro.configs.registry import get_config
@@ -38,14 +47,82 @@ def build_plan(args, cfg, n_steps: int) -> lazy_lib.LazyPlan:
                                  seed=args.seed)
 
 
+def _calibration(args, cfg, params):
+    """--calibration loads a saved artifact; otherwise a quick probe decode
+    (repro.cache.calibrate.calibrate_lm) self-calibrates on the spot."""
+    if args.calibration:
+        art = calibrate_lib.CalibrationArtifact.load(args.calibration)
+        print(f"calibration: {args.calibration} (kind={art.kind} "
+              f"arch={art.arch} T={art.n_steps})")
+        return art
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+    print(f"calibration: none given — probing {args.calib_steps} decode "
+          f"steps in-process")
+    art = calibrate_lib.calibrate_lm(params, cfg, prompt, args.calib_steps)
+    if args.save_calibration:
+        print(f"calibration saved -> {art.save(args.save_calibration)}")
+    return art
+
+
+def build_policy(args, cfg, params, n_steps: int):
+    """--policy <name> -> a repro.cache policy; '' defers to the legacy
+    --lazy flags (which the engines map onto policies internally)."""
+    name = args.policy
+    if not name:
+        return None
+    if name == "plan":
+        return cache_lib.get_policy("plan", plan=build_plan(args, cfg,
+                                                            n_steps).skip)
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=args.stride)
+    if name == "lazy_gate":
+        return cache_lib.get_policy("lazy_gate", threshold=cfg.lazy.threshold)
+    if name == "smoothcache":
+        art = _calibration(args, cfg, params)
+        thr = (args.error_threshold if args.error_threshold is not None
+               else art.quantile_threshold(args.lazy_ratio))
+        return cache_lib.get_policy("smoothcache", calibration=art,
+                                    error_threshold=thr)
+    if name == "static_router":
+        art = (_calibration(args, cfg, params)
+               if args.calibration or args.calibrate else None)
+        return cache_lib.get_policy("static_router", ratio=args.lazy_ratio,
+                                    calibration=art, seed=args.seed)
+    return cache_lib.get_policy(name)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_2_1b")
-    ap.add_argument("--lazy", default="off", choices=["off", "masked", "plan"])
+    ap.add_argument("--policy", default="",
+                    choices=[""] + list(cache_lib.available_policies()),
+                    help="cache policy (repro.cache); supersedes --lazy, "
+                         "which stays as an alias")
+    ap.add_argument("--lazy", default="off", choices=["off", "masked", "plan"],
+                    help="legacy alias: off->none, masked->lazy_gate, "
+                         "plan->plan policy")
     ap.add_argument("--lazy-ratio", type=float, default=0.5,
-                    help="uniform-plan skip ratio for --lazy plan")
+                    help="skip ratio: uniform plan for --lazy plan, target "
+                         "ratio for --policy static_router, threshold "
+                         "quantile fallback for --policy smoothcache")
     ap.add_argument("--plan", default="",
                     help="path to a saved (T, L, 2) bool skip plan")
+    ap.add_argument("--calibration", default="",
+                    help="saved calibration artifact JSON "
+                         "(repro.cache.calibrate)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="force an in-process probe calibration even for "
+                         "policies that can run without one")
+    ap.add_argument("--save-calibration", default="",
+                    help="write the in-process probe calibration here")
+    ap.add_argument("--calib-steps", type=int, default=16,
+                    help="probe decode steps for in-process calibration")
+    ap.add_argument("--error-threshold", type=float, default=None,
+                    help="smoothcache relative-error threshold (default: "
+                         "the --lazy-ratio quantile of calibrated errors)")
+    ap.add_argument("--stride", type=int, default=2,
+                    help="refresh period for --policy stride")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--n-new", type=int, default=16)
@@ -62,11 +139,15 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    if args.lazy != "off":
-        cfg = cfg.replace(lazy=LazyConfig(enabled=True, mode=args.lazy))
+    needs_gates = (args.policy == "lazy_gate"
+                   or (not args.policy and args.lazy != "off"))
+    if needs_gates:
+        mode = args.lazy if args.lazy != "off" else "masked"
+        cfg = cfg.replace(lazy=LazyConfig(enabled=True, mode=mode))
     params = tf.init_lm(jax.random.PRNGKey(0), cfg)
     if args.ckpt:
         params = restore_checkpoint(args.ckpt, params)
+    policy_label = args.policy or f"lazy:{args.lazy}"
 
     if args.workload:
         # two prompt-length buckets (like bench_serving) bound the jitted
@@ -75,17 +156,18 @@ def main():
                               mean_interarrival=1.0 / args.arrival_rate,
                               short_prompt=(4, 4), long_prompt=(12, 12))
         max_len = max(len(r.prompt) + r.max_new for r in trace) + 8
+        policy = build_policy(args, cfg, params, n_steps=16)
         plan = (build_plan(args, cfg, n_steps=16)
-                if args.lazy == "plan" else None)
+                if policy is None and args.lazy == "plan" else None)
         eng = ContinuousBatchingEngine(cfg, params, n_slots=args.n_slots,
                                        max_len=max_len, lazy_mode=args.lazy,
-                                       plan=plan)
+                                       plan=plan, policy=policy)
         t0 = time.perf_counter()
         res = eng.run(trace)
         wall = time.perf_counter() - t0
         s = res.metrics.summary()
         n_tok = sum(len(res.outputs[r.rid]) - len(r.prompt) for r in trace)
-        print(f"arch={cfg.name} lazy={args.lazy} policy=continuous "
+        print(f"arch={cfg.name} policy={policy_label} batching=continuous "
               f"slots={args.n_slots} requests={len(trace)}")
         print(f"  service clock : {s['requests_per_s']:.3f} req/s, "
               f"{s['tokens_per_s']:.2f} tok/s over {s['virtual_time_s']:.2f}s")
@@ -99,16 +181,17 @@ def main():
               f"({n_tok / max(wall, 1e-9):.1f} tok/s)")
         return
 
+    policy = build_policy(args, cfg, params, n_steps=args.n_new)
     plan = build_plan(args, cfg, n_steps=args.n_new) \
-        if args.lazy == "plan" else None
+        if policy is None and args.lazy == "plan" else None
     eng = Engine(cfg, params, max_len=args.prompt_len + args.n_new + 8,
-                 lazy_mode=args.lazy, plan=plan)
+                 lazy_mode=args.lazy, plan=plan, policy=policy)
     prompt = np.random.default_rng(args.seed).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     t0 = time.perf_counter()
     res = eng.generate(prompt, n_new=args.n_new)
     wall = time.perf_counter() - t0
-    print(f"arch={cfg.name} lazy={args.lazy}")
+    print(f"arch={cfg.name} policy={policy_label}")
     for row in res.tokens:
         print("  ", row.tolist())
     print(f"tokens/sec: {args.batch * args.n_new / max(wall, 1e-9):.1f} "

@@ -136,10 +136,17 @@ def _modulate(x: Array, shift: Array, scale: Array) -> Array:
 def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
                  lazy_cache: Optional[dict], lazy_mode: str,
                  plan: Tuple[bool, bool] = (False, False),
-                 prime: bool = False):
+                 prime: bool = False,
+                 policy=None):
     """One DiT block.  ``prime=True`` (first sampling step): run every module
-    but record outputs into the lazy cache.  Returns (x, new_lazy, scores)."""
+    but record outputs into the lazy cache.  Returns (x, new_lazy, scores).
+
+    ``policy`` (repro.cache.CachePolicy) is the skip-decision authority
+    when given — it supplies the lazy-execution mode and threshold; the
+    bare ``lazy_mode`` arg is the legacy alias path."""
     d = cfg.d_model
+    if policy is not None:
+        lazy_mode = policy.exec_mode
     mod = jax.nn.silu(c) @ blk["mod"]["w"] + blk["mod"]["b"]       # (B, 6D)
     sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
 
@@ -152,7 +159,8 @@ def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
             cache_y = lazy_cache.get(name)
         out = lazy_lib.lazy_execute(
             fn, z, gate=blk.get(gate_key), cache_y=cache_y, mode=lazy_mode,
-            threshold=cfg.lazy.threshold, plan_skip=plan_skip and not prime)
+            threshold=cfg.lazy.threshold, plan_skip=plan_skip and not prime,
+            policy=policy)
         if lazy_cache is not None:
             new_lazy[name] = out.new_cache
         if out.score is not None:
@@ -182,6 +190,7 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
                 lazy_mode: str = "off",
                 plan_row: Optional[np.ndarray] = None,
                 first_step: bool = False,
+                policy=None,
                 ) -> Tuple[Array, Optional[dict], Dict[str, Array]]:
     """One denoiser evaluation.
 
@@ -191,8 +200,12 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
     lazy_cache: {"attn": (L,B,N,D), "ffn": (L,B,N,D)} previous-step module
     outputs, or None on the first sampling step.
     plan_row: (L, 2) static booleans for 'plan' mode (unrolled layers).
+    policy: cache policy (repro.cache) supplying the execution mode and
+    threshold; ``lazy_mode`` is the legacy alias when absent.
     Returns (eps_and_sigma (B,H,W,2C), new_lazy_cache, scores (L,B) per module).
     """
+    if policy is not None:
+        lazy_mode = policy.exec_mode
     p = cfg.dit_patch
     n_side = cfg.dit_input_size // p
     tok = patchify(x, p).astype(jnp.dtype(cfg.dtype))
@@ -220,7 +233,7 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
                 else (False, False)
             h, nlz, sc = _block_apply(blk, cfg, h, c, lazy_cache=lc,
                                       lazy_mode=lazy_mode, plan=plan,
-                                      prime=first_step)
+                                      prime=first_step, policy=policy)
             if lazy_cache is not None:
                 new_lazy["attn"].append(nlz["attn"])
                 new_lazy["ffn"].append(nlz["ffn"])

@@ -175,6 +175,7 @@ def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
                 plan: Tuple = (False, False),
                 prime: bool = False,
                 fresh: Optional[Array] = None,
+                policy=None,
                 ) -> Tuple[Array, dict, dict, Dict[str, Array], Array]:
     """One decoder block.  Returns
     (x, new_cache, new_lazy_cache, scores, aux_loss).
@@ -183,7 +184,11 @@ def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
     vanish from the HLO) or traced boolean arrays (mixed-position serving:
     per-slot ``where`` select, see DESIGN.md §Serve).  ``fresh`` is a
     per-sample bool — slots whose lazy cache was reset this step never
-    serve it, the per-slot analogue of the static ``prime`` flag."""
+    serve it, the per-slot analogue of the static ``prime`` flag.
+    ``policy`` (repro.cache.CachePolicy) supplies mode + threshold when
+    given; ``lazy_mode`` is the legacy alias path."""
+    if policy is not None:
+        lazy_mode = policy.exec_mode
     B = x.shape[0]
     aux = jnp.zeros((), jnp.float32)
     scores = _empty_scores(B)
@@ -211,7 +216,8 @@ def apply_block(params: dict, cfg: ModelConfig, spec: LayerSpec, x: Array, *,
             p_entry = False
         out = lazy_lib.lazy_execute(
             fn, z, gate=gate, cache_y=cache_y, mode=lazy_mode,
-            threshold=lz.threshold, plan_skip=p_entry, fresh=fresh)
+            threshold=lz.threshold, plan_skip=p_entry, fresh=fresh,
+            policy=policy)
         if lazy_cache is not None:
             new_lazy[name] = out.new_cache
         if out.score is not None:
@@ -499,6 +505,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
                 plan_row: Optional[Array] = None,
                 window_override: Optional[int] = None,
                 last_logit_only: bool = False,
+                policy=None,
                 ) -> Tuple[Array, dict, Optional[dict], Dict[str, Array]]:
     """One serving step.
 
@@ -512,7 +519,11 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
     ``plan_row``: traced (n_layers, 2) bool — this step's plan-mode skips,
     applied as per-sample where-selects (serving path; the unrolled
     compile-time plan lives in decode_step_unrolled).  ``fresh``: per-sample
-    bool, suppresses lazy-cache reuse for just-admitted slots."""
+    bool, suppresses lazy-cache reuse for just-admitted slots.
+    ``policy``: cache policy (repro.cache) supplying mode + threshold;
+    ``lazy_mode`` is the legacy alias when absent."""
+    if policy is not None:
+        lazy_mode = policy.exec_mode
     specs = build_layer_specs(cfg, window_override=window_override)
     prefix, period, nrep, suffix = factor_stack(specs)
     x = embed_inputs(params, cfg, tokens, embeds)
@@ -533,7 +544,7 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: Array, index: Array,
         return apply_block(
             p, cfg, spec, x, cos=cos, sin=sin, cache=c, decode_index=index,
             shared_attn=shared, lazy_cache=lzc, lazy_mode=lazy_mode,
-            prime=lazy_first_step, fresh=fresh,
+            prime=lazy_first_step, fresh=fresh, policy=policy,
             plan=(pl[0], pl[1]) if pl is not None else (False, False))
 
     n_pre, n_per = len(prefix), len(period)
@@ -611,6 +622,7 @@ def decode_step_mixed(params: dict, cfg: ModelConfig, tokens: Array,
                       fresh: Optional[Array] = None,
                       plan_rows: Optional[Array] = None,
                       window_override: Optional[int] = None,
+                      policy=None,
                       ) -> Tuple[Array, dict, Optional[dict], Dict[str, Array]]:
     """Mixed-position decode over a slot pool (continuous batching).
 
@@ -636,7 +648,7 @@ def decode_step_mixed(params: dict, cfg: ModelConfig, tokens: Array,
     def one(tok, idx, c, lzc, fr, pr):
         return decode_step(params, cfg, tok[None, None], idx, c,
                            lazy_cache=lzc, lazy_mode=lazy_mode,
-                           fresh=fr, plan_row=pr,
+                           fresh=fr, plan_row=pr, policy=policy,
                            window_override=window_override)
 
     axes = (0, 0, 0,

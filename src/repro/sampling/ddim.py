@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
 from repro.models import dit as dit_lib
 
@@ -66,6 +67,7 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
                 key, labels: Array, n_steps: int, cfg_scale: float = 1.5,
                 lazy_mode: str = "off",
                 plan: Optional[np.ndarray] = None,
+                policy=None,
                 collect_scores: bool = False,
                 collect_traces: bool = False,
                 ) -> Tuple[Array, Dict]:
@@ -75,10 +77,23 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
     per batch row, so cond/uncond streams each keep their own cache —
     matching the paper's implementation.
 
-    plan: (n_steps, L, 2) static booleans for 'plan' mode.
+    Every skip/reuse decision routes through one cache policy
+    (repro.cache; DESIGN.md §Cache).  ``policy`` names or carries it
+    directly; the legacy (``lazy_mode``, ``plan``) pair is an alias mapped
+    onto a policy via repro.cache.from_legacy, so existing callers are
+    unchanged.  Static policies serve per-step plan rows that are removed
+    from the compiled HLO; dynamic policies (lazy_gate) decide in traced
+    code.
+
     Returns (samples (B,H,W,C), aux) where aux may contain per-step probe
     scores and/or module output traces (for the similarity benchmarks).
     """
+    pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
+                               threshold=cfg.lazy.threshold)
+    lazy_mode = pol.exec_mode
+    pstate = pol.init_state(n_steps=n_steps, n_layers=cfg.n_layers,
+                            n_modules=2)
+
     B = labels.shape[0]
     H = cfg.dit_input_size
     C = cfg.dit_in_channels
@@ -102,7 +117,7 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
         pr = np.asarray(plan_row) if plan_row is not None else None
         out, new_lazy, scores = dit_lib.dit_forward(
             params, cfg, zz, tt, y_all, lazy_cache=lazy_cache,
-            lazy_mode=lazy_mode, plan_row=pr, first_step=first)
+            lazy_mode=lazy_mode, plan_row=pr, first_step=first, policy=pol)
         eps_all, _ = dit_lib.split_eps(out, C)
         if use_cfg:
             e_c, e_u = jnp.split(eps_all, 2)
@@ -116,12 +131,22 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
         t_prev = ts[i + 1] if i + 1 < len(ts) else -1
         plan_row = None
         if lazy_mode == "plan" and i > 0:
-            plan_row = tuple(tuple(bool(b) for b in r) for r in plan[i])
+            # hashable static arg: the row is baked into the trace, so
+            # skipped modules are absent from the compiled HLO
+            row = pol.plan_row(i, pstate)
+            plan_row = tuple(tuple(bool(b) for b in r) for r in row)
         eps, lazy_cache, scores = model_eval(z, float(t), lazy_cache, plan_row,
                                              i == 0)
         z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev))
         if collect_scores and scores:
-            score_log.append(jax.tree.map(np.asarray, scores))
+            sc_np = jax.tree.map(np.asarray, scores)
+            score_log.append(sc_np)
+            pstate = pol.update_state(
+                pstate, step=i,
+                scores=np.stack([sc_np["attn"].mean(-1),
+                                 sc_np["ffn"].mean(-1)], axis=-1))
+        else:
+            pstate = pol.update_state(pstate, step=i)
         if collect_traces and lazy_cache is not None:
             trace_log.append(jax.tree.map(np.asarray, lazy_cache))
 

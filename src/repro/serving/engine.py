@@ -1,9 +1,11 @@
 """Serving engines.
 
 ``Engine`` — static batch: all sequences share one position counter, one
-prefill + jitted decode loop.  Supports lazy modes 'off' | 'masked'
-(per-sample select) | 'plan' (a LazyPlan's boolean rows threaded into the
-decode step as traced per-step selects).
+prefill + jitted decode loop.  Skip/reuse decisions route through one
+cache policy (repro.cache; DESIGN.md §Cache) — pass ``policy=`` directly,
+or the legacy lazy modes 'off' | 'masked' (per-sample select) | 'plan'
+(boolean rows threaded into the decode step as traced per-step selects),
+which map onto the `none` / `lazy_gate` / `plan` policies.
 
 ``ContinuousBatchingEngine`` — slot-based continuous batching: a fixed
 pool of decode lanes over shared stacked caches (slots.SlotPool), FCFS
@@ -23,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import RequestSpec
 from repro.models import transformer as tf
@@ -31,6 +34,25 @@ from repro.serving.scheduler import Scheduler
 from repro.serving.slots import SlotPool
 
 LAZY_MODES = ("off", "masked", "plan")
+
+# plan horizon compiled for policies that synthesize their own schedule
+# (smoothcache / static_router / stride); decode steps cycle the rows.
+POLICY_PLAN_STEPS = 16
+
+
+def _resolve_serving_policy(policy, lazy_mode, plan, cfg):
+    """(policy | legacy flags) -> a CachePolicy whose exec_mode serving
+    supports.  'soft' is a training mixture, not a serving mode."""
+    if policy is None and lazy_mode not in LAZY_MODES:
+        raise ValueError(
+            f"lazy_mode must be one of {LAZY_MODES}, got {lazy_mode!r}")
+    pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
+                               threshold=cfg.lazy.threshold)
+    if pol.exec_mode not in LAZY_MODES:
+        raise ValueError(
+            f"policy {pol.name!r} drives exec_mode {pol.exec_mode!r}; "
+            f"serving supports {LAZY_MODES}")
+    return pol
 
 
 class GenerationResult(NamedTuple):
@@ -42,16 +64,6 @@ class GenerationResult(NamedTuple):
 class ServingResult(NamedTuple):
     outputs: Dict[int, np.ndarray]        # rid -> (prompt + generated) int32
     metrics: metrics_lib.ServingMetrics
-
-
-def _as_plan_array(plan, n_layers: int) -> np.ndarray:
-    """Normalize LazyPlan | ndarray -> (T, n_layers, 2) bool."""
-    skip = getattr(plan, "skip", plan)
-    skip = np.asarray(skip, bool)
-    if skip.ndim != 3 or skip.shape[1] != n_layers or skip.shape[2] != 2:
-        raise ValueError(
-            f"plan must be (n_steps, {n_layers}, 2) bool, got {skip.shape}")
-    return skip
 
 
 def _row_skips(row: np.ndarray, attn_like: np.ndarray) -> int:
@@ -79,33 +91,38 @@ def _validate_prompt(prompt, n_new: int, max_len: int) -> np.ndarray:
 class Engine:
     """Static-batch decode engine (one shared position counter).
 
-    ``lazy_mode``: 'off' | 'masked' | 'plan'.  Plan mode threads
-    ``plan`` — a core.lazy.LazyPlan or (T, n_layers, 2) bool array — into
-    the jitted decode step as traced per-step boolean selects (one compile;
-    the compile-time FLOP-removing variant lives in decode_step_unrolled /
-    benchmarks.bench_compute)."""
+    Skip/reuse decisions route through one cache policy (repro.cache;
+    DESIGN.md §Cache): ``policy`` names or carries it, while the legacy
+    (``lazy_mode``: 'off' | 'masked' | 'plan', ``plan``) pair is an alias
+    mapped onto a policy.  Plan-driving policies thread their per-step
+    boolean rows into the jitted decode step as traced selects (one
+    compile; the compile-time FLOP-removing variant lives in
+    decode_step_unrolled / benchmarks.bench_compute)."""
 
     def __init__(self, cfg: ModelConfig, params: dict, max_len: int = 512,
                  lazy_mode: str = "off",
                  plan=None,
+                 policy=None,
                  window_override: Optional[int] = None):
-        if lazy_mode not in LAZY_MODES:
-            raise ValueError(
-                f"lazy_mode must be one of {LAZY_MODES}, got {lazy_mode!r}")
+        self.policy = _resolve_serving_policy(policy, lazy_mode, plan, cfg)
+        self.lazy_mode = mode = self.policy.exec_mode
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self.lazy_mode = lazy_mode
         self.window_override = window_override
-        self.plan = None
         self._attn_like = metrics_lib.attn_like_mask(
             cfg, window_override=window_override)
         self._modules = metrics_lib.gated_module_calls(
             cfg, window_override=window_override)
-        if lazy_mode == "plan":
-            if plan is None:
-                raise ValueError("lazy_mode='plan' requires a plan")
-            self.plan = _as_plan_array(plan, cfg.n_layers)
+        if mode == "plan":
+            # fail fast on a plan/model shape mismatch (legacy behavior)
+            # or a plan-mode policy that compiles no schedule at all
+            if self.policy.compile_plan(POLICY_PLAN_STEPS,
+                                        cfg.n_layers, 2) is None:
+                raise ValueError(
+                    f"policy {self.policy.name!r} drives 'plan' mode but "
+                    "compiled no plan")
+        pol = self.policy
 
         @functools.partial(jax.jit, static_argnames=())
         def _prefill(params, tokens, cache):
@@ -119,7 +136,7 @@ class Engine:
                     first=False):
             logits, cache, lazy_cache, scores = tf.decode_step(
                 params, cfg, tok, index, cache, lazy_cache=lazy_cache,
-                lazy_mode=lazy_mode, lazy_first_step=first,
+                lazy_mode=mode, lazy_first_step=first, policy=pol,
                 plan_row=plan_row, window_override=window_override)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return nxt, cache, lazy_cache, scores
@@ -143,6 +160,12 @@ class Engine:
         if self.lazy_mode != "off":
             lazy_cache = tf.init_lazy_decode_cache(
                 cfg, B, window_override=self.window_override)
+        # decode schedules are cyclic over a fixed horizon (explicit plans
+        # keep their own length) so a policy serves IDENTICAL rows through
+        # the static and continuous engines — the token-parity contract
+        pstate = self.policy.init_state(
+            n_steps=POLICY_PLAN_STEPS, n_layers=cfg.n_layers, n_modules=2)
+        use_plan = self.lazy_mode == "plan"
 
         # single-token prompts go through the same prefill path (S==1 decode
         # against the fresh cache): position 0 is written and the first
@@ -159,8 +182,8 @@ class Engine:
             # the first lazy step primes the cache (runs every module)
             first = self.lazy_mode != "off" and i == 0
             plan_row = None
-            if self.plan is not None:
-                row = self.plan[i % len(self.plan)]
+            if use_plan:
+                row = np.asarray(self.policy.plan_row(i, pstate), bool)
                 if not first:
                     plan_skips += _row_skips(row, self._attn_like)
                 plan_row = jnp.asarray(row)
@@ -171,12 +194,13 @@ class Engine:
                 score_log.append(np.array([float(jnp.mean(v))
                                            for v in scores.values()]))
             toks.append(np.asarray(nxt)[:, None])
+            pstate = self.policy.update_state(pstate, step=i)
 
         scores_arr = np.stack(score_log) if score_log else None
-        if self.plan is not None:
+        if use_plan:
             ratio = plan_skips / max(self._modules * n_new, 1)
         elif scores_arr is not None:
-            ratio = float((scores_arr > self.cfg.lazy.threshold).mean())
+            ratio = float((scores_arr > self.policy.threshold).mean())
         else:
             ratio = 0.0
         return GenerationResult(np.concatenate(toks, axis=1), scores_arr,
@@ -196,18 +220,17 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params: dict, *,
                  n_slots: int = 4, max_len: int = 512,
                  lazy_mode: str = "off", plan=None,
+                 policy=None,
                  eos_id: Optional[int] = None,
                  cost_budget: Optional[float] = None,
                  batch_synchronous: bool = False,
                  window_override: Optional[int] = None):
-        if lazy_mode not in LAZY_MODES:
-            raise ValueError(
-                f"lazy_mode must be one of {LAZY_MODES}, got {lazy_mode!r}")
+        self.policy = _resolve_serving_policy(policy, lazy_mode, plan, cfg)
+        self.lazy_mode = mode = self.policy.exec_mode
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.lazy_mode = lazy_mode
         self.eos_id = eos_id
         self.cost_budget = cost_budget
         self.batch_synchronous = batch_synchronous
@@ -216,15 +239,22 @@ class ContinuousBatchingEngine:
             cfg, window_override=window_override)
         self.modules_per_slot = metrics_lib.gated_module_calls(
             cfg, window_override=window_override)
-        self.plan = None
+        # slots sit at different request steps t_i, so the policy serves a
+        # per-slot row; the compiled plan in _pstate is the row source and
+        # the admission-time skip-budget estimate in one
+        self._pstate = self.policy.init_state(
+            n_steps=POLICY_PLAN_STEPS, n_layers=cfg.n_layers, n_modules=2)
         self.plan_ratio = 0.0
-        if lazy_mode == "plan":
-            if plan is None:
-                raise ValueError("lazy_mode='plan' requires a plan")
-            self.plan = _as_plan_array(plan, cfg.n_layers)
-            total = self.modules_per_slot * len(self.plan)
+        if mode == "plan":
+            if self._pstate.get("plan") is None:
+                raise ValueError(
+                    f"policy {self.policy.name!r} drives 'plan' mode but "
+                    "compiled no plan")
+            plan_arr = self._pstate["plan"].skip
+            total = self.modules_per_slot * len(plan_arr)
             self.plan_ratio = sum(
-                _row_skips(r, self._attn_like) for r in self.plan) / max(total, 1)
+                _row_skips(r, self._attn_like) for r in plan_arr) / max(total, 1)
+        pol = self.policy
 
         @jax.jit
         def _prefill(params, tokens, cache):
@@ -238,19 +268,22 @@ class ContinuousBatchingEngine:
         def _step(params, tok, index, cache, lazy_cache, fresh, plan_rows):
             return tf.decode_step_mixed(
                 params, cfg, tok, index, cache, lazy_cache=lazy_cache,
-                lazy_mode=lazy_mode, fresh=fresh, plan_rows=plan_rows,
-                window_override=window_override)
+                lazy_mode=mode, fresh=fresh, plan_rows=plan_rows,
+                policy=pol, window_override=window_override)
 
         self._prefill = _prefill
         self._step = _step
 
     # ------------------------------------------------------------ internals
+    def _slot_row(self, slot) -> np.ndarray:
+        return np.asarray(self.policy.plan_row(slot.t, self._pstate), bool)
+
     def _plan_rows(self, pool: SlotPool) -> jnp.ndarray:
         rows = np.zeros((self.n_slots, self.cfg.n_layers, 2), bool)
         for i in pool.active_slots():
             s = pool.slots[i]
             if not s.fresh:
-                rows[i] = self.plan[s.t % len(self.plan)]
+                rows[i] = self._slot_row(s)
         return jnp.asarray(rows)
 
     def _step_accounting(self, pool: SlotPool, scores
@@ -263,14 +296,13 @@ class ContinuousBatchingEngine:
         kinds = (["attn", "ffn"] if self._attn_like.any() else [])
         if not self._attn_like.all():
             kinds.append("block")
-        thr = self.cfg.lazy.threshold
+        thr = self.policy.threshold
         # one device->host transfer per score key, not one per (slot, kind)
         sc = {k: np.asarray(v) for k, v in scores.items()} if scores else {}
         for i in pool.active_slots():
             s = pool.slots[i]
-            if self.plan is not None and not s.fresh:
-                k = _row_skips(self.plan[s.t % len(self.plan)],
-                               self._attn_like)
+            if self.lazy_mode == "plan" and not s.fresh:
+                k = _row_skips(self._slot_row(s), self._attn_like)
             elif self.lazy_mode == "masked" and not s.fresh and sc:
                 k = M * float(np.mean([sc[k][i] > thr for k in kinds]))
             else:
@@ -337,7 +369,8 @@ class ContinuousBatchingEngine:
                 continue
 
             fresh = pool.fresh_vector() if lazy else None
-            plan_rows = self._plan_rows(pool) if self.plan is not None else None
+            plan_rows = (self._plan_rows(pool)
+                         if self.lazy_mode == "plan" else None)
             logits, cache, lazy_cache, scores = self._step(
                 self.params, pool.token_vector(), pool.index_vector(),
                 pool.cache, pool.lazy_cache, fresh, plan_rows)

@@ -1,0 +1,301 @@
+"""repro.cache policy subsystem: registry + legacy bridge, policy
+schedules, calibration-artifact round-trips, executor parity through the
+policy layer, and the slot-cache helpers under policy-state payloads."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.models import transformer as tf
+from repro.serving.engine import Engine
+
+
+T, L, M = 10, 3, 2
+
+
+def synth_artifact(seed=0, n_steps=T, n_layers=L):
+    rng = np.random.default_rng(seed)
+    rel = rng.uniform(0.01, 1.0, (n_steps, n_layers, M))
+    rel[0] = np.inf                       # step 0: no previous output
+    return calibrate_lib.CalibrationArtifact(
+        kind="lm", arch="synthetic", n_steps=n_steps, n_layers=n_layers,
+        modules=("attn", "ffn_or_block"), rel_err=rel)
+
+
+# ---------------------------------------------------------------------------
+# registry + legacy bridge
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_required_policies():
+    names = cache_lib.available_policies()
+    for required in ("none", "stride", "lazy_gate", "smoothcache",
+                     "static_router", "plan"):
+        assert required in names
+    with pytest.raises(ValueError, match="unknown cache policy"):
+        cache_lib.get_policy("does_not_exist")
+
+
+def test_legacy_bridge_maps_flags_onto_policies():
+    assert cache_lib.from_legacy("off").exec_mode == "off"
+    gate = cache_lib.from_legacy("masked", threshold=0.7)
+    assert gate.exec_mode == "masked" and gate.threshold == 0.7
+    assert cache_lib.from_legacy("soft").exec_mode == "soft"
+    plan = lazy_lib.uniform_plan(4, L, M, 0.5, seed=0)
+    pol = cache_lib.from_legacy("plan", plan=plan)
+    np.testing.assert_array_equal(pol.compile_plan(4, L, M).skip, plan.skip)
+    with pytest.raises(ValueError, match="requires a plan"):
+        cache_lib.from_legacy("plan")
+    with pytest.raises(ValueError, match="must be one of"):
+        cache_lib.from_legacy("bogus")
+    # resolve(): explicit policy wins, names resolve, junk rejected
+    assert cache_lib.resolve("stride").name == "stride"
+    assert cache_lib.resolve(gate) is gate
+    with pytest.raises(TypeError):
+        cache_lib.resolve(42)
+    # the name form must decide like the legacy alias: the executor's
+    # threshold reaches a string-named lazy_gate, and "plan" takes the plan
+    assert cache_lib.resolve("lazy_gate", threshold=0.8).threshold == 0.8
+    np.testing.assert_array_equal(
+        cache_lib.resolve("plan", plan=plan).compile_plan(4, L, M).skip,
+        plan.skip)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_stride_schedule_and_endpoints():
+    pol = cache_lib.get_policy("stride", stride=2)
+    plan = pol.compile_plan(T, L, M)
+    assert not plan.skip[0].any() and not plan.skip[-1].any()
+    for t in range(1, T - 1):
+        assert plan.skip[t].all() == (t % 2 != 0)
+        assert pol.decide(t, 0, 0, state={"plan": plan}) == (t % 2 != 0)
+    with pytest.raises(ValueError, match="stride"):
+        cache_lib.get_policy("stride", stride=1)
+
+
+def test_smoothcache_thresholds_calibrated_errors():
+    art = synth_artifact()
+    thr = art.quantile_threshold(0.5)
+    pol = cache_lib.get_policy("smoothcache", calibration=art,
+                               error_threshold=thr, max_skip_run=100)
+    plan = pol.compile_plan(T, L, M)
+    assert not plan.skip[0].any() and not plan.skip[-1].any()
+    expect = (art.rel_err <= thr) & np.isfinite(art.rel_err)
+    np.testing.assert_array_equal(plan.skip[1:-1], expect[1:-1])
+    assert plan.lazy_ratio > 0
+
+
+def test_smoothcache_max_skip_run_bounds_staleness():
+    rel = np.full((T, L, M), 0.01)        # everything looks skippable
+    rel[0] = np.inf
+    art = calibrate_lib.CalibrationArtifact(
+        kind="lm", arch="synthetic", n_steps=T, n_layers=L,
+        modules=("attn", "ffn_or_block"), rel_err=rel)
+    pol = cache_lib.get_policy("smoothcache", calibration=art,
+                               error_threshold=0.5, max_skip_run=2)
+    skip = pol.compile_plan(T, L, M).skip
+    runs = 0
+    for t in range(T):
+        runs = runs + 1 if skip[t, 0, 0] else 0
+        assert runs <= 2, t
+
+
+def test_smoothcache_resamples_calibration_steps():
+    art = synth_artifact(n_steps=6)
+    pol = cache_lib.get_policy("smoothcache", calibration=art,
+                               error_threshold=art.quantile_threshold(0.6))
+    assert pol.compile_plan(12, L, M).skip.shape == (12, L, M)
+    with pytest.raises(ValueError, match="calibration profile"):
+        pol.compile_plan(12, L + 1, M)
+
+
+def test_static_router_uniform_per_layer_quota():
+    art = synth_artifact(1)
+    pol = cache_lib.get_policy("static_router", ratio=0.5, calibration=art)
+    plan = pol.compile_plan(T, L, M)
+    for t in range(1, T - 1):
+        counts = plan.skip[t].sum(axis=-1)
+        # every layer spends the same per-step quota, up to the rotating
+        # forced-refresh hole
+        assert counts.max() - counts.min() <= 1, t
+    assert plan.lazy_ratio > 0
+    assert abs(plan.lazy_ratio - 0.5) <= 1.0 / M + 1e-9
+    # seeded (calibration-free) variant is deterministic
+    a = cache_lib.get_policy("static_router", ratio=0.5, seed=3)
+    b = cache_lib.get_policy("static_router", ratio=0.5, seed=3)
+    np.testing.assert_array_equal(a.compile_plan(T, L, M).skip,
+                                  b.compile_plan(T, L, M).skip)
+
+
+def test_decide_matches_compiled_plan():
+    """decide() is the host-side reference of the compiled schedule."""
+    art = synth_artifact(2)
+    for pol in (cache_lib.get_policy("stride", stride=3),
+                cache_lib.get_policy("smoothcache", calibration=art,
+                                     error_threshold=0.4),
+                cache_lib.get_policy("static_router", ratio=0.4,
+                                     calibration=art)):
+        state = pol.init_state(n_steps=T, n_layers=L, n_modules=M)
+        plan = state["plan"]
+        for t in range(T):
+            for l in range(L):
+                for m in range(M):
+                    assert pol.decide(t, l, m, state=state) \
+                        == bool(plan.skip[t, l, m]), (pol.name, t, l, m)
+
+
+# ---------------------------------------------------------------------------
+# calibration artifact
+# ---------------------------------------------------------------------------
+
+
+def test_calibration_artifact_json_roundtrip(tmp_path):
+    art = synth_artifact()
+    p = art.save(str(tmp_path / "calib.json"))
+    back = calibrate_lib.CalibrationArtifact.load(p)
+    assert back.kind == art.kind and back.modules == art.modules
+    # +inf rows survive the null encoding
+    assert np.isinf(back.rel_err[0]).all()
+    np.testing.assert_allclose(back.rel_err[1:], art.rel_err[1:])
+    with pytest.raises(ValueError, match="schema"):
+        calibrate_lib.CalibrationArtifact.from_json({"schema": "nope"})
+
+
+def test_calibrate_lm_profiles_every_gated_module():
+    cfg = ModelConfig(n_layers=2, d_model=16, n_heads=2, n_kv_heads=2,
+                      head_dim=8, d_ff=32, vocab_size=31, dtype="float32",
+                      lazy=LazyConfig(enabled=False))
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = np.arange(3, dtype=np.int32)[None] % cfg.vocab_size
+    art = calibrate_lib.calibrate_lm(params, cfg, prompt, 5)
+    assert art.rel_err.shape == (5, cfg.n_layers, 2)
+    assert np.isinf(art.rel_err[0]).all()          # step 0 unskippable
+    assert np.isfinite(art.rel_err[1:]).all()      # every module profiled
+    assert (art.rel_err[1:] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# executor parity through the policy layer
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def _lm_fixture():
+    cfg = ModelConfig(n_layers=2, d_model=16, n_heads=2, n_kv_heads=2,
+                      head_dim=8, d_ff=32, vocab_size=31, dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = tf.init_lm(jax.random.PRNGKey(1), cfg)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 3)).astype(np.int32)
+    return cfg, params, prompt
+
+
+def test_engine_none_policy_matches_off_exactly():
+    cfg, params, prompt = _lm_fixture()
+    off = Engine(cfg, params, max_len=24, lazy_mode="off").generate(prompt, 5)
+    none = Engine(cfg, params, max_len=24, policy="none").generate(prompt, 5)
+    np.testing.assert_array_equal(off.tokens, none.tokens)
+    assert none.realized_lazy_ratio == 0.0
+
+
+def test_engine_zero_ratio_lazy_gate_matches_off():
+    """The acceptance contract: the lazy_gate path at skip ratio 0 is
+    greedy-token exact against the baseline."""
+    cfg, params, prompt = _lm_fixture()
+    off = Engine(cfg, params, max_len=24, lazy_mode="off").generate(prompt, 5)
+    pol = cache_lib.get_policy("lazy_gate", threshold=1.1)  # sigmoid < 1
+    res = Engine(cfg, params, max_len=24, policy=pol).generate(prompt, 5)
+    np.testing.assert_array_equal(off.tokens, res.tokens)
+    assert res.realized_lazy_ratio == 0.0
+
+
+def test_engine_static_policy_reports_plan_ratio():
+    cfg, params, prompt = _lm_fixture()
+    res = Engine(cfg, params, max_len=24,
+                 policy=cache_lib.get_policy("stride", stride=2)
+                 ).generate(prompt, 6)
+    assert res.realized_lazy_ratio > 0.2
+    assert res.tokens.shape == (2, 3 + 6)
+
+
+def test_serving_rejects_soft_policy():
+    cfg, params, _ = _lm_fixture()
+    with pytest.raises(ValueError, match="soft"):
+        Engine(cfg, params, policy=cache_lib.get_policy("lazy_gate",
+                                                        soft=True))
+
+
+# ---------------------------------------------------------------------------
+# slot-cache helpers under policy-state payloads (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def _policy_payload(step: int, score: float):
+    """A per-slot cache tree as the serving engine would stack it: lazy
+    module outputs PLUS host-policy state riding along as array leaves."""
+    return {
+        "lazy": {"attn": jnp.full((1, 2, 4), score, jnp.float32),
+                 "ffn": jnp.full((1, 2, 4), score + 1.0, jnp.float32)},
+        "policy_state": {"step": jnp.full((1,), step, jnp.int32),
+                         "scores": jnp.full((1, L, M), score, jnp.float32)},
+    }
+
+
+def test_slot_helpers_roundtrip_policy_state_payloads():
+    n_slots = 3
+    stacked = lazy_lib.stack_for_slots(_policy_payload(0, 0.0), n_slots)
+    for leaf in jax.tree.leaves(stacked):
+        assert leaf.shape[0] == n_slots
+    # occupant A joins slot 1
+    a = _policy_payload(step=5, score=0.25)
+    stacked = lazy_lib.slot_cache_scatter(stacked, 1, a)
+    got = lazy_lib.slot_cache_gather(stacked, 1)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), got, a)
+    # neighbours untouched
+    for other in (0, 2):
+        neigh = lazy_lib.slot_cache_gather(stacked, other)
+        assert float(neigh["policy_state"]["step"][0]) == 0
+        assert float(neigh["lazy"]["attn"].max()) == 0.0
+
+
+def test_slot_reset_then_join_mirrors_scheduler_reuse():
+    """Eviction resets the slot; the next occupant's scatter repopulates
+    it — at no point may occupant B observe occupant A's module outputs
+    or policy state (the cross-request freshness guard)."""
+    n_slots = 2
+    stacked = lazy_lib.stack_for_slots(_policy_payload(0, 0.0), n_slots)
+    a = _policy_payload(step=7, score=0.9)
+    stacked = lazy_lib.slot_cache_scatter(stacked, 0, a)
+
+    # A evicted -> reset: everything in slot 0 zeroed, slot 1 untouched
+    stacked = lazy_lib.slot_cache_reset(stacked, 0)
+    for leaf in jax.tree.leaves(lazy_lib.slot_cache_gather(stacked, 0)):
+        assert float(jnp.abs(leaf).max()) == 0.0
+    # B joins the reused slot with its own prefilled payload
+    b = _policy_payload(step=1, score=0.5)
+    stacked = lazy_lib.slot_cache_scatter(stacked, 0, b)
+    got = lazy_lib.slot_cache_gather(stacked, 0)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), got, b)
+    assert float(got["policy_state"]["step"][0]) == 1   # B's state, not A's
+
+
+def test_slot_reset_is_idempotent_and_slot_local():
+    stacked = lazy_lib.stack_for_slots(_policy_payload(3, 0.7), 3)
+    once = lazy_lib.slot_cache_reset(stacked, 2)
+    twice = lazy_lib.slot_cache_reset(once, 2)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                 once, twice)
+    # the other slots keep the original payload
+    for i in (0, 1):
+        got = lazy_lib.slot_cache_gather(twice, i)
+        assert float(got["policy_state"]["step"][0]) == 3

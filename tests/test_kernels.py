@@ -181,9 +181,9 @@ def test_ssd_decay_bounds_state(S, dtscale):
 @settings(max_examples=15, deadline=None)
 @given(st.integers(2, 40), st.integers(1, 8))
 def test_plan_target_ratio_property(T, L):
-    """Per-step plans: never skip step 0; achieved ratio hits the target up
-    to the per-step quantization and the forced-refresh feasibility cap
-    ((1 - 1/REFRESH) of modules per step; see core/lazy.py)."""
+    """Per-step plans: never skip the first/last steps; achieved ratio hits
+    the target up to the per-step quantization and the forced-refresh
+    feasibility cap ((1 - 1/REFRESH) of modules per step; core/lazy.py)."""
     from repro.core.lazy import plan_with_target_ratio
     rng = np.random.default_rng(T * 100 + L)
     per = L * 2
@@ -191,12 +191,16 @@ def test_plan_target_ratio_property(T, L):
     for target in (0.0, 0.25, 0.5):
         plan = plan_with_target_ratio(scores, target)
         assert not plan.skip[0].any()
+        assert not plan.skip[-1].any()
+        if T < 3:
+            assert plan.lazy_ratio == 0.0   # only endpoint steps exist
+            continue
         # never exceeds the target by more than per-step quantization
         assert plan.lazy_ratio <= target + 1.0 / per + 1e-9
         # hits at least the refresh-capped fraction of the target
-        budget = min(int(round(target * T * per / (T - 1))), per)
+        budget = min(int(round(target * T * per / (T - 2))), per)
         floor = min(budget, per - (per + 3) // 4)      # worst-case hole
-        expect_min = floor * (T - 1) / (T * per)
+        expect_min = floor * (T - 2) / (T * per)
         assert plan.lazy_ratio >= expect_min - 1e-9, (
             plan.lazy_ratio, expect_min, target)
         if target == 0.0:

@@ -21,22 +21,25 @@ def scores(seed=0):
 
 @pytest.mark.parametrize("target", [0.1, 0.25, 0.3, 0.5])
 def test_target_ratio_hit_within_one_module(target):
-    """Per-step skip counts land on the budget exactly; the global ratio is
-    within one module-call-per-step of the target."""
+    """Per-step skip counts land on the budget exactly over the skippable
+    steps (1..T-2); the global ratio is within one module-call-per-step of
+    the target."""
     plan = lazy_lib.plan_with_target_ratio(scores(), target)
-    budget = int(round(target * T * PER / (T - 1)))
-    for t in range(1, T):
+    budget = int(round(target * T * PER / (T - 2)))
+    for t in range(1, T - 1):
         assert plan.skip[t].sum() == min(budget, PER), t
     assert abs(plan.lazy_ratio - target) <= 1.0 / PER + 1e-9
 
 
-def test_step_zero_never_skips():
+def test_first_and_last_steps_never_skip():
+    """The paper's §3.2 observation: trajectory endpoints are least similar
+    — the first and last sampling steps must always run fresh, in every
+    budgeting mode."""
     for target in (0.2, 0.5, 0.9):
-        plan = lazy_lib.plan_with_target_ratio(scores(1), target)
-        assert not plan.skip[0].any()
-        plan_g = lazy_lib.plan_with_target_ratio(scores(1), target,
-                                                 per_step=False)
-        assert not plan_g.skip[0].any()
+        for kw in ({}, {"per_step": False}, {"per_layer": True}):
+            plan = lazy_lib.plan_with_target_ratio(scores(1), target, **kw)
+            assert not plan.skip[0].any(), kw
+            assert not plan.skip[-1].any(), kw
 
 
 def test_refresh_rotation_forces_module_runs():
@@ -49,7 +52,7 @@ def test_refresh_rotation_forces_module_runs():
     s[:, 0, 0] = 1.0
     plan = lazy_lib.plan_with_target_ratio(s, 0.5)
     flat = plan.skip.reshape(T, PER)
-    for t in range(1, T):
+    for t in range(1, T - 1):
         forced = np.arange(PER) % REFRESH == t % REFRESH
         assert not flat[t][forced].any(), t
     # module 0 must therefore run at least every REFRESH steps
@@ -71,7 +74,7 @@ def test_high_scores_preferred():
     # one skip per step; it must be the high-score module except on its
     # forced-refresh steps
     idx = 1 * M + 1
-    for t in range(1, T):
+    for t in range(1, T - 1):
         if idx % 4 == t % 4:
             continue
         assert plan.skip[t, 1, 1], t
@@ -81,24 +84,79 @@ def test_zero_and_degenerate_targets():
     assert lazy_lib.plan_with_target_ratio(scores(), 0.0).lazy_ratio == 0.0
     one_step = np.random.default_rng(0).random((1, L, M))
     assert not lazy_lib.plan_with_target_ratio(one_step, 0.9).skip.any()
+    # T == 2: both steps are trajectory endpoints -> nothing may skip
+    two_step = np.random.default_rng(0).random((2, L, M))
+    assert not lazy_lib.plan_with_target_ratio(two_step, 0.9).skip.any()
 
 
 def test_global_mode_ratio():
     plan = lazy_lib.plan_with_target_ratio(scores(3), 0.4, per_step=False)
     assert not plan.skip[0].any()
+    assert not plan.skip[-1].any()
     assert abs(plan.lazy_ratio - 0.4) < 0.05
 
 
-def test_global_mode_extreme_target_keeps_step0():
-    """Regression: targets above (T-1)/T used to sweep the step-0 -inf
+def test_global_mode_extreme_target_keeps_endpoints():
+    """Regression: targets above (T-2)/T used to sweep the endpoint -inf
     sentinels into the skip set; duplicate scores used to over-skip."""
     plan = lazy_lib.plan_with_target_ratio(scores(5), 0.97, per_step=False)
     assert not plan.skip[0].any()
-    assert plan.skip[1:].all()            # budget capped at the feasible set
+    assert not plan.skip[-1].any()
+    assert plan.skip[1:-1].all()          # budget capped at the feasible set
     dup = np.full((T, L, M), 0.5)
     plan_d = lazy_lib.plan_with_target_ratio(dup, 0.25, per_step=False)
     assert not plan_d.skip[0].any()
     assert plan_d.skip.sum() == int(round(0.25 * T * PER))
+
+
+# ---------------------------------------------------------------------------
+# per-layer mode (the Learning-to-Cache-style router quota)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("target", [0.25, 0.5])
+def test_per_layer_mode_uniform_quota(target):
+    """Within a step every layer spends the same skip quota (up to its
+    rotating forced-refresh hole), so no layer can hog the budget."""
+    plan = lazy_lib.plan_with_target_ratio(scores(6), target, per_layer=True)
+    for t in range(1, T - 1):
+        counts = plan.skip[t].reshape(L, -1).sum(axis=-1)
+        # the refresh hole may block at most one module of one layer
+        assert counts.max() - counts.min() <= 1, t
+    assert not plan.skip[0].any() and not plan.skip[-1].any()
+    assert abs(plan.lazy_ratio - target) <= 1.0 / M + 1e-9
+
+
+def test_per_layer_mode_small_targets_not_rounded_away():
+    """Regression: an integer per-step quota quantizes ratios to ~1/M and
+    rounded small targets down to an EMPTY plan — the Bresenham quota
+    spread must hit them in aggregate."""
+    for target in (0.1, 0.2):
+        plan = lazy_lib.plan_with_target_ratio(scores(9), target,
+                                               per_layer=True)
+        assert plan.lazy_ratio > 0, target
+        assert abs(plan.lazy_ratio - target) <= 0.5 / M + 1e-9, target
+
+
+def test_per_layer_mode_respects_refresh_rotation():
+    s = np.full((T, L, M), 0.9)
+    plan = lazy_lib.plan_with_target_ratio(s, 1.0, per_layer=True)
+    flat = plan.skip.reshape(T, PER)
+    for t in range(1, T - 1):
+        forced = np.arange(PER) % 4 == t % 4
+        assert not flat[t][forced].any(), t
+
+
+def test_per_layer_mode_prefers_high_scores_within_layer():
+    s = np.full((T, L, M), 0.1)
+    s[:, :, 1] = 0.9                       # module 1 of every layer laziest
+    plan = lazy_lib.plan_with_target_ratio(s, 1.0 / M, per_layer=True)
+    for t in range(1, T - 1):
+        for l in range(L):
+            gidx = l * M + 1
+            if gidx % 4 == t % 4:          # its forced-refresh step
+                continue
+            assert plan.skip[t, l, 1], (t, l)
 
 
 # ---------------------------------------------------------------------------
