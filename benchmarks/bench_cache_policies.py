@@ -267,10 +267,11 @@ def run_dit(*, d_model=96, n_layers=4, input_size=16, pretrain=40,
 
 def served_lm_schedule(pol, n_new: int, n_layers: int):
     """The rows Engine actually serves for a static policy: its cyclic
-    POLICY_PLAN_STEPS-horizon decode schedule over ``n_new`` steps, step 0
-    primed (runs everything) — so the FLOP accounting below describes the
-    SAME schedule the realized skip ratio was measured on."""
-    full = pol.compile_plan(POLICY_PLAN_STEPS, n_layers, 2)
+    decode schedule (policy-derived horizon, engine.POLICY_PLAN_STEPS
+    default) over ``n_new`` steps, step 0 primed (runs everything) — so
+    the FLOP accounting below describes the SAME schedule the realized
+    skip ratio was measured on."""
+    full = pol.compile_plan(pol.plan_horizon(POLICY_PLAN_STEPS), n_layers, 2)
     if full is None:
         return None
     skip = full.skip[np.arange(n_new) % full.skip.shape[0]].copy()

@@ -1,0 +1,187 @@
+"""Fused vs host-loop DDIM sampler benchmark (the trajectory executor).
+
+The host-loop sampler (sampling/ddim.ddim_sample_reference) pays one XLA
+compilation per DISTINCT static plan row plus per-step dispatch; the
+fused executor (sampling/trajectory.py) compiles the whole trajectory as
+one ``lax.scan`` with plan rows scanned as device arrays.  Per policy on
+a reduced dit_xl2_256 this benchmark reports
+
+  * compile count — ``jax.monitoring`` backend-compile events during the
+    cold run, plus the jit trace-cache probe (``fn._cache_size()``) that
+    pins the fused executor to exactly ONE entry even across schedules;
+  * wall-clock per step — warm, median over repeats;
+  * realized skip ratio — the fused executor's in-carry accounting;
+  * bit-exactness of fused vs host output.
+
+Asserts the compile-once contract and that the fused sampler's per-step
+wall-clock is no worse than the host loop's.  Emits
+``artifacts/BENCH_trajectory.json`` (uploaded by CI with all BENCH_*).
+"""
+from __future__ import annotations
+
+import json
+import os
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ARTIFACTS, lazy_dit_fixture, time_fn
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
+from repro.sampling import ddim, trajectory
+
+SCHEMA = "repro.bench.trajectory/v1"
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+@contextmanager
+def compile_counter():
+    """Counts XLA backend compilations via jax.monitoring events."""
+    from jax._src import monitoring as _mon
+
+    counts = {"n": 0}
+
+    def _listener(event, duration, **kw):
+        if event == _COMPILE_EVENT:
+            counts["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    try:
+        yield counts
+    finally:
+        _mon._unregister_event_duration_listener_by_callback(_listener)
+
+
+def _median_ms(fn) -> float:
+    """Median wall-clock ms/call via the shared benchmark timer."""
+    return time_fn(fn, iters=3, warmup=1) / 1e3
+
+
+def _policies(cfg, params, sched, labels, n_steps, *, with_smoothcache):
+    out = {
+        "none": cache_lib.get_policy("none"),
+        "stride": cache_lib.get_policy("stride", stride=2),
+        "static_router": cache_lib.get_policy("static_router", ratio=0.5),
+    }
+    if with_smoothcache:
+        calib = calibrate_lib.calibrate_dit(
+            params, cfg, sched, key=jax.random.PRNGKey(7), labels=labels,
+            n_steps=n_steps, cfg_scale=1.5)
+        out["smoothcache"] = cache_lib.get_policy(
+            "smoothcache", calibration=calib,
+            error_threshold=calib.quantile_threshold(0.5))
+    return out
+
+
+def run_bench(*, smoke: bool = False):
+    if smoke:
+        cfg, params, sched = lazy_dit_fixture(pretrain=3, lazy_steps=2)
+        n_steps, with_sc = 6, False
+    else:
+        cfg, params, sched = lazy_dit_fixture()
+        n_steps, with_sc = 16, True
+    batch = 2
+    labels = jnp.arange(batch) % cfg.dit_n_classes
+    key = jax.random.PRNGKey(11)
+    kw = dict(key=key, labels=labels, n_steps=n_steps, cfg_scale=1.5)
+
+    policies = _policies(cfg, params, sched, labels, n_steps,
+                         with_smoothcache=with_sc)
+    results = {}
+    for name, pol in policies.items():
+        # ---- host loop: cold compile count, then warm per-step time
+        with compile_counter() as host_cold:
+            x_host, _ = ddim.ddim_sample_reference(params, cfg, sched,
+                                                   policy=pol, **kw)
+            jax.block_until_ready(x_host)
+        host_ms = _median_ms(lambda: ddim.ddim_sample_reference(
+            params, cfg, sched, policy=pol, **kw)[0])
+
+        # ---- fused: cold compile count + trace-cache probe + warm time
+        trajectory.build_sampler.cache_clear()
+        with compile_counter() as fused_cold:
+            x_fused, aux = trajectory.sample_trajectory(params, cfg, sched,
+                                                        policy=pol, **kw)
+            jax.block_until_ready(x_fused)
+        fn = trajectory.build_sampler(cfg, pol, n_steps, 1.5)
+        fused_ms = _median_ms(lambda: trajectory.sample_trajectory(
+            params, cfg, sched, policy=pol, **kw)[0])
+        # the compile-once contract: warm fused samples compile NOTHING
+        # (cold counts include incidental eager-op compiles shared with
+        # whatever ran first in the process, so they are reported, not
+        # compared)
+        with compile_counter() as fused_warm:
+            jax.block_until_ready(trajectory.sample_trajectory(
+                params, cfg, sched, policy=pol, **kw)[0])
+
+        exact = bool(np.array_equal(np.asarray(x_host), np.asarray(x_fused)))
+        cache_size = int(fn._cache_size())
+        assert exact, f"{name}: fused output != host-loop reference"
+        assert cache_size == 1, \
+            f"{name}: fused sampler traced {cache_size} times, expected 1"
+        assert fused_warm["n"] == 0, \
+            f"{name}: warm fused sample compiled {fused_warm['n']} times"
+
+        results[name] = {
+            "exec_mode": pol.exec_mode,
+            "realized_skip_ratio": round(aux["realized_skip_ratio"], 4),
+            "bit_exact_vs_host": exact,
+            "host": {"cold_backend_compiles": host_cold["n"],
+                     "per_step_ms": round(host_ms / n_steps, 4),
+                     "total_ms": round(host_ms, 3)},
+            "fused": {"cold_backend_compiles": fused_cold["n"],
+                      "warm_backend_compiles": fused_warm["n"],
+                      "trace_cache_size": cache_size,
+                      "per_step_ms": round(fused_ms / n_steps, 4),
+                      "total_ms": round(fused_ms, 3)},
+            "fused_speedup": round(host_ms / max(fused_ms, 1e-9), 3),
+        }
+
+    # acceptance: fused per-step wall-clock <= host-loop per-step wall-clock
+    for name, r in results.items():
+        assert r["fused"]["per_step_ms"] <= r["host"]["per_step_ms"], \
+            (f"{name}: fused {r['fused']['per_step_ms']}ms/step slower than "
+             f"host {r['host']['per_step_ms']}ms/step")
+
+    payload = {
+        "schema": SCHEMA,
+        "smoke": smoke,
+        "arch": "dit_xl2_256 (reduced bench fixture)",
+        "reduced": {"n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                    "input_size": cfg.dit_input_size},
+        "n_steps": n_steps, "batch": batch, "cfg_scale": 1.5,
+        "compile_probe": "jax.monitoring backend_compile events (cold run) "
+                         "+ jit trace-cache size (fused fn)",
+        "policies": results,
+    }
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.normpath(os.path.join(ARTIFACTS, "BENCH_trajectory.json"))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+    rows = []
+    for name, r in sorted(results.items()):
+        rows.append(("trajectory", name,
+                     f"host_compiles={r['host']['cold_backend_compiles']}",
+                     f"fused_compiles={r['fused']['cold_backend_compiles']}",
+                     f"host_ms_per_step={r['host']['per_step_ms']:.3f}",
+                     f"fused_ms_per_step={r['fused']['per_step_ms']:.3f}",
+                     f"speedup={r['fused_speedup']:.2f}x",
+                     f"ratio={r['realized_skip_ratio']:.2f}"))
+    rows.append(("trajectory", "json", path))
+    return rows, payload
+
+
+def run():
+    """Full-suite entry (benchmarks.run)."""
+    rows, _ = run_bench(smoke=False)
+    return rows
+
+
+def run_smoke():
+    """CI smoke entry: tiny fixture, same assertions, same artifact."""
+    rows, _ = run_bench(smoke=True)
+    return rows

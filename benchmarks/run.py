@@ -10,6 +10,9 @@
   bench_cache_policies — head-to-head skip/reuse policies (repro.cache)
                         on DiT sampling + LLM decode (emits
                         artifacts/BENCH_cache_policies.json)
+  bench_trajectory    — fused single-compile DDIM executor vs host loop:
+                        compile count, per-step wall-clock, skip ratio
+                        (emits artifacts/BENCH_trajectory.json)
 
 Prints ``name,field,...`` CSV rows.  PYTHONPATH=src python -m benchmarks.run
 
@@ -81,6 +84,11 @@ def smoke() -> list:
     # artifacts/BENCH_cache_policies.json (uploaded as a CI artifact)
     import benchmarks.bench_cache_policies as b_cache
     rows.extend(b_cache.run_smoke())
+
+    # fused trajectory executor vs host loop (compile count + wall-clock);
+    # emits artifacts/BENCH_trajectory.json
+    import benchmarks.bench_trajectory as b_traj
+    rows.extend(b_traj.run_smoke())
     return rows
 
 
@@ -104,11 +112,12 @@ def main() -> None:
     import benchmarks.bench_roofline as b_roof
     import benchmarks.bench_serving as b_serve
     import benchmarks.bench_cache_policies as b_cache
+    import benchmarks.bench_trajectory as b_traj
 
     suites = [("similarity", b_sim), ("lazy_tradeoff", b_lazy),
               ("compute", b_comp), ("kernels", b_kern),
               ("roofline", b_roof), ("serving", b_serve),
-              ("cache_policies", b_cache)]
+              ("cache_policies", b_cache), ("trajectory", b_traj)]
     failed = 0
     for name, mod in suites:
         t0 = time.time()

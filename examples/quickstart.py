@@ -21,7 +21,7 @@ from repro.core import lazy as lazy_lib
 from repro.core import similarity as sim_lib
 from repro.data.synthetic import LatentImageDataset
 from repro.models import dit as dit_lib
-from repro.sampling import ddim
+from repro.sampling import ddim, trajectory
 from repro.train import optim, trainer
 
 
@@ -66,6 +66,9 @@ def main():
                   f"s_ffn {float(aux['s_ffn']):.3f}")
 
     # 3. sampling in all modes ------------------------------------------------
+    # the no-collect paths run through the FUSED single-compile trajectory
+    # executor (sampling/trajectory.py): the whole DDIM loop is one
+    # lax.scan, plan rows ride along as scanned device arrays
     labels = jnp.arange(4) % cfg.dit_n_classes
     kk = jax.random.PRNGKey(7)
     x_full, _ = ddim.ddim_sample(params, cfg, sched, key=kk, labels=labels,
@@ -81,8 +84,11 @@ def main():
     print(f"== realized lazy ratio (masked mode): {ratio:.1%}")
 
     plan = lazy_lib.plan_with_target_ratio(scores.mean(2), target=0.3)
-    x_plan, _ = ddim.ddim_sample(params, cfg, sched, key=kk, labels=labels,
-                                 n_steps=10, lazy_mode="plan", plan=plan.skip)
+    x_plan, aux_p = trajectory.sample_trajectory(
+        params, cfg, sched, key=kk, labels=labels, n_steps=10,
+        lazy_mode="plan", plan=plan.skip)
+    print(f"== fused plan-mode trajectory: one compiled scan, realized "
+          f"skip ratio {aux_p['realized_skip_ratio']:.1%}")
     err_m = float(jnp.mean((x_full - x_masked) ** 2))
     err_p = float(jnp.mean((x_full - x_plan) ** 2))
     ref = float(jnp.mean(x_full ** 2))

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.policy import CachePolicy, register_policy
@@ -94,6 +95,11 @@ class StridePolicy(CachePolicy):
                 skip[t] = True
         return lazy_lib.LazyPlan(skip)
 
+    def plan_horizon(self, default: int) -> int:
+        # a stride-aligned horizon keeps the cycled refresh pattern
+        # congruent with the t % stride rule across cycle boundaries
+        return -(-default // self.stride) * self.stride
+
     def decide(self, step, layer, module, z=None, state=None) -> bool:
         if state is not None:
             return super().decide(step, layer, module, z, state)
@@ -112,6 +118,14 @@ class LazyGatePolicy(CachePolicy):
     def __init__(self, threshold: float = 0.5, soft: bool = False):
         self.threshold = float(threshold)
         self.exec_mode = "soft" if soft else "masked"
+
+    def init_traced_state(self, *, n_steps, n_layers, n_modules=2):
+        st = super().init_traced_state(n_steps=n_steps, n_layers=n_layers,
+                                       n_modules=n_modules)
+        # the threshold rides the carry so a scan body can reproduce
+        # decide() without closing over host floats
+        st["threshold"] = jnp.float32(self.threshold)
+        return st
 
     def decide(self, step, layer, module, z=None, state=None, *,
                gate=None, score=None) -> bool:
@@ -175,6 +189,28 @@ class SmoothCachePolicy(CachePolicy):
             run_len = np.where(skip[t], run_len + 1, 0)
         return lazy_lib.LazyPlan(skip)
 
+    def plan_horizon(self, default: int) -> int:
+        # serve the full calibrated schedule, never a resampled slice
+        return self.profile.shape[0]
+
+    def init_traced_state(self, *, n_steps, n_layers, n_modules=2):
+        st = super().init_traced_state(n_steps=n_steps, n_layers=n_layers,
+                                       n_modules=n_modules)
+        # threshold + realized consecutive-reuse counters ride the scan
+        # carry: the staleness guard is baked into the compiled plan, but
+        # the traced run_len tracks what the trajectory actually served
+        # (and lets a future in-trace guard compare against max_skip_run)
+        st["threshold"] = jnp.float32(self.error_threshold)
+        st["run_len"] = jnp.zeros((n_layers, n_modules), jnp.int32)
+        return st
+
+    def update_traced_state(self, state, *, scores=None, plan_row=None):
+        state = super().update_traced_state(state, scores=scores,
+                                            plan_row=plan_row)
+        if plan_row is not None:
+            state["run_len"] = jnp.where(plan_row, state["run_len"] + 1, 0)
+        return state
+
 
 @register_policy("static_router")
 class StaticRouterPolicy(CachePolicy):
@@ -211,6 +247,9 @@ class StaticRouterPolicy(CachePolicy):
         return lazy_lib.plan_with_target_ratio(affinity, self.ratio,
                                                per_layer=True)
 
+    def plan_horizon(self, default: int) -> int:
+        return self.profile.shape[0] if self.profile is not None else default
+
 
 @register_policy("plan")
 class PlanPolicy(CachePolicy):
@@ -234,6 +273,9 @@ class PlanPolicy(CachePolicy):
                 f"plan must be (n_steps, {n_layers}, {n_modules}) bool, "
                 f"got {self.plan.skip.shape}")
         return self.plan
+
+    def plan_horizon(self, default: int) -> int:
+        return self.plan.skip.shape[0]
 
 
 def noop_plan_row(n_layers: int, n_modules: int = 2) -> np.ndarray:

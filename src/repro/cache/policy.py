@@ -27,11 +27,21 @@ State protocol: ``init_state`` builds a host-side dict (compiled plan,
 step counter, last observed scores), ``decide``/``plan_row`` read it, and
 ``update_state`` advances it once per sampling/decode step.  State is
 plain data so it can ride in slot-cache payloads (core/lazy slot helpers).
+
+Traced-state protocol (the fused trajectory executor, DESIGN.md
+§Trajectory): ``init_traced_state`` builds the same state as a pytree of
+DEVICE arrays, ``update_traced_state`` is a pure pytree transform safe to
+call inside a ``lax.scan`` body, and ``device_plan`` materializes the
+compiled schedule as a (n_steps, L, M) bool device array to be SCANNED
+over (one plan row per step) instead of baked in as a static jit arg —
+the whole sampling loop then compiles exactly once.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional, Tuple, Type
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lazy as lazy_lib
@@ -71,7 +81,56 @@ class CachePolicy:
             state["scores"] = scores
         return state
 
+    # ------------------------------------------------------------ traced state
+    def init_traced_state(self, *, n_steps: int, n_layers: int,
+                          n_modules: int = 2) -> Dict:
+        """Policy state as a pytree of device arrays — the representation
+        that rides a ``lax.scan`` carry (fused trajectory executor).
+        Mirrors ``init_state``'s step counter and last-observed scores;
+        the compiled plan travels separately via ``device_plan`` as a
+        scanned input, not carry state."""
+        return {"step": jnp.zeros((), jnp.int32),
+                "scores": jnp.zeros((n_layers, n_modules), jnp.float32)}
+
+    def update_traced_state(self, state: Dict, *, scores=None,
+                            plan_row=None) -> Dict:
+        """Advance the traced state one step — a PURE pytree transform
+        (trace-safe: no host reads, no mutation).  ``scores`` is this
+        step's (n_layers, n_modules) layer-mean probe scores when the
+        executor computed any; ``plan_row`` is the (n_layers, n_modules)
+        bool row the step consumed, for policies that track realized
+        reuse runs."""
+        state = dict(state)
+        state["step"] = state["step"] + 1
+        if scores is not None:
+            state["scores"] = scores
+        return state
+
+    def device_plan(self, n_steps: int, n_layers: int,
+                    n_modules: int = 2) -> Optional[jax.Array]:
+        """The compiled schedule as an (n_steps, n_layers, n_modules) bool
+        DEVICE array for scanned (traced-row) execution, or None for
+        dynamic policies.  Schedules shorter/longer than ``n_steps``
+        cycle rows exactly like ``plan_row`` does, so the fused executor
+        consumes the same schedule the host loop serves."""
+        plan = self.compile_plan(n_steps, n_layers, n_modules)
+        if plan is None:
+            return None
+        skip = np.asarray(plan.skip, bool)
+        if skip.shape[0] != n_steps:
+            skip = skip[np.arange(n_steps) % skip.shape[0]]
+        return jnp.asarray(skip)
+
     # ------------------------------------------------------------ schedule
+    def plan_horizon(self, default: int) -> int:
+        """Decode-schedule horizon: the policy's natural schedule length,
+        falling back to ``default`` for policies with no intrinsic one.
+        Serving engines cycle rows over this horizon; deriving it here
+        (instead of a fixed global) keeps schedules whose length is not a
+        divisor of the old fixed horizon from being truncated or
+        misaligned (serving/engine.py)."""
+        return default
+
     def compile_plan(self, n_steps: int, n_layers: int,
                      n_modules: int = 2) -> Optional[lazy_lib.LazyPlan]:
         """Full static (n_steps, n_layers, n_modules) schedule, or None for

@@ -76,8 +76,28 @@ class LazyOut(NamedTuple):
 
 def _not_fresh(fresh: Array, ndim: int) -> Array:
     """~fresh broadcast to ``ndim`` trailing dims.  ``fresh`` is (B,) host-
-    batched or 0-d under the per-slot vmap of decode_step_mixed."""
+    batched, 0-d under the per-slot vmap of decode_step_mixed, or a traced
+    first-step scalar inside the fused trajectory scan."""
     return jnp.logical_not(jnp.reshape(fresh, (-1,) + (1,) * (ndim - 1)))
+
+
+def select_cached(skip, y_new: Array, cache_y: Array,
+                  fresh: Optional[Array] = None) -> Array:
+    """The one select-based gating rule: serve ``cache_y`` where ``skip``,
+    ``y_new`` elsewhere, never serving a just-reset (``fresh``) cache.
+
+    ``skip`` is a traced boolean — scalar (one plan entry applied to the
+    whole batch, the fused trajectory executor), (B,) per-sample (masked
+    probes / per-slot plan rows under decode_step_mixed's vmap), or
+    anything broadcastable over ``y_new``'s trailing dims.  Both the
+    DiT sampling path and the LM decode path route their where-selects
+    through here, so traced plan rows and masked probe decisions share
+    one implementation (DESIGN.md §Trajectory).
+    """
+    skip = jnp.reshape(skip, (-1,) + (1,) * (y_new.ndim - 1))
+    if fresh is not None:
+        skip = jnp.logical_and(skip, _not_fresh(fresh, y_new.ndim))
+    return jnp.where(skip, cache_y, y_new)
 
 
 def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
@@ -121,10 +141,7 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
             y = fn(z)
             if cache_y is None:
                 return LazyOut(y, y, None)
-            skip = jnp.reshape(plan_skip, (-1,) + (1,) * (y.ndim - 1))
-            if fresh is not None:
-                skip = jnp.logical_and(skip, _not_fresh(fresh, y.ndim))
-            y = jnp.where(skip, cache_y, y)
+            y = select_cached(plan_skip, y, cache_y, fresh)
             return LazyOut(y, y, None)
         if plan_skip and cache_y is not None:
             return LazyOut(cache_y, cache_y, None)   # module absent from HLO
@@ -146,10 +163,7 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
         return LazyOut(y, y, s)
     if mode == "masked":
         y_new = fn(z)
-        skip = (s > threshold)[:, None, None]
-        if fresh is not None:
-            skip = jnp.logical_and(skip, _not_fresh(fresh, y_new.ndim))
-        y = jnp.where(skip, cache_y, y_new)
+        y = select_cached(s > threshold, y_new, cache_y, fresh)
         return LazyOut(y, y, s)
     raise ValueError(f"unknown lazy mode: {mode}")
 

@@ -10,6 +10,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all            # full sweep
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+  # fused DDIM trajectory (DiT archs): ONE compile for n sampling steps,
+  # whole-trajectory FLOPs/bytes via the loop-aware dist/hlo analyzer
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dit_xl2_256 \
+      --shape sample_8 --policy static_router
 Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
 """
 
@@ -79,16 +83,11 @@ def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 
-def policy_plan_step(cfg: ModelConfig, opts: dict) -> np.ndarray:
-    """--policy <name> -> one (n_layers, 2) static plan row for the decode
-    dry-run (the compiled HLO drops the skipped modules; dist/hlo then
-    quantifies the saving).  Row ``--policy-step`` of the policy's compiled
-    schedule is used — an odd mid-trajectory default, since first/last
-    steps are always fresh and even steps are stride refresh (all-fresh)
-    rows."""
+def build_cli_policy(opts: dict):
+    """--policy <name> (+ --calibration / thresholds) -> a repro.cache
+    policy instance.  Shared by the decode plan-row path and the fused
+    sample_<n> trajectory path."""
     name = opts["policy"]
-    if name == "none":
-        return cache_lib.noop_plan_row(cfg.n_layers)    # no-skip baseline
     kw = {}
     if name == "stride":
         kw["stride"] = int(opts.get("stride") or 2)
@@ -106,7 +105,20 @@ def policy_plan_step(cfg: ModelConfig, opts: dict) -> np.ndarray:
                 opts.get("policy_ratio", 0.5)))
     if name == "static_router":
         kw["ratio"] = opts.get("policy_ratio", 0.5)
-    pol = cache_lib.get_policy(name, **kw)
+    return cache_lib.get_policy(name, **kw)
+
+
+def policy_plan_step(cfg: ModelConfig, opts: dict) -> np.ndarray:
+    """--policy <name> -> one (n_layers, 2) static plan row for the decode
+    dry-run (the compiled HLO drops the skipped modules; dist/hlo then
+    quantifies the saving).  Row ``--policy-step`` of the policy's compiled
+    schedule is used — an odd mid-trajectory default, since first/last
+    steps are always fresh and even steps are stride refresh (all-fresh)
+    rows."""
+    name = opts["policy"]
+    if name == "none":
+        return cache_lib.noop_plan_row(cfg.n_layers)    # no-skip baseline
+    pol = build_cli_policy(opts)
     steps = max(int(opts.get("policy_steps") or 8), 3)
     plan = pol.compile_plan(steps, cfg.n_layers, 2)
     if plan is None:
@@ -116,6 +128,104 @@ def policy_plan_step(cfg: ModelConfig, opts: dict) -> np.ndarray:
                          "the no-skip baseline)")
     t = int(opts.get("policy_step", 3)) % steps
     return np.asarray(plan.skip[t], bool)
+
+
+# ---------------------------------------------------------------------------
+# fused-sampler trajectory dry-runs (--shape sample_<n>, DiT archs)
+# ---------------------------------------------------------------------------
+
+
+SAMPLE_BATCH = 2          # conditional rows; CFG doubles them in-program
+SAMPLE_CFG_SCALE = 1.5
+
+
+def run_sample(arch: str, shape_name: str, *, tag: str = "",
+               opts: Optional[dict] = None) -> dict:
+    """--shape sample_<n>: lower + compile the FUSED DDIM trajectory
+    executor (sampling/trajectory.py) ONCE and account the whole
+    trajectory through the loop-aware dist/hlo analyzer — the sampling
+    scan body is multiplied by its trip count (n sampling steps), so the
+    reported FLOPs/bytes cover all n denoiser evaluations in a single
+    compiled program.  Any --policy works: plan-mode rows ride the scan as
+    traced selects (compute stays in the HLO — the traced-vs-static
+    tradeoff documented in DESIGN.md §Trajectory), dynamic policies decide
+    in-trace, 'none' is the no-skip baseline."""
+    opts = opts or {}
+    n_steps = int(shape_name.split("_", 1)[1])
+    if n_steps < 1:
+        raise ValueError(f"sample shape needs >= 1 step, got {shape_name!r}")
+    cfg = get_config(arch)
+    if cfg.family != "dit":
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "why": "sample_<n> trajectory shapes are DiT-only"}
+
+    from repro.models import dit as dit_lib
+    from repro.sampling import ddim as ddim_lib
+    from repro.sampling import trajectory
+
+    name = opts.get("policy") or "none"
+    if name == "none":
+        # baseline trajectory measures the un-gated model (run_one's rule)
+        cfg = cfg.replace(lazy=LazyConfig(enabled=False))
+        pol = cache_lib.get_policy("none")
+    else:
+        pol = build_cli_policy(dict(opts, policy=name))
+    plan = (pol.device_plan(n_steps, cfg.n_layers, 2)
+            if pol.exec_mode == "plan" else None)
+    state0 = pol.init_traced_state(n_steps=n_steps, n_layers=cfg.n_layers,
+                                   n_modules=2)
+
+    fn = trajectory.build_sampler(cfg, pol, n_steps, SAMPLE_CFG_SCALE)
+    params_abs = jax.eval_shape(lambda k: dit_lib.init_dit(k, cfg),
+                                jax.random.PRNGKey(0))
+    sched_abs = jax.eval_shape(lambda: ddim_lib.linear_schedule(1000))
+    ts, ts_prev = trajectory.timestep_arrays(1000, n_steps)
+    key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    labels_abs = jax.ShapeDtypeStruct((SAMPLE_BATCH,), jnp.int32)
+    z0_abs = jax.ShapeDtypeStruct(
+        (SAMPLE_BATCH, cfg.dit_input_size, cfg.dit_input_size,
+         cfg.dit_in_channels), jnp.float32)
+
+    t0 = time.time()
+    lowered = fn.lower(params_abs, sched_abs, ts, ts_prev, z0_abs, key_abs,
+                       labels_abs, plan, state0)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mod = hlo_lib.analyze_module(compiled.as_text())
+    flops, bytes_acc = float(mod["flops"]), float(mod["bytes"])
+    mem = compiled.memory_analysis()
+    n_params = count_params_abs(params_abs)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": 0.0}
+    plan_ratio = (float(np.asarray(plan).mean()) if plan is not None else 0.0)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": "single",
+        "kind": "sample", "n_steps": n_steps, "batch": SAMPLE_BATCH,
+        "cfg_scale": SAMPLE_CFG_SCALE, "tag": tag,
+        "policy": name, "exec_mode": pol.exec_mode,
+        "plan_skip_ratio": plan_ratio,
+        "n_params": n_params,
+        "compiles": 1,          # the whole trajectory is one executable
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": bytes_acc,
+                 "flops_per_step": flops / n_steps,
+                 "bytes_per_step": bytes_acc / n_steps},
+        "roofline": {**terms,
+                     "dominant": max(terms, key=terms.get),
+                     "model_flops_global": None,
+                     "model_flops_per_device": None,
+                     "useful_compute_ratio": None},
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +415,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             seq_parallel: bool = True, remat: bool = True,
             tag: str = "", opts: Optional[dict] = None) -> dict:
     opts = opts or {}
+    if shape_name.startswith("sample_"):
+        return run_sample(arch, shape_name, tag=tag, opts=opts)
     cfg = get_config(arch)
     if opts.get("lazy_plan") is None and not opts.get("policy"):
         # baseline dry-runs measure the un-gated model; lazy variants keep
@@ -403,6 +515,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 def save(result: dict):
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     name = f"{result['arch']}__{result['shape']}__{result.get('mesh', 'skip')}"
+    # policy runs get their own artifact: a --policy dry-run must never
+    # silently overwrite the no-policy baseline for the same cell
+    pol = result.get("policy") or (result.get("opts") or {}).get("policy")
+    if pol:
+        name += f"__pol-{pol}"
     if result.get("tag"):
         name += f"__{result['tag']}"
     path = os.path.join(ARTIFACT_DIR, name + ".json")
@@ -414,7 +531,9 @@ def save(result: dict):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
+    ap.add_argument("--shape", default=None,
+                    help="an INPUT_SHAPES name, or sample_<n> (DiT archs: "
+                         "fused n-step DDIM trajectory, one compile)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")

@@ -47,25 +47,35 @@ def build_plan(args, cfg, n_steps: int) -> lazy_lib.LazyPlan:
                                  seed=args.seed)
 
 
-def _calibration(args, cfg, params):
-    """--calibration loads a saved artifact; otherwise a quick probe decode
-    (repro.cache.calibrate.calibrate_lm) self-calibrates on the spot."""
+def _calibration(args, cfg, params, sched=None):
+    """--calibration loads a saved artifact; otherwise a quick in-process
+    probe self-calibrates on the spot (calibrate_lm for decoders,
+    calibrate_dit over a DDIM probe trajectory for DiT archs)."""
     if args.calibration:
         art = calibrate_lib.CalibrationArtifact.load(args.calibration)
         print(f"calibration: {args.calibration} (kind={art.kind} "
               f"arch={art.arch} T={art.n_steps})")
         return art
-    rng = np.random.default_rng(args.seed)
-    prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
-    print(f"calibration: none given — probing {args.calib_steps} decode "
-          f"steps in-process")
-    art = calibrate_lib.calibrate_lm(params, cfg, prompt, args.calib_steps)
+    if cfg.family == "dit":
+        import jax.numpy as jnp
+        labels = jnp.arange(2) % cfg.dit_n_classes
+        print(f"calibration: none given — probing a {args.calib_steps}-step "
+              "DDIM trajectory in-process")
+        art = calibrate_lib.calibrate_dit(
+            params, cfg, sched, key=jax.random.PRNGKey(args.seed),
+            labels=labels, n_steps=args.calib_steps)
+    else:
+        rng = np.random.default_rng(args.seed)
+        prompt = rng.integers(0, cfg.vocab_size, (1, 4)).astype(np.int32)
+        print(f"calibration: none given — probing {args.calib_steps} decode "
+              f"steps in-process")
+        art = calibrate_lib.calibrate_lm(params, cfg, prompt, args.calib_steps)
     if args.save_calibration:
         print(f"calibration saved -> {art.save(args.save_calibration)}")
     return art
 
 
-def build_policy(args, cfg, params, n_steps: int):
+def build_policy(args, cfg, params, n_steps: int, sched=None):
     """--policy <name> -> a repro.cache policy; '' defers to the legacy
     --lazy flags (which the engines map onto policies internally)."""
     name = args.policy
@@ -79,17 +89,56 @@ def build_policy(args, cfg, params, n_steps: int):
     if name == "lazy_gate":
         return cache_lib.get_policy("lazy_gate", threshold=cfg.lazy.threshold)
     if name == "smoothcache":
-        art = _calibration(args, cfg, params)
+        art = _calibration(args, cfg, params, sched)
         thr = (args.error_threshold if args.error_threshold is not None
                else art.quantile_threshold(args.lazy_ratio))
         return cache_lib.get_policy("smoothcache", calibration=art,
                                     error_threshold=thr)
     if name == "static_router":
-        art = (_calibration(args, cfg, params)
+        art = (_calibration(args, cfg, params, sched)
                if args.calibration or args.calibrate else None)
         return cache_lib.get_policy("static_router", ratio=args.lazy_ratio,
                                     calibration=art, seed=args.seed)
     return cache_lib.get_policy(name)
+
+
+def serve_dit(args, cfg):
+    """DiT archs serve image sampling, not token decode: the whole DDIM
+    trajectory runs through the fused single-compile executor
+    (sampling/trajectory.py) — one XLA program per (config, policy,
+    step-count, guidance), policy plan rows scanned as traced selects."""
+    from repro.models import dit as dit_lib
+    from repro.sampling import ddim, trajectory
+
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        params = restore_checkpoint(args.ckpt, params)
+    sched = ddim.linear_schedule(1000)
+    n_steps = args.n_new                   # sampling steps for DiT archs
+    policy = build_policy(args, cfg, params, n_steps, sched)
+    plan = (build_plan(args, cfg, n_steps).skip
+            if policy is None and args.lazy == "plan" else None)
+    labels = (np.random.default_rng(args.seed)
+              .integers(0, cfg.dit_n_classes, (args.batch,)).astype(np.int32))
+    labels = jax.numpy.asarray(labels)
+
+    kw = dict(key=jax.random.PRNGKey(args.seed), labels=labels,
+              n_steps=n_steps, policy=policy, lazy_mode=args.lazy, plan=plan)
+    t0 = time.perf_counter()
+    x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    jax.block_until_ready(x)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    jax.block_until_ready(x)
+    wall = time.perf_counter() - t0
+    policy_label = args.policy or f"lazy:{args.lazy}"
+    print(f"arch={cfg.name} policy={policy_label} sampler=fused-trajectory "
+          f"steps={n_steps} batch={args.batch} shape={tuple(x.shape)}")
+    print(f"  first call (compile+run): {compile_wall:.2f}s; "
+          f"steady state: {wall:.3f}s "
+          f"({wall / n_steps * 1e3:.1f} ms/step, one compiled scan)")
+    print(f"  realized skip ratio: {aux['realized_skip_ratio']:.1%}")
 
 
 def main():
@@ -139,6 +188,11 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if cfg.family == "dit":
+        # DiT archs sample images: route through the fused single-compile
+        # trajectory executor instead of the token-decode engines
+        serve_dit(args, cfg)
+        return
     needs_gates = (args.policy == "lazy_gate"
                    or (not args.policy and args.lazy != "off"))
     if needs_gates:

@@ -135,11 +135,20 @@ def _modulate(x: Array, shift: Array, scale: Array) -> Array:
 
 def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
                  lazy_cache: Optional[dict], lazy_mode: str,
-                 plan: Tuple[bool, bool] = (False, False),
+                 plan: Tuple = (False, False),
                  prime: bool = False,
+                 fresh: Optional[Array] = None,
                  policy=None):
-    """One DiT block.  ``prime=True`` (first sampling step): run every module
-    but record outputs into the lazy cache.  Returns (x, new_lazy, scores).
+    """One DiT block.  ``prime=True`` (first sampling step, host loop): run
+    every module but record outputs into the lazy cache.  Returns
+    (x, new_lazy, scores).
+
+    ``plan`` entries are static bools (host loop: skipped modules vanish
+    from the compiled HLO) or traced boolean scalars (fused trajectory
+    executor: per-step plan rows arrive as scanned device values and apply
+    as where-selects, core.lazy.select_cached).  ``fresh`` is the traced
+    first-step analogue of the static ``prime`` flag — a just-initialized
+    lazy cache is never served (DESIGN.md §Trajectory).
 
     ``policy`` (repro.cache.CachePolicy) is the skip-decision authority
     when given — it supplies the lazy-execution mode and threshold; the
@@ -153,14 +162,15 @@ def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
     new_lazy = dict(lazy_cache) if lazy_cache else {}
     scores = {}
 
-    def gated(name: str, gate_key: str, z: Array, fn, plan_skip: bool):
+    def gated(name: str, gate_key: str, z: Array, fn, plan_skip):
         cache_y = None
         if lazy_cache is not None and not prime:
             cache_y = lazy_cache.get(name)
         out = lazy_lib.lazy_execute(
             fn, z, gate=blk.get(gate_key), cache_y=cache_y, mode=lazy_mode,
-            threshold=cfg.lazy.threshold, plan_skip=plan_skip and not prime,
-            policy=policy)
+            threshold=cfg.lazy.threshold,
+            plan_skip=False if prime else plan_skip,
+            fresh=fresh, policy=policy)
         if lazy_cache is not None:
             new_lazy[name] = out.new_cache
         if out.score is not None:
@@ -188,8 +198,9 @@ def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
 def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
                 lazy_cache: Optional[dict] = None,
                 lazy_mode: str = "off",
-                plan_row: Optional[np.ndarray] = None,
+                plan_row=None,
                 first_step: bool = False,
+                fresh: Optional[Array] = None,
                 policy=None,
                 ) -> Tuple[Array, Optional[dict], Dict[str, Array]]:
     """One denoiser evaluation.
@@ -199,7 +210,13 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
 
     lazy_cache: {"attn": (L,B,N,D), "ffn": (L,B,N,D)} previous-step module
     outputs, or None on the first sampling step.
-    plan_row: (L, 2) static booleans for 'plan' mode (unrolled layers).
+    plan_row: (L, 2) booleans for 'plan' mode (unrolled layers) — a host
+    array compiles skips out of the HLO (the host debug loop), a traced
+    device array applies them as where-selects (the fused trajectory
+    executor, which scans rows over steps at ONE compile).
+    first_step: static first-step flag (host loop: prime the cache).
+    fresh: traced first-step flag (fused executor: the scan body can't
+    branch on the step, so a just-initialized cache is masked instead).
     policy: cache policy (repro.cache) supplying the execution mode and
     threshold; ``lazy_mode`` is the legacy alias when absent.
     Returns (eps_and_sigma (B,H,W,2C), new_lazy_cache, scores (L,B) per module).
@@ -219,6 +236,7 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
 
     nL = cfg.n_layers
     use_plan = lazy_mode == "plan" and plan_row is not None
+    traced_plan = use_plan and isinstance(plan_row, jax.Array)
     unroll = use_plan or lazy_cache is not None or cfg.lazy.enabled
 
     if unroll:
@@ -229,11 +247,16 @@ def dit_forward(params: dict, cfg: ModelConfig, x: Array, t: Array, y: Array, *,
             blk = jax.tree.map(lambda a: a[l], params["blocks"])
             lc = (None if lazy_cache is None else
                   {"attn": lazy_cache["attn"][l], "ffn": lazy_cache["ffn"][l]})
-            plan = (bool(plan_row[l][0]), bool(plan_row[l][1])) if use_plan \
-                else (False, False)
+            if traced_plan:
+                plan = (plan_row[l, 0], plan_row[l, 1])
+            elif use_plan:
+                plan = (bool(plan_row[l][0]), bool(plan_row[l][1]))
+            else:
+                plan = (False, False)
             h, nlz, sc = _block_apply(blk, cfg, h, c, lazy_cache=lc,
                                       lazy_mode=lazy_mode, plan=plan,
-                                      prime=first_step, policy=policy)
+                                      prime=first_step, fresh=fresh,
+                                      policy=policy)
             if lazy_cache is not None:
                 new_lazy["attn"].append(nlz["attn"])
                 new_lazy["ffn"].append(nlz["ffn"])

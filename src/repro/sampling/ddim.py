@@ -1,8 +1,16 @@
 """DDIM sampler (Song et al. 2020) with classifier-free guidance and
-LazyDiT cache threading across denoising steps."""
+LazyDiT cache threading across denoising steps.
+
+``ddim_sample`` is a thin dispatcher: the default execution path is the
+fused single-compile trajectory executor (sampling/trajectory.py — the
+whole loop is one ``lax.scan``, plan rows are scanned device arrays); the
+host-side step loop survives ONLY as ``ddim_sample_reference``, reached
+through the ``collect_scores``/``collect_traces`` debug flags (per-step
+score/trace logging needs host access between steps) and used by
+tests/test_trajectory.py as the bit-exactness oracle.
+"""
 from __future__ import annotations
 
-import functools
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -63,6 +71,52 @@ def cfg_eps(eps_cond: Array, eps_uncond: Array, w: float) -> Array:
     return w * eps_cond - (w - 1.0) * eps_uncond
 
 
+def trajectory_step(params: dict, cfg: ModelConfig, sched: DiffusionSchedule,
+                    pol, cfg_scale: float, z: Array, labels: Array,
+                    t: Array, t_prev: Array, step: Array,
+                    lazy_cache: Optional[dict], row):
+    """ONE denoising step — the single implementation BOTH executors trace.
+
+    The host-loop reference jits this directly (one dispatch per step);
+    the fused executor (sampling/trajectory.py) makes it the body of a
+    ``lax.scan``.  Sharing the exact subgraph — traced plan ``row``,
+    traced first-step flag (``step == 0``), identical op order — is the
+    precondition for the bit-exactness contract: any divergence in graph
+    shape (a static-arg plan row here, a live debug output there) changes
+    XLA's fusion choices and flips low bits.
+
+    ``t``/``t_prev``/``step`` are traced int32 scalars; ``row`` is this
+    step's traced (L, 2) bool plan row or None; ``lazy_cache`` is the
+    previous step's module outputs (never served at ``step == 0``).
+    Returns (z_next, new_lazy_cache, scores).
+    """
+    C = cfg.dit_in_channels
+    use_cfg = cfg_scale != 1.0
+    if use_cfg:
+        y_all = jnp.concatenate([labels,
+                                 jnp.full_like(labels, cfg.dit_n_classes)])
+    else:
+        y_all = labels
+    zz = jnp.concatenate([z, z]) if use_cfg else z
+    tt = jnp.full((zz.shape[0],), t.astype(jnp.float32), jnp.float32)
+    out, new_lazy, scores = dit_lib.dit_forward(
+        params, cfg, zz, tt, y_all, lazy_cache=lazy_cache,
+        lazy_mode=pol.exec_mode, plan_row=row, fresh=step == 0, policy=pol)
+    eps_all, _ = dit_lib.split_eps(out, C)
+    if use_cfg:
+        e_c, e_u = jnp.split(eps_all, 2)
+        eps = cfg_eps(e_c, e_u, cfg_scale)
+    else:
+        eps = eps_all
+    # fusion boundary shared by both executors: without it XLA fuses the
+    # DDIM update with whatever surrounds it (a scan carry vs a jit
+    # epilogue), changing FMA contraction and flipping ~1 ulp per step
+    z, eps = jax.lax.optimization_barrier((z, eps))
+    B = z.shape[0]
+    z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev))
+    return z, new_lazy, scores
+
+
 def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
                 key, labels: Array, n_steps: int, cfg_scale: float = 1.5,
                 lazy_mode: str = "off",
@@ -81,12 +135,58 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
     (repro.cache; DESIGN.md §Cache).  ``policy`` names or carries it
     directly; the legacy (``lazy_mode``, ``plan``) pair is an alias mapped
     onto a policy via repro.cache.from_legacy, so existing callers are
-    unchanged.  Static policies serve per-step plan rows that are removed
-    from the compiled HLO; dynamic policies (lazy_gate) decide in traced
-    code.
+    unchanged.
 
-    Returns (samples (B,H,W,C), aux) where aux may contain per-step probe
-    scores and/or module output traces (for the similarity benchmarks).
+    Execution: the fused trajectory executor (sampling/trajectory.py)
+    compiles the whole loop once, with plan rows as scanned device arrays.
+    The ``collect_scores``/``collect_traces`` debug flags force the
+    host-loop reference (``ddim_sample_reference``) instead — per-step
+    probe scores / module-output traces need host access between steps.
+
+    Returns (samples (B,H,W,C), aux); aux carries the final policy state
+    and realized skip ratio (fused path) or the per-step score/trace logs
+    (debug path).
+    """
+    if not (collect_scores or collect_traces):
+        from repro.sampling import trajectory
+        return trajectory.sample_trajectory(
+            params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
+            cfg_scale=cfg_scale, lazy_mode=lazy_mode, plan=plan,
+            policy=policy)
+    return ddim_sample_reference(
+        params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
+        cfg_scale=cfg_scale, lazy_mode=lazy_mode, plan=plan, policy=policy,
+        collect_scores=collect_scores, collect_traces=collect_traces)
+
+
+def ddim_sample_reference(params: dict, cfg: ModelConfig,
+                          sched: DiffusionSchedule, *,
+                          key, labels: Array, n_steps: int,
+                          cfg_scale: float = 1.5,
+                          lazy_mode: str = "off",
+                          plan: Optional[np.ndarray] = None,
+                          policy=None,
+                          collect_scores: bool = False,
+                          collect_traces: bool = False,
+                          ) -> Tuple[Array, Dict]:
+    """Host-loop reference sampler (the debug path).
+
+    One jitted ``trajectory_step`` dispatch per sampling step — the SAME
+    step computation the fused scan body traces (plan rows as traced
+    device arrays, traced first-step flag), so the fused executor matches
+    this loop bit-for-bit (tests/test_trajectory.py).  What stays
+    host-side is the per-step dispatch and the score/trace collection;
+    what the fused executor removes is exactly that per-step overhead
+    plus the per-call retrace this closure pays.  (The compile-time
+    static-row path — skipped modules absent from the HLO, the measured
+    FLOP saving — lives in dit_forward's host-array plan rows and is
+    exercised directly by dist/hlo accounting in the benches and
+    launch/dryrun.)
+
+    Score/trace logs are collected with pipelined async device->host
+    transfers (see ``_log``): the loop never blocks on its own step's
+    data, so debug collection doesn't serialize the device queue
+    step-by-step, and at most one step of logs stays on device.
     """
     pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
                                threshold=cfg.lazy.threshold)
@@ -99,60 +199,58 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
     C = cfg.dit_in_channels
     z = jax.random.normal(key, (B, H, H, C), jnp.float32)
     ts = sampling_timesteps(sched.n_train_steps, n_steps)
-
     use_cfg = cfg_scale != 1.0
-    if use_cfg:
-        y_all = jnp.concatenate([labels, jnp.full_like(labels, cfg.dit_n_classes)])
-    else:
-        y_all = labels
 
     lazy_cache = None
     if lazy_mode != "off":
         lazy_cache = dit_lib.init_dit_lazy_cache(cfg, 2 * B if use_cfg else B)
+    plan_dev = (pol.device_plan(n_steps, cfg.n_layers, 2)
+                if lazy_mode == "plan" else None)
 
-    @functools.partial(jax.jit, static_argnames=("plan_row", "first"))
-    def model_eval(z, t_scalar, lazy_cache, plan_row, first):
-        zz = jnp.concatenate([z, z]) if use_cfg else z
-        tt = jnp.full((zz.shape[0],), t_scalar, jnp.float32)
-        pr = np.asarray(plan_row) if plan_row is not None else None
-        out, new_lazy, scores = dit_lib.dit_forward(
-            params, cfg, zz, tt, y_all, lazy_cache=lazy_cache,
-            lazy_mode=lazy_mode, plan_row=pr, first_step=first, policy=pol)
-        eps_all, _ = dit_lib.split_eps(out, C)
-        if use_cfg:
-            e_c, e_u = jnp.split(eps_all, 2)
-            eps = cfg_eps(e_c, e_u, cfg_scale)
-        else:
-            eps = eps_all
-        return eps, new_lazy, scores
+    @jax.jit
+    def step_eval(params, sched, z, labels, t, t_prev, step, lazy_cache,
+                  row):
+        return trajectory_step(params, cfg, sched, pol, cfg_scale, z,
+                               labels, t, t_prev, step, lazy_cache, row)
+
+    def _log(log, tree):
+        """Pipelined device->host collection: start THIS step's transfer
+        asynchronously, materialize the PREVIOUS step's (whose transfer
+        has had a full step to complete).  The loop never blocks on its
+        own step's data, and at most one step of logged trees stays on
+        device — keeping whole-trajectory trace collection (n_steps ×
+        (L, B', N, D) activations) from pinning accelerator memory the
+        way an after-the-loop batch conversion would."""
+        jax.tree.map(lambda a: a.copy_to_host_async(), tree)
+        log.append(tree)
+        if len(log) > 1:
+            log[-2] = jax.tree.map(np.asarray, log[-2])
 
     score_log, trace_log = [], []
     for i, t in enumerate(ts):
         t_prev = ts[i + 1] if i + 1 < len(ts) else -1
-        plan_row = None
-        if lazy_mode == "plan" and i > 0:
-            # hashable static arg: the row is baked into the trace, so
-            # skipped modules are absent from the compiled HLO
-            row = pol.plan_row(i, pstate)
-            plan_row = tuple(tuple(bool(b) for b in r) for r in row)
-        eps, lazy_cache, scores = model_eval(z, float(t), lazy_cache, plan_row,
-                                             i == 0)
-        z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev))
-        if collect_scores and scores:
-            sc_np = jax.tree.map(np.asarray, scores)
-            score_log.append(sc_np)
+        row = plan_dev[i] if plan_dev is not None else None
+        z, lazy_cache, scores = step_eval(params, sched, z, labels,
+                                          jnp.int32(t), jnp.int32(t_prev),
+                                          jnp.int32(i), lazy_cache, row)
+        if scores:
+            # the same layer-mean statistic the fused executor feeds
+            # update_traced_state, kept device-side (no per-step sync)
             pstate = pol.update_state(
                 pstate, step=i,
-                scores=np.stack([sc_np["attn"].mean(-1),
-                                 sc_np["ffn"].mean(-1)], axis=-1))
+                scores=jnp.stack([scores["attn"].mean(-1),
+                                  scores["ffn"].mean(-1)], axis=-1))
         else:
             pstate = pol.update_state(pstate, step=i)
+        if collect_scores and scores:
+            _log(score_log, scores)
         if collect_traces and lazy_cache is not None:
-            trace_log.append(jax.tree.map(np.asarray, lazy_cache))
+            _log(trace_log, lazy_cache)
 
     aux = {}
+    # only the LAST step still needs materializing here
     if score_log:
-        aux["scores"] = score_log
+        aux["scores"] = jax.tree.map(np.asarray, score_log)
     if trace_log:
-        aux["traces"] = trace_log
+        aux["traces"] = jax.tree.map(np.asarray, trace_log)
     return z, aux

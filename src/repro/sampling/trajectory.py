@@ -1,0 +1,199 @@
+"""Single-compile fused DDIM trajectory executor.
+
+The paper's speedup claim is about per-step compute skipped across the
+denoising trajectory — but a host-side Python loop that bakes each policy
+plan row in as a *static* jit argument pays up to one XLA compilation per
+distinct row plus per-step dispatch/sync, exactly the overhead regime
+where lazy skipping stops mattering.  Schedule-based policies
+(smoothcache, static_router, stride, plan) produce the whole (T, L, 2)
+skip plan up front, which is precisely the shape ``lax.scan`` wants as a
+scanned input: this module compiles the ENTIRE sampling loop as one
+``jax.lax.scan`` over steps.
+
+Carry layout (DESIGN.md §Trajectory):
+  (z, lazy_cache, policy_state, rng_key, n_skipped)
+    z            — (B, H, W, C) DDIM latent
+    lazy_cache   — {"attn": (L, B', N, D), "ffn": ...} previous-step module
+                   outputs (B' doubled under CFG); None when exec_mode 'off'
+    policy_state — the policy's traced pytree state
+                   (CachePolicy.init_traced_state / update_traced_state)
+    rng_key      — split every step; reserved for eta > 0 samplers (eta = 0
+                   DDIM draws no per-step noise)
+    n_skipped    — realized skipped-module-call counter (scalar f32)
+
+Scanned inputs: (t, t_prev, step_index, plan_row) — plan rows are a
+(T, L, 2) bool DEVICE array (CachePolicy.device_plan) consumed via
+where-selects (core.lazy.select_cached), so changing the schedule never
+retraces; the first sampling step is handled by a traced ``fresh`` flag
+instead of a static ``first_step`` branch.
+
+The result is bit-exact with the host-loop reference
+(sampling/ddim.ddim_sample_reference) for every registered policy, at
+exactly ONE compile per (config, policy, horizon, guidance) —
+tests/test_trajectory.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import policy as cache_policy
+from repro.configs.base import ModelConfig
+from repro.models import dit as dit_lib
+from repro.sampling import ddim
+
+Array = jax.Array
+
+N_MODULES = 2          # plan columns: 0 = attention, 1 = ffn
+
+
+def timestep_arrays(n_train: int, n_steps: int) -> Tuple[Array, Array]:
+    """(t, t_prev) int32 device arrays for the scan's per-step inputs.
+
+    Passed into the jitted sampler as TRACED arguments, never baked in as
+    closure constants — constant timesteps would let XLA constant-fold
+    the sinusoidal embedding at compile time, and the compile-time
+    evaluator's cos/sin round differently than the runtime kernels (a
+    1-ulp break of the bit-exactness contract vs the host reference,
+    whose per-step jit always receives t as a traced scalar)."""
+    ts_np = ddim.sampling_timesteps(n_train, n_steps)
+    ts = jnp.asarray(ts_np, jnp.int32)
+    ts_prev = jnp.asarray(np.concatenate([ts_np[1:], [-1]]), jnp.int32)
+    return ts, ts_prev
+
+
+_SAMPLER_CACHE: Dict[tuple, object] = {}
+
+
+def _sampler_cache_key(cfg: ModelConfig, pol, n_steps: int,
+                       cfg_scale: float) -> tuple:
+    """What the TRACE actually depends on.  Keying on the policy instance
+    would defeat the compile-once contract: resolve() builds a fresh
+    policy object per ddim_sample call for legacy/lazy-mode/string args,
+    so every call would recompile the whole trajectory.  Two policies of
+    the same class, exec mode and threshold trace identically — the
+    schedule itself is a traced input (device_plan), never part of the
+    trace."""
+    return (cfg, type(pol), pol.exec_mode,
+            float(getattr(pol, "threshold", 0.5)),
+            int(n_steps), float(cfg_scale))
+
+
+def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float):
+    """One jitted whole-trajectory sampler per (config, policy-shape,
+    horizon, guidance scale) — policy-shape meaning (class, exec_mode,
+    threshold), see _sampler_cache_key.
+
+    Returns ``sample(params, sched, ts, ts_prev, z0, key, labels, plan,
+    state0) -> (z, aux)`` where ``(ts, ts_prev)`` come from
+    ``timestep_arrays``, ``z0`` is the initial latent (generated HOST-side
+    by the caller, exactly like the reference loop — inlining the RNG
+    into the trace lets XLA fuse it with the first step's math and break
+    bit-parity), ``plan`` is the policy's (n_steps, L, 2) bool device
+    array (None for non-plan modes) and ``state0`` the traced policy
+    state.  Timesteps, plan and state are *inputs*, not closure
+    constants: different schedules of the same shape reuse the one
+    compiled executable (the compile-once contract the trace-cache probe
+    in tests/test_trajectory.py asserts).
+    """
+    key = _sampler_cache_key(cfg, policy, n_steps, cfg_scale)
+    cached = _SAMPLER_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    pol = policy
+    mode = pol.exec_mode
+    use_cfg = cfg_scale != 1.0
+    lazy = mode != "off"
+    threshold = getattr(pol, "threshold", 0.5)
+
+    @jax.jit
+    def sample(params, sched, ts, ts_prev, z0, key, labels, plan, state0):
+        B = labels.shape[0]
+        BB = 2 * B if use_cfg else B
+        z = z0
+        lazy_cache = dit_lib.init_dit_lazy_cache(cfg, BB) if lazy else None
+        steps = jnp.arange(n_steps, dtype=jnp.int32)
+
+        def body(carry, xs):
+            z, lzc, pstate, key, n_skipped = carry
+            t, t_prev, step, row = xs
+            key, _noise_key = jax.random.split(key)      # eta > 0 reserve
+            first = step == 0
+            z, new_lzc, scores = ddim.trajectory_step(
+                params, cfg, sched, pol, cfg_scale, z, labels, t, t_prev,
+                step, lzc, row)
+
+            sc = None
+            if scores and mode in ("masked", "soft"):
+                # policy state carries the same layer-mean statistic the
+                # host loop feeds update_state...
+                sc = jnp.stack([scores["attn"].mean(-1),
+                                scores["ffn"].mean(-1)], axis=-1)   # (L, 2)
+                # ...but the skip accounting mirrors the ACTUAL select:
+                # lazy_execute thresholds per SAMPLE, so count the
+                # batch-mean fraction of per-sample skips per module call
+                # (thresholding the batch-mean score would miss modules
+                # where scores straddle the threshold)
+                per_sample = jnp.stack([scores["attn"], scores["ffn"]],
+                                       axis=-1) > threshold      # (L, B', 2)
+                n_skipped = n_skipped + jnp.where(
+                    first, 0.0,
+                    jnp.sum(per_sample.astype(jnp.float32).mean(axis=1)))
+            elif row is not None:
+                n_skipped = n_skipped + jnp.where(
+                    first, 0.0, jnp.sum(row.astype(jnp.float32)))
+            pstate = pol.update_traced_state(pstate, scores=sc, plan_row=row)
+            return (z, new_lzc, pstate, key, n_skipped), None
+
+        carry0 = (z, lazy_cache, state0, key, jnp.zeros((), jnp.float32))
+        (z, _, pstate, _, n_skipped), _ = jax.lax.scan(
+            body, carry0, (ts, ts_prev, steps, plan))
+        return z, {"policy_state": pstate, "n_skipped": n_skipped}
+
+    _SAMPLER_CACHE[key] = sample
+    return sample
+
+
+build_sampler.cache_clear = _SAMPLER_CACHE.clear    # test/bench hook
+
+
+def sample_trajectory(params: dict, cfg: ModelConfig,
+                      sched: ddim.DiffusionSchedule, *,
+                      key, labels: Array, n_steps: int,
+                      cfg_scale: float = 1.5,
+                      lazy_mode: str = "off",
+                      plan: Optional[np.ndarray] = None,
+                      policy=None) -> Tuple[Array, Dict]:
+    """Fused DDIM sampling: the whole trajectory in one compiled scan.
+
+    Same contract as sampling/ddim.ddim_sample (which routes here unless
+    a debug collector forces the host loop): CFG doubles the batch, every
+    skip/reuse decision goes through one cache policy, and the output is
+    bit-exact with the host-loop reference.
+
+    Returns (samples (B, H, W, C), aux) with
+      aux["policy_state"]        — the policy's final traced state pytree
+      aux["realized_skip_ratio"] — skipped gated-module calls / total
+                                   (plan rows for static policies, probe
+                                   thresholding for lazy_gate).
+    """
+    pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
+                               threshold=cfg.lazy.threshold)
+    fn = build_sampler(cfg, pol, int(n_steps), float(cfg_scale))
+    ts, ts_prev = timestep_arrays(sched.n_train_steps, n_steps)
+    z0 = jax.random.normal(key, (labels.shape[0], cfg.dit_input_size,
+                                 cfg.dit_input_size, cfg.dit_in_channels),
+                           jnp.float32)
+    plan_arr = (pol.device_plan(n_steps, cfg.n_layers, N_MODULES)
+                if pol.exec_mode == "plan" else None)
+    state0 = pol.init_traced_state(n_steps=n_steps, n_layers=cfg.n_layers,
+                                   n_modules=N_MODULES)
+    z, aux = fn(params, sched, ts, ts_prev, z0, key, labels, plan_arr,
+                state0)
+    gated = max(n_steps * cfg.n_layers * N_MODULES, 1)
+    return z, {"policy_state": aux["policy_state"],
+               "realized_skip_ratio": float(aux["n_skipped"]) / gated}

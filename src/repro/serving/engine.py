@@ -35,8 +35,12 @@ from repro.serving.slots import SlotPool
 
 LAZY_MODES = ("off", "masked", "plan")
 
-# plan horizon compiled for policies that synthesize their own schedule
-# (smoothcache / static_router / stride); decode steps cycle the rows.
+# default plan horizon for policies with no intrinsic schedule length;
+# each policy may override via CachePolicy.plan_horizon (e.g. smoothcache
+# serves its full calibrated schedule, stride aligns the horizon to its
+# refresh period, explicit plans keep their own length) so row cycling
+# never truncates or misaligns a schedule whose length isn't a divisor of
+# this default.  Decode steps cycle the rows over the derived horizon.
 POLICY_PLAN_STEPS = 16
 
 
@@ -114,10 +118,11 @@ class Engine:
             cfg, window_override=window_override)
         self._modules = metrics_lib.gated_module_calls(
             cfg, window_override=window_override)
+        self.plan_horizon = self.policy.plan_horizon(POLICY_PLAN_STEPS)
         if mode == "plan":
             # fail fast on a plan/model shape mismatch (legacy behavior)
             # or a plan-mode policy that compiles no schedule at all
-            if self.policy.compile_plan(POLICY_PLAN_STEPS,
+            if self.policy.compile_plan(self.plan_horizon,
                                         cfg.n_layers, 2) is None:
                 raise ValueError(
                     f"policy {self.policy.name!r} drives 'plan' mode but "
@@ -160,11 +165,11 @@ class Engine:
         if self.lazy_mode != "off":
             lazy_cache = tf.init_lazy_decode_cache(
                 cfg, B, window_override=self.window_override)
-        # decode schedules are cyclic over a fixed horizon (explicit plans
-        # keep their own length) so a policy serves IDENTICAL rows through
-        # the static and continuous engines — the token-parity contract
+        # decode schedules are cyclic over the policy-derived horizon so a
+        # policy serves IDENTICAL rows through the static and continuous
+        # engines — the token-parity contract
         pstate = self.policy.init_state(
-            n_steps=POLICY_PLAN_STEPS, n_layers=cfg.n_layers, n_modules=2)
+            n_steps=self.plan_horizon, n_layers=cfg.n_layers, n_modules=2)
         use_plan = self.lazy_mode == "plan"
 
         # single-token prompts go through the same prefill path (S==1 decode
@@ -241,9 +246,12 @@ class ContinuousBatchingEngine:
             cfg, window_override=window_override)
         # slots sit at different request steps t_i, so the policy serves a
         # per-slot row; the compiled plan in _pstate is the row source and
-        # the admission-time skip-budget estimate in one
+        # the admission-time skip-budget estimate in one.  The horizon is
+        # policy-derived (plan_horizon) so odd-length schedules cycle
+        # without truncation or misalignment.
+        self.plan_horizon = self.policy.plan_horizon(POLICY_PLAN_STEPS)
         self._pstate = self.policy.init_state(
-            n_steps=POLICY_PLAN_STEPS, n_layers=cfg.n_layers, n_modules=2)
+            n_steps=self.plan_horizon, n_layers=cfg.n_layers, n_modules=2)
         self.plan_ratio = 0.0
         if mode == "plan":
             if self._pstate.get("plan") is None:

@@ -3,6 +3,8 @@ import sys
 
 # make `import repro` work without installation
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# ...and `import benchmarks` (tests reuse its compile-count probe)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # keep XLA from grabbing threads it doesn't have; tests see ONE device
 os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")

@@ -235,6 +235,42 @@ def test_serving_rejects_soft_policy():
                                                         soft=True))
 
 
+def test_engine_plan_horizon_follows_odd_length_schedule():
+    """Regression (engine horizon): a schedule whose length is NOT a
+    divisor of the default 16-step horizon must be served verbatim and
+    cycled at ITS OWN length — the old fixed horizon resampled a 7-step
+    smoothcache calibration onto 16 rows (truncating/misaligning it)."""
+    from repro.serving.engine import POLICY_PLAN_STEPS, ContinuousBatchingEngine
+
+    cfg, params, _ = _lm_fixture()
+    T_odd = 7
+    art = synth_artifact(seed=3, n_steps=T_odd, n_layers=cfg.n_layers)
+    pol = cache_lib.get_policy("smoothcache", calibration=art,
+                               error_threshold=art.quantile_threshold(0.6))
+    assert pol.plan_horizon(POLICY_PLAN_STEPS) == T_odd
+
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                   policy=pol)
+    assert eng.plan_horizon == T_odd
+    served = eng._pstate["plan"].skip
+    expect = pol.compile_plan(T_odd, cfg.n_layers, 2).skip
+    np.testing.assert_array_equal(served, expect)      # full schedule, unresampled
+    # rows cycle with period 7, not 16
+    for t in range(3 * T_odd):
+        np.testing.assert_array_equal(pol.plan_row(t, eng._pstate),
+                                      expect[t % T_odd])
+
+    # stride derives a stride-aligned horizon so cycled rows keep the
+    # t % stride refresh rule congruent across cycle boundaries
+    stride = cache_lib.get_policy("stride", stride=3)
+    h = stride.plan_horizon(POLICY_PLAN_STEPS)
+    assert h % 3 == 0 and h >= POLICY_PLAN_STEPS
+    # an explicit plan keeps its own (odd) length
+    plan5 = lazy_lib.uniform_plan(5, cfg.n_layers, 2, 0.5, seed=1)
+    assert cache_lib.get_policy(
+        "plan", plan=plan5.skip).plan_horizon(POLICY_PLAN_STEPS) == 5
+
+
 # ---------------------------------------------------------------------------
 # slot-cache helpers under policy-state payloads (continuous batching)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,301 @@
+"""Fused trajectory executor (sampling/trajectory.py): bit-exact parity
+with the host-loop reference for every registered policy × CFG on/off,
+the single-compile contract (trace-cache + jax.monitoring probes), the
+traceable policy-state pytree protocol, and the ddim_sample dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import LatentImageDataset
+from repro.models import dit as dit_lib
+from repro.sampling import ddim, trajectory
+from repro.train import optim, trainer
+
+T, L, M = 5, 3, 2       # sampling steps / layers / plan columns
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="dit_traj", family="dit", n_layers=L, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, dit_patch=2,
+                      dit_input_size=8, dit_in_channels=4, dit_n_classes=10,
+                      rope_type="none", dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    sched = ddim.linear_schedule(100)
+    # brief pretraining matters: adaLN-zero inits every block's output gate
+    # to 0, so on an UNTRAINED model module outputs (and therefore skips)
+    # cannot reach the sample and every parity check would be vacuous
+    it = LatentImageDataset(cfg, seed=0).batches(8, seed=1)
+    opt = optim.adamw_init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(12):
+        x0, y = next(it)
+        key, k = jax.random.split(key)
+        params, opt, _ = trainer.diffusion_train_step(
+            params, opt, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            lr=2e-3)
+    return cfg, params, sched
+
+
+def synth_dit_artifact(n_steps=T, n_layers=L, seed=0):
+    rng = np.random.default_rng(seed)
+    rel = rng.uniform(0.01, 1.0, (n_steps, n_layers, M))
+    rel[0] = np.inf
+    return calibrate_lib.CalibrationArtifact(
+        kind="dit", arch="dit_traj", n_steps=n_steps, n_layers=n_layers,
+        modules=("attn", "ffn"), rel_err=rel)
+
+
+def make_policy(name):
+    """All six registered policies, parameterized so each actually skips
+    (lazy_gate threshold below the untrained probes' ~0.12 scores)."""
+    if name == "none":
+        return cache_lib.get_policy("none")
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=2)
+    if name == "lazy_gate":
+        return cache_lib.get_policy("lazy_gate", threshold=0.1)
+    if name == "smoothcache":
+        art = synth_dit_artifact()
+        return cache_lib.get_policy(
+            "smoothcache", calibration=art,
+            error_threshold=art.quantile_threshold(0.5))
+    if name == "static_router":
+        return cache_lib.get_policy("static_router", ratio=0.5,
+                                    calibration=synth_dit_artifact(seed=1))
+    if name == "plan":
+        return cache_lib.get_policy(
+            "plan", plan=lazy_lib.uniform_plan(T, L, M, 0.5, seed=0).skip)
+    raise ValueError(name)
+
+
+ALL_POLICIES = ("none", "stride", "lazy_gate", "smoothcache",
+                "static_router", "plan")
+
+
+# ---------------------------------------------------------------------------
+# bit-exact parity: fused scan == host-loop reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg_scale", [1.0, 1.5], ids=["cfg_off", "cfg_on"])
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_fused_bit_exact_vs_host_reference(setup, name, cfg_scale):
+    cfg, params, sched = setup
+    pol = make_policy(name)
+    kw = dict(key=jax.random.PRNGKey(3), labels=jnp.array([0, 1]),
+              n_steps=T, cfg_scale=cfg_scale)
+    ref, _ = ddim.ddim_sample_reference(params, cfg, sched, policy=pol, **kw)
+    fused, aux = trajectory.sample_trajectory(params, cfg, sched,
+                                              policy=pol, **kw)
+    assert np.array_equal(np.asarray(ref), np.asarray(fused)), \
+        f"{name} (cfg_scale={cfg_scale}) fused != host reference"
+    assert np.all(np.isfinite(np.asarray(fused)))
+    if name in ("stride", "smoothcache", "static_router", "plan",
+                "lazy_gate"):
+        assert aux["realized_skip_ratio"] > 0.0, \
+            f"{name} parity was vacuous: nothing was skipped"
+    if name == "none":
+        assert aux["realized_skip_ratio"] == 0.0
+
+
+def test_legacy_lazy_mode_aliases_route_through_fused(setup):
+    """ddim_sample's legacy (lazy_mode, plan) surface hits the fused path
+    and still matches the reference loop."""
+    cfg, params, sched = setup
+    plan = lazy_lib.uniform_plan(T, L, M, 0.4, seed=2).skip
+    kw = dict(key=jax.random.PRNGKey(5), labels=jnp.array([1, 2]),
+              n_steps=T, cfg_scale=1.5)
+    ref, _ = ddim.ddim_sample_reference(params, cfg, sched,
+                                        lazy_mode="plan", plan=plan, **kw)
+    got, aux = ddim.ddim_sample(params, cfg, sched, lazy_mode="plan",
+                                plan=plan, **kw)
+    assert np.array_equal(np.asarray(ref), np.asarray(got))
+    assert "realized_skip_ratio" in aux          # fused-path aux
+
+
+def test_collect_flags_force_host_reference(setup):
+    """The debug collectors keep the host loop; default goes fused."""
+    cfg, params, sched = setup
+    kw = dict(key=jax.random.PRNGKey(5), labels=jnp.array([0, 1]),
+              n_steps=4, cfg_scale=1.5)
+    _, aux_dbg = ddim.ddim_sample(params, cfg, sched, lazy_mode="masked",
+                                  collect_scores=True, **kw)
+    assert len(aux_dbg["scores"]) == 4
+    assert isinstance(aux_dbg["scores"][0]["attn"], np.ndarray)
+    _, aux_fused = ddim.ddim_sample(params, cfg, sched, lazy_mode="masked",
+                                    **kw)
+    assert "scores" not in aux_fused and "policy_state" in aux_fused
+
+
+# ---------------------------------------------------------------------------
+# single-compile contract
+# ---------------------------------------------------------------------------
+
+
+def test_single_compile_across_calls_and_schedules(setup):
+    """One trace-cache entry for the whole trajectory — repeated calls AND
+    different schedules of the same shape reuse the compiled executable
+    (plan rows are traced inputs, not static args)."""
+    cfg, params, sched = setup
+    pol = cache_lib.get_policy("stride", stride=2)
+    trajectory.build_sampler.cache_clear()
+    fn = trajectory.build_sampler(cfg, pol, T, 1.5)
+    state0 = pol.init_traced_state(n_steps=T, n_layers=L, n_modules=M)
+    key, labels = jax.random.PRNGKey(0), jnp.array([0, 1])
+    ts, ts_prev = trajectory.timestep_arrays(sched.n_train_steps, T)
+    z0 = jax.random.normal(key, (2, cfg.dit_input_size, cfg.dit_input_size,
+                                 cfg.dit_in_channels), jnp.float32)
+
+    plan_a = pol.device_plan(T, L, M)
+    z_a, _ = fn(params, sched, ts, ts_prev, z0, key, labels, plan_a, state0)
+    assert fn._cache_size() == 1
+    # a DIFFERENT schedule (same shape): no retrace, different output
+    plan_b = jnp.zeros_like(plan_a)
+    z_b, _ = fn(params, sched, ts, ts_prev, z0, key, labels, plan_b, state0)
+    assert fn._cache_size() == 1, "changing the schedule retraced the scan"
+    assert not np.array_equal(np.asarray(z_a), np.asarray(z_b))
+
+    # a second full sample through the public wrapper: zero new backend
+    # compilations (the jax.monitoring probe the benchmark also uses)
+    from benchmarks.bench_trajectory import compile_counter
+    with compile_counter() as c:
+        trajectory.sample_trajectory(params, cfg, sched, key=key,
+                                     labels=labels, n_steps=T,
+                                     cfg_scale=1.5, policy=pol)
+    assert c["n"] == 0, f"warm fused sample compiled {c['n']} more times"
+    assert fn._cache_size() == 1
+
+
+def test_sampler_cache_survives_fresh_policy_instances(setup):
+    """resolve() builds a NEW policy object per ddim_sample call for
+    legacy/string args — the sampler cache must key on the policy's
+    trace shape (class, exec_mode, threshold), not its identity, or
+    every legacy-path call recompiles the whole trajectory."""
+    cfg, params, sched = setup
+    from benchmarks.bench_trajectory import compile_counter
+    trajectory.build_sampler.cache_clear()
+    # two equivalent instances share one compiled sampler
+    a = cache_lib.get_policy("stride", stride=2)
+    b = cache_lib.get_policy("stride", stride=2)
+    assert trajectory.build_sampler(cfg, a, T, 1.5) \
+        is trajectory.build_sampler(cfg, b, T, 1.5)
+    # the legacy lazy_mode surface: a warm second call compiles nothing
+    # even though each call resolves a fresh LazyGatePolicy
+    kw = dict(key=jax.random.PRNGKey(1), labels=jnp.array([0, 1]),
+              n_steps=T, cfg_scale=1.5)
+    ddim.ddim_sample(params, cfg, sched, lazy_mode="masked", **kw)
+    with compile_counter() as c:
+        ddim.ddim_sample(params, cfg, sched, lazy_mode="masked", **kw)
+    assert c["n"] == 0, \
+        f"legacy-path resample recompiled {c['n']} times (cache miss)"
+
+
+def test_host_reference_recompiles_per_call_fused_does_not(setup):
+    """The motivation check: the host loop's per-step jit closes over the
+    call's policy/config, so EVERY ddim_sample_reference call retraces
+    and recompiles; the fused executor compiles once per (config, policy,
+    horizon, guidance) and serves every later call from cache."""
+    cfg, params, sched = setup
+    pol = make_policy("static_router")
+    kw = dict(key=jax.random.PRNGKey(0), labels=jnp.array([0, 1]),
+              n_steps=T, cfg_scale=1.5)
+    from benchmarks.bench_trajectory import compile_counter
+    ddim.ddim_sample_reference(params, cfg, sched, policy=pol, **kw)  # warm
+    with compile_counter() as host_warm:
+        ddim.ddim_sample_reference(params, cfg, sched, policy=pol, **kw)
+    trajectory.build_sampler.cache_clear()
+    trajectory.sample_trajectory(params, cfg, sched, policy=pol, **kw)
+    with compile_counter() as fused_warm:
+        trajectory.sample_trajectory(params, cfg, sched, policy=pol, **kw)
+    assert host_warm["n"] >= 1, "expected the host loop's per-call retrace"
+    assert fused_warm["n"] == 0, \
+        f"warm fused sample compiled {fused_warm['n']} times"
+
+
+# ---------------------------------------------------------------------------
+# traceable policy state
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_traced_state_is_a_device_pytree(name):
+    pol = make_policy(name)
+    st = pol.init_traced_state(n_steps=T, n_layers=L, n_modules=M)
+    leaves, treedef = jax.tree_util.tree_flatten(st)
+    assert leaves, f"{name}: traced state has no leaves"
+    for leaf in leaves:
+        assert isinstance(leaf, jax.Array), \
+            f"{name}: non-device leaf {type(leaf).__name__} in traced state"
+    # round-trip: flatten/unflatten preserves every leaf exactly
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), st, back)
+    assert int(st["step"]) == 0
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_traced_state_rides_a_scan_carry(name):
+    """update_traced_state must be a pure pytree transform: carry the state
+    through a jitted lax.scan over the policy's own plan rows."""
+    pol = make_policy(name)
+    st = pol.init_traced_state(n_steps=T, n_layers=L, n_modules=M)
+    plan = pol.device_plan(T, L, M)
+    if plan is None:
+        plan = jnp.zeros((T, L, M), bool)
+
+    @jax.jit
+    def roll(state, plan):
+        def body(s, row):
+            return pol.update_traced_state(s, plan_row=row), None
+        return jax.lax.scan(body, state, plan)[0]
+
+    out = roll(st, plan)
+    assert int(out["step"]) == T
+    assert jax.tree_util.tree_structure(out) \
+        == jax.tree_util.tree_structure(st)
+
+
+def test_smoothcache_threshold_state_through_scan():
+    """The smoothcache-specific carry: threshold scalar survives the scan
+    unchanged; run_len tracks realized consecutive reuses of its rows."""
+    pol = make_policy("smoothcache")
+    st = pol.init_traced_state(n_steps=T, n_layers=L, n_modules=M)
+    assert float(st["threshold"]) == float(np.float32(pol.error_threshold))
+    assert st["run_len"].shape == (L, M)
+    plan = pol.device_plan(T, L, M)
+
+    @jax.jit
+    def roll(state, plan):
+        def body(s, row):
+            return pol.update_traced_state(s, plan_row=row), s["run_len"]
+        return jax.lax.scan(body, state, plan)
+
+    out, runs = roll(st, plan)
+    assert float(out["threshold"]) == float(np.float32(pol.error_threshold))
+    # replay the run-length recurrence on host and compare
+    expect = np.zeros((L, M), int)
+    skip = np.asarray(plan)
+    for t in range(T):
+        expect = np.where(skip[t], expect + 1, 0)
+    np.testing.assert_array_equal(np.asarray(out["run_len"]), expect)
+    assert int(out["step"]) == T
+    # the guard the compiled plan enforces: no run exceeds max_skip_run
+    assert int(np.asarray(runs).max()) <= pol.max_skip_run
+
+
+def test_update_traced_state_carries_scores():
+    pol = make_policy("lazy_gate")
+    st = pol.init_traced_state(n_steps=T, n_layers=L, n_modules=M)
+    assert float(st["threshold"]) == float(np.float32(pol.threshold))
+    sc = jnp.full((L, M), 0.7, jnp.float32)
+    st2 = pol.update_traced_state(st, scores=sc)
+    np.testing.assert_array_equal(np.asarray(st2["scores"]), np.asarray(sc))
+    assert int(st2["step"]) == 1
+    # the original state object is untouched (pure transform)
+    assert int(st["step"]) == 0
