@@ -11,10 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import lazy_dit_fixture, time_fn
-from repro.core import lazy as lazy_lib
 from repro.dist import hlo as hlo_lib
 from repro.models import dit as dit_lib
-from repro.sampling import ddim
 
 
 def dit_tmacs(cfg, lazy_ratio: float = 0.0) -> float:

@@ -3,7 +3,6 @@ host is a correctness-path signal only; the BlockSpec tiling is the TPU
 deliverable) and allclose deltas vs the oracles."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import time_fn
 from repro.kernels.flash_attention.kernel import flash_attention

@@ -18,7 +18,6 @@ import json
 import os
 
 import jax
-import numpy as np
 
 from benchmarks.common import ARTIFACTS
 from repro.configs.base import LazyConfig, ModelConfig

@@ -1,0 +1,192 @@
+"""Benchmark regression gate (CI `bench-smoke` job).
+
+Compares the freshly produced ``artifacts/BENCH_*.json`` smoke artifacts
+against the committed baselines in ``benchmarks/baselines/`` and fails when a
+gated metric regresses by more than the tolerance.  Gated metrics are the
+machine-independent ones — realized skip ratios and compiled-FLOP savings are
+plan/HLO-derived, so a drop means a real behavior change, never runner noise;
+wall-clock and speedup numbers are deliberately NOT gated.
+
+Tolerances live HERE, not in the workflow: CI invokes the script bare, so
+loosening a gate is a reviewed code change.
+
+    python -m benchmarks.check_regression               # gate (CI step)
+    python -m benchmarks.check_regression --update      # refresh baselines
+    python -m benchmarks.check_regression --self-test   # prove the gate bites
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+# A gated metric may drop by at most this fraction of its baseline value
+# before the gate fails.  Higher-is-better metrics only.
+RELATIVE_DROP_TOLERANCE = 0.05
+
+# Baselines at or below this are treated as "legitimately zero" (e.g. the
+# `none` policy's skip ratio) and gate nothing.
+ZERO_FLOOR = 1e-9
+
+GATED_FILES = ("BENCH_trajectory.json", "BENCH_cache_policies.json")
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE_DIR = REPO_ROOT / "benchmarks" / "baselines"
+DEFAULT_CURRENT_DIR = REPO_ROOT / "artifacts"
+
+
+def collect_metrics(payload: dict) -> dict[str, float]:
+    """Flatten one BENCH_*.json payload into {metric_path: value} for every
+    gated (higher-is-better, machine-independent) metric."""
+    metrics: dict[str, float] = {}
+    schema = str(payload.get("schema", ""))
+    if schema.startswith("repro.bench.trajectory"):
+        for name, row in payload.get("policies", {}).items():
+            key = f"trajectory/{name}/realized_skip_ratio"
+            metrics[key] = float(row["realized_skip_ratio"])
+    if schema.startswith("repro.bench.cache_policies"):
+        for workload, data in payload.get("workloads", {}).items():
+            for name, row in data.get("policies", {}).items():
+                for field in ("realized_skip_ratio", "plan_flop_saving"):
+                    if field in row:
+                        key = f"cache_policies/{workload}/{name}/{field}"
+                        metrics[key] = float(row[field])
+    return metrics
+
+
+def compare(
+    baseline: dict[str, float],
+    current: dict[str, float],
+    tolerance: float = RELATIVE_DROP_TOLERANCE,
+) -> list[str]:
+    """Failure messages for every gated metric that regressed past the
+    tolerance or vanished; metrics with no baseline are informational only."""
+    failures = []
+    for metric in sorted(baseline):
+        base = baseline[metric]
+        if base <= ZERO_FLOOR:
+            continue
+        cur = current.get(metric)
+        if cur is None:
+            failures.append(
+                f"{metric}: present in baseline ({base:.4f}) but missing "
+                "from the current artifacts"
+            )
+            continue
+        if cur < base * (1.0 - tolerance):
+            drop = 1.0 - cur / base
+            failures.append(
+                f"{metric}: {base:.4f} -> {cur:.4f} ({drop:.1%} drop "
+                f"exceeds the {tolerance:.0%} tolerance)"
+            )
+    return failures
+
+
+def load_metrics(directory: Path) -> dict[str, float]:
+    metrics: dict[str, float] = {}
+    for name in GATED_FILES:
+        path = directory / name
+        if not path.is_file():
+            continue
+        with open(path) as f:
+            metrics.update(collect_metrics(json.load(f)))
+    return metrics
+
+
+def update_baselines(current_dir: Path, baseline_dir: Path) -> list[str]:
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    copied = []
+    for name in GATED_FILES:
+        src = current_dir / name
+        if src.is_file():
+            shutil.copyfile(src, baseline_dir / name)
+            copied.append(name)
+    return copied
+
+
+def self_test(current_dir: Path) -> int:
+    """Prove the gate bites: a synthetic baseline whose every gated metric
+    sits >5% above the current artifacts MUST fail, and the artifacts
+    compared against themselves MUST pass."""
+    current = load_metrics(current_dir)
+    if not current:
+        print(
+            f"self-test: no gated artifacts under {current_dir} "
+            "(run `python -m benchmarks.run --smoke` first)"
+        )
+        return 1
+    inflated = {k: v * 1.25 for k, v in current.items() if v > ZERO_FLOOR}
+    if not inflated:
+        print("self-test: every gated metric is zero; nothing to inflate")
+        return 1
+    injected = compare(inflated, current)
+    clean = compare(current, current)
+    print(
+        f"self-test: {len(current)} gated metrics; injected regression "
+        f"flagged {len(injected)}/{len(inflated)} inflated baselines; "
+        f"clean comparison flagged {len(clean)}"
+    )
+    if len(injected) != len(inflated) or clean:
+        print("self-test FAILED: the gate does not bite")
+        return 1
+    print("self-test OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", type=Path, default=DEFAULT_BASELINE_DIR)
+    ap.add_argument("--current-dir", type=Path, default=DEFAULT_CURRENT_DIR)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the current artifacts over the committed baselines",
+    )
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="verify the gate fails on an injected >5%% regression",
+    )
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test(args.current_dir)
+    if args.update:
+        copied = update_baselines(args.current_dir, args.baseline_dir)
+        print(
+            f"baselines updated in {args.baseline_dir}: "
+            f"{', '.join(copied) or 'nothing found'}"
+        )
+        return 0
+
+    baseline = load_metrics(args.baseline_dir)
+    if not baseline:
+        print(
+            f"no baselines under {args.baseline_dir}; run with --update "
+            "after a smoke pass to create them"
+        )
+        return 1
+    current = load_metrics(args.current_dir)
+    failures = compare(baseline, current)
+    gated = sum(1 for v in baseline.values() if v > ZERO_FLOOR)
+    if failures:
+        print(
+            f"BENCHMARK REGRESSION: {len(failures)} of {gated} gated "
+            "metrics regressed"
+        )
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print(
+        f"benchmark gate OK: {gated} gated metrics within "
+        f"{RELATIVE_DROP_TOLERANCE:.0%} of baseline "
+        f"({len(baseline)} tracked)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

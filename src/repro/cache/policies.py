@@ -24,7 +24,6 @@ steps (early steps shape structure; the last step is the emitted output).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np

@@ -3,7 +3,7 @@ the paper's own DiT family, and the input-shape table."""
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import Dict
 
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
 

@@ -26,7 +26,7 @@ Execution modes (see DESIGN.md §3 for the TPU adaptation):
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ by ``benchmarks/bench_similarity.py`` (the paper's Fig. 4 / §3.2 analysis).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -3,9 +3,16 @@
 Three orthogonal pieces (DESIGN.md §Dist):
   * ``ctx``      — thread-local activation-sharding context; layers call
                    ``ctx.constrain`` unconditionally and it is a no-op
-                   outside an ``activation_sharding`` block.
+                   outside an ``activation_sharding`` block.  Its
+                   mesh-scoped entry point is re-exported here:
+                   ``with dist.mesh(data=8): ...`` turns on data-parallel
+                   execution for everything downstream (fused DDIM
+                   trajectory executor, serving slot pools).
   * ``sharding`` — path-rule parameter / cache / batch PartitionSpecs.
   * ``hlo``      — loop-aware static analysis of compiled HLO text
-                   (FLOPs, bytes, collective traffic) for the roofline.
+                   (FLOPs, bytes, collective traffic, SPMD partitions)
+                   for the roofline.
 """
 from repro.dist import ctx, hlo, sharding  # noqa: F401
+from repro.dist.ctx import (current_mesh, mesh,  # noqa: F401
+                            mesh_cache_key, parse_mesh_spec)

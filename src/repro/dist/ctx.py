@@ -20,10 +20,11 @@ from __future__ import annotations
 import math
 import threading
 from contextlib import contextmanager
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
 class _State(threading.local):
@@ -75,6 +76,89 @@ def activation_sharding(mesh, **opts):
         yield mesh
     finally:
         _STATE.restore(snap)
+
+
+def parse_mesh_spec(spec: str) -> Dict[str, int]:
+    """``'data=8'`` / ``'data=4,model=2'`` -> ``{'data': 4, 'model': 2}``.
+
+    The CLI surface for ``mesh(...)`` (launch/serve.py ``--mesh``,
+    launch/dryrun.py ``--mesh``).  Unknown axis names are rejected rather
+    than silently replicated — a typo'd ``--mesh dat=8`` must not run the
+    whole job single-device."""
+    out = {"data": 1, "model": 1}
+    if not spec:
+        return out
+    for part in spec.split(","):
+        name, eq, val = part.partition("=")
+        name = name.strip()
+        if name not in out or not eq:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected axis=N pairs with axes "
+                f"in {tuple(out)}, got {part!r}")
+        try:
+            size = int(val)
+        except ValueError as e:
+            raise ValueError(f"bad mesh spec {spec!r}: {val!r} is not an "
+                             "integer") from e
+        if size < 1:
+            raise ValueError(f"bad mesh spec {spec!r}: axis sizes must be "
+                             f">= 1, got {size}")
+        out[name] = size
+    return out
+
+
+def build_mesh(data: int = 1, model: int = 1, *,
+               devices: Optional[Sequence] = None) -> Mesh:
+    """A (data, model) device mesh over the FIRST data*model devices.
+
+    Deterministic device order (so two contexts with the same spec build
+    equal meshes and hit the same compiled-executable caches); raises when
+    the host has too few devices instead of silently shrinking — CPU CI
+    legs must set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    BEFORE jax initializes."""
+    n = data * model
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh data={data} model={model} needs {n} devices, have "
+            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before jax initializes)")
+    arr = np.asarray(devs[:n], dtype=object).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+@contextmanager
+def mesh(data: int = 1, model: int = 1, *,
+         devices: Optional[Sequence] = None, **opts):
+    """Mesh-scoped context: ``with dist.mesh(data=8):``.
+
+    Builds a (data, model) device mesh and activates the thread-local
+    sharding context on it, so everything downstream — the fused DDIM
+    trajectory executor (sampling/trajectory.py), the serving engines'
+    slot pools, ``ctx.constrain`` in the layers — picks the mesh up
+    without threading it through every call.  ``opts`` are forwarded to
+    ``activation_sharding`` (perf hillclimb knobs)."""
+    m = build_mesh(data, model, devices=devices)
+    with m, activation_sharding(m, **opts):
+        yield m
+
+
+def current_mesh():
+    """The active context's mesh, or None outside a mesh/activation-
+    sharding block (single-device paths)."""
+    return _STATE.mesh if active() else None
+
+
+def mesh_cache_key(m=None) -> Optional[tuple]:
+    """Hashable identity of a mesh for executable caches (axis sizes +
+    device assignment); None when no mesh is active.  Two ``mesh(data=8)``
+    contexts yield equal keys, so trace caches keyed on this survive
+    context exit/re-entry."""
+    m = m if m is not None else current_mesh()
+    if m is None:
+        return None
+    return (tuple((a, int(m.shape[a])) for a in m.axis_names),
+            tuple(int(d.id) for d in np.asarray(m.devices).flat))
 
 
 @contextmanager

@@ -329,20 +329,56 @@ def _comp_totals(name: str, comps, memo) -> Dict:
     return memo[name]
 
 
+_PARTITIONS_RE = re.compile(r"num_partitions\s*=\s*(\d+)")
+
+
+def module_partitions(hlo_text: str) -> int:
+    """SPMD partition count from the ``HloModule`` header line (1 when the
+    module was not partitioned).  The header records it as
+    ``num_partitions=N``; only the header is consulted so an instruction
+    attribute can never spoof it."""
+    for line in hlo_text.splitlines():
+        if line.startswith("HloModule"):
+            m = _PARTITIONS_RE.search(line)
+            return max(1, int(m.group(1))) if m else 1
+        if line.strip():
+            break
+    return 1
+
+
 def analyze_module(hlo_text: str) -> Dict:
     """Analyze one HLO module's text.
 
-    Returns ``{"flops", "bytes", "collective"}`` where flops/bytes are
-    per-device (SPMD-partitioned modules are already per-shard) and
-    ``collective`` maps op name -> {"bytes", "count"} with while-loop
+    Returns ``{"flops", "bytes", "collective", "partitions"}`` where
+    flops/bytes are per-device (SPMD-partitioned modules are already
+    per-shard — ``partitions`` carries the shard count from the module
+    header so callers can recover global totals, see ``sharded_totals``)
+    and ``collective`` maps op name -> {"bytes", "count"} with while-loop
     bodies scaled by trip count.
     """
+    parts = module_partitions(hlo_text)
     comps, entry = _parse_computations(hlo_text)
     if not entry:
-        return {"flops": 0.0, "bytes": 0.0, "collective": {}}
+        return {"flops": 0.0, "bytes": 0.0, "collective": {},
+                "partitions": parts}
     totals = _comp_totals(entry, comps, {})
     return {"flops": totals["flops"], "bytes": totals["bytes"],
-            "collective": dict(totals["collective"])}
+            "collective": dict(totals["collective"]), "partitions": parts}
+
+
+def sharded_totals(hlo_text: str) -> Dict:
+    """Per-device AND global accounting for one (possibly SPMD-partitioned)
+    module: ``analyze_module``'s per-device numbers plus
+    ``flops_global`` / ``bytes_global`` scaled by the partition count.
+
+    For the sharded fused-trajectory scan this is the modeled weak-scaling
+    story in one dict: per-device FLOPs shrink ~1/N while global FLOPs
+    (and the collective tally, already trip-count-scaled per device) show
+    what the extra devices cost in communication."""
+    mod = analyze_module(hlo_text)
+    n = mod["partitions"]
+    return {**mod, "flops_global": mod["flops"] * n,
+            "bytes_global": mod["bytes"] * n}
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, int]]:

@@ -19,7 +19,7 @@ two.  A dim that does not divide its assigned axes falls back to None.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec
@@ -110,6 +110,52 @@ def batch_sharding(mesh, batch: int, ndim: int) -> NamedSharding:
     """Global-batch inputs: leading dim over the data axes, rest replicated."""
     first = _data_entry(mesh, batch, True)
     return NamedSharding(mesh, PartitionSpec(first, *([None] * (ndim - 1))))
+
+
+def replicated(mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh``."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def trajectory_shardings(mesh, batch: int, *, latent_ndim: int = 4,
+                         per_example_keys: bool = False):
+    """(in_shardings, out_shardings) for the fused DDIM trajectory executor
+    (sampling/trajectory.py build_sampler).
+
+    Argument order is the sampler's:
+    ``(params, sched, ts, ts_prev, z0, keys, labels, plan, state0)`` ->
+    ``(z, aux)``.  Latents and labels shard their batch dim over the data
+    axes (falling back to replicated when the batch does not divide them —
+    the repo-wide rule of least surprise); the (T, L, 2) plan array,
+    schedule tables, timesteps and the policy's traced state are
+    replicated, so every policy's schedule is visible whole on every
+    shard and plan rows stay batch-invariant.  ``per_example_keys`` marks
+    the eta > 0 carry layout, where ``keys`` is a (B, 2) per-example key
+    array sharded like the batch (eta = 0 passes one replicated key)."""
+    rep = replicated(mesh)
+    z_sh = batch_sharding(mesh, batch, latent_ndim)
+    key_sh = batch_sharding(mesh, batch, 2) if per_example_keys else rep
+    in_shardings = (rep, rep, rep, rep, z_sh, key_sh,
+                    batch_sharding(mesh, batch, 1), rep, rep)
+    out_shardings = (z_sh, rep)
+    return in_shardings, out_shardings
+
+
+def slot_stack_shardings(tree, mesh, n_slots: int):
+    """NamedShardings for a slot-stacked serving tree (serving/slots.py):
+    every leaf's leading slot axis over the data axes (replicated when
+    n_slots does not divide them), everything else replicated — one decode
+    lane per data shard, the serving analogue of batch sharding."""
+    first = _data_entry(mesh, n_slots, True)
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim < 1 or first is None:
+            return replicated(mesh)
+        return NamedSharding(mesh,
+                             PartitionSpec(first, *([None] * (ndim - 1))))
+
+    return jax.tree.map(one, tree)
 
 
 def seq_parallel_spec(mesh) -> PartitionSpec:

@@ -22,9 +22,6 @@ def gqa_flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
     qt = q.transpose(0, 2, 1, 3)
     kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
     vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
-    fn = flash_attention if use_pallas else (
-        lambda *a, **kw: attention_ref(*a, **{k2: v2 for k2, v2 in kw.items()
-                                              if k2 != "interpret"}))
     if use_pallas:
         out = flash_attention(qt, kt, vt, causal=causal, window=window,
                               softcap=softcap, interpret=interpret)

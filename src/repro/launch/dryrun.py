@@ -18,7 +18,7 @@ Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
 """
 
 import argparse
-import functools
+import contextlib
 import json
 import time
 import traceback
@@ -149,7 +149,13 @@ def run_sample(arch: str, shape_name: str, *, tag: str = "",
     compiled program.  Any --policy works: plan-mode rows ride the scan as
     traced selects (compute stays in the HLO — the traced-vs-static
     tradeoff documented in DESIGN.md §Trajectory), dynamic policies decide
-    in-trace, 'none' is the no-skip baseline."""
+    in-trace, 'none' is the no-skip baseline.
+
+    ``--mesh data=N`` lowers the SHARDED executor instead: the batch
+    (lifted to the data-axis size when the default is smaller) shards
+    along ``data``, and the report carries per-device vs global FLOPs
+    plus the collective traffic of the partitioned scan body
+    (dist/hlo.sharded_totals)."""
     opts = opts or {}
     n_steps = int(shape_name.split("_", 1)[1])
     if n_steps < 1:
@@ -170,45 +176,61 @@ def run_sample(arch: str, shape_name: str, *, tag: str = "",
         pol = cache_lib.get_policy("none")
     else:
         pol = build_cli_policy(dict(opts, policy=name))
+
+    mesh_axes = ctx.parse_mesh_spec(opts.get("mesh") or "")
+    # lift the tiny default batch to one example per data shard so the
+    # sharded lowering actually partitions something
+    batch = (max(SAMPLE_BATCH, mesh_axes["data"]) if opts.get("mesh")
+             else SAMPLE_BATCH)
+    mesh_label = ("-".join(f"{a}{n}" for a, n in mesh_axes.items())
+                  if opts.get("mesh") else "single")
+
     plan = (pol.device_plan(n_steps, cfg.n_layers, 2)
             if pol.exec_mode == "plan" else None)
     state0 = pol.init_traced_state(n_steps=n_steps, n_layers=cfg.n_layers,
                                    n_modules=2)
 
-    fn = trajectory.build_sampler(cfg, pol, n_steps, SAMPLE_CFG_SCALE)
     params_abs = jax.eval_shape(lambda k: dit_lib.init_dit(k, cfg),
                                 jax.random.PRNGKey(0))
     sched_abs = jax.eval_shape(lambda: ddim_lib.linear_schedule(1000))
     ts, ts_prev = trajectory.timestep_arrays(1000, n_steps)
     key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    labels_abs = jax.ShapeDtypeStruct((SAMPLE_BATCH,), jnp.int32)
+    labels_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
     z0_abs = jax.ShapeDtypeStruct(
-        (SAMPLE_BATCH, cfg.dit_input_size, cfg.dit_input_size,
+        (batch, cfg.dit_input_size, cfg.dit_input_size,
          cfg.dit_in_channels), jnp.float32)
 
+    mesh_cm = (ctx.mesh(**mesh_axes) if opts.get("mesh")
+               else contextlib.nullcontext())
     t0 = time.time()
-    lowered = fn.lower(params_abs, sched_abs, ts, ts_prev, z0_abs, key_abs,
-                       labels_abs, plan, state0)
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    with mesh_cm:
+        fn = trajectory.build_sampler(cfg, pol, n_steps, SAMPLE_CFG_SCALE,
+                                      batch=batch)
+        lowered = fn.lower(params_abs, sched_abs, ts, ts_prev, z0_abs,
+                           key_abs, labels_abs, plan, state0)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
 
-    mod = hlo_lib.analyze_module(compiled.as_text())
+    mod = hlo_lib.sharded_totals(compiled.as_text())
     flops, bytes_acc = float(mod["flops"]), float(mod["bytes"])
     mem = compiled.memory_analysis()
     n_params = count_params_abs(params_abs)
     compute_s = flops / PEAK_FLOPS_BF16
     memory_s = bytes_acc / HBM_BW
+    coll_s = hlo_lib.collective_seconds(mod["collective"],
+                                        max(mesh_axes["data"], 1), ICI_BW)
     terms = {"compute_s": compute_s, "memory_s": memory_s,
-             "collective_s": 0.0}
+             "collective_s": coll_s}
     plan_ratio = (float(np.asarray(plan).mean()) if plan is not None else 0.0)
     return {
-        "arch": arch, "shape": shape_name, "mesh": "single",
-        "kind": "sample", "n_steps": n_steps, "batch": SAMPLE_BATCH,
+        "arch": arch, "shape": shape_name, "mesh": mesh_label,
+        "kind": "sample", "n_steps": n_steps, "batch": batch,
         "cfg_scale": SAMPLE_CFG_SCALE, "tag": tag,
         "policy": name, "exec_mode": pol.exec_mode,
         "plan_skip_ratio": plan_ratio,
         "n_params": n_params,
+        "partitions": mod["partitions"],
         "compiles": 1,          # the whole trajectory is one executable
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
@@ -218,8 +240,11 @@ def run_sample(arch: str, shape_name: str, *, tag: str = "",
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
         },
         "cost": {"flops_per_device": flops, "bytes_per_device": bytes_acc,
+                 "flops_global": float(mod["flops_global"]),
+                 "bytes_global": float(mod["bytes_global"]),
                  "flops_per_step": flops / n_steps,
                  "bytes_per_step": bytes_acc / n_steps},
+        "collectives": mod["collective"],
         "roofline": {**terms,
                      "dominant": max(terms, key=terms.get),
                      "model_flops_global": None,
@@ -567,6 +592,11 @@ def main():
                          "static_router")
     ap.add_argument("--error-threshold", type=float, default=None)
     ap.add_argument("--stride", type=int, default=2)
+    ap.add_argument("--mesh", default="",
+                    help="sample_<n> shapes only: lower the SHARDED fused "
+                         "trajectory executor on this mesh (e.g. "
+                         "'data=8') and report per-device vs global FLOPs "
+                         "+ collective traffic")
     ap.add_argument("--moe-token-dp", action="store_true")
     ap.add_argument("--moe-shard-map", action="store_true")
     ap.add_argument("--mlstm-shard", default="hd", choices=["hd", "none"])
@@ -583,6 +613,7 @@ def main():
             "calibration": args.calibration,
             "error_threshold": args.error_threshold,
             "stride": args.stride,
+            "mesh": args.mesh,
             "moe_token_dp": args.moe_token_dp,
             "moe_shard_map": args.moe_shard_map,
             "mlstm_shard": args.mlstm_shard,

@@ -18,8 +18,48 @@ continuous-batching workload, with a pluggable cache policy.
   # continuous batching over a synthetic Poisson trace with mixed lengths
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b \
       --workload --n-requests 16 --arrival-rate 2.0 --lazy plan
+
+  # data-parallel sampling over an 8-device mesh (DiT archs route through
+  # the sharded fused trajectory executor; per-example outputs are
+  # bit-exact vs --mesh data=1)
+  PYTHONPATH=src python -m repro.launch.serve --arch dit_xl2_256 \
+      --policy static_router --mesh data=8 --batch 8
 """
+import hashlib
+import os
+import sys
+
+
+def _force_mesh_devices() -> None:
+    """--mesh data=N needs N devices BEFORE jax initializes its backend
+    (the host-platform device count is locked at first init), so peek at
+    argv pre-import — both the '--mesh data=N' and '--mesh=data=N' forms.
+    Malformed specs are left for argparse to report; an explicit
+    user-provided device-count flag wins."""
+    spec = ""
+    if "--mesh" in sys.argv[:-1]:
+        spec = sys.argv[sys.argv.index("--mesh") + 1]
+    else:
+        spec = next((a[len("--mesh="):] for a in sys.argv
+                     if a.startswith("--mesh=")), "")
+    if not spec:
+        return
+    try:
+        n = 1
+        for part in spec.split(","):
+            n *= int(part.partition("=")[2])
+    except ValueError:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+_force_mesh_devices()
+
 import argparse
+import contextlib
 import time
 
 import jax
@@ -32,6 +72,7 @@ from repro.configs.base import LazyConfig
 from repro.configs.registry import get_config
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import request_trace
+from repro.dist import ctx as dist_ctx
 from repro.models import transformer as tf
 from repro.serving.engine import ContinuousBatchingEngine, Engine
 
@@ -106,7 +147,10 @@ def serve_dit(args, cfg):
     """DiT archs serve image sampling, not token decode: the whole DDIM
     trajectory runs through the fused single-compile executor
     (sampling/trajectory.py) — one XLA program per (config, policy,
-    step-count, guidance), policy plan rows scanned as traced selects."""
+    step-count, guidance, eta, mesh), policy plan rows scanned as traced
+    selects.  Under ``--mesh data=N`` the batch shards along the data
+    axis; the printed per-example sha256 digests are bit-identical across
+    mesh sizes (the parity contract, tests/test_trajectory_sharded.py)."""
     from repro.models import dit as dit_lib
     from repro.sampling import ddim, trajectory
 
@@ -123,7 +167,8 @@ def serve_dit(args, cfg):
     labels = jax.numpy.asarray(labels)
 
     kw = dict(key=jax.random.PRNGKey(args.seed), labels=labels,
-              n_steps=n_steps, policy=policy, lazy_mode=args.lazy, plan=plan)
+              n_steps=n_steps, eta=args.eta, policy=policy,
+              lazy_mode=args.lazy, plan=plan)
     t0 = time.perf_counter()
     x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
     jax.block_until_ready(x)
@@ -133,12 +178,23 @@ def serve_dit(args, cfg):
     jax.block_until_ready(x)
     wall = time.perf_counter() - t0
     policy_label = args.policy or f"lazy:{args.lazy}"
+    mesh = dist_ctx.current_mesh()
+    mesh_label = ("x".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+                  if mesh is not None else "single")
     print(f"arch={cfg.name} policy={policy_label} sampler=fused-trajectory "
-          f"steps={n_steps} batch={args.batch} shape={tuple(x.shape)}")
+          f"steps={n_steps} batch={args.batch} eta={args.eta} "
+          f"mesh={mesh_label} shape={tuple(x.shape)}")
     print(f"  first call (compile+run): {compile_wall:.2f}s; "
           f"steady state: {wall:.3f}s "
           f"({wall / n_steps * 1e3:.1f} ms/step, one compiled scan)")
     print(f"  realized skip ratio: {aux['realized_skip_ratio']:.1%}")
+    if mesh is not None:
+        print(f"  latent sharding: {x.sharding.spec} over "
+              f"{len(np.asarray(mesh.devices).flat)} devices")
+    # per-example digests: diff these across --mesh runs to verify the
+    # bit-exactness contract from the CLI (CI does exactly that)
+    for i, row in enumerate(np.asarray(x)):
+        print(f"  sample[{i}] sha256={hashlib.sha256(row.tobytes()).hexdigest()[:16]}")
 
 
 def main():
@@ -172,6 +228,17 @@ def main():
                          "the --lazy-ratio quantile of calibrated errors)")
     ap.add_argument("--stride", type=int, default=2,
                     help="refresh period for --policy stride")
+    ap.add_argument("--mesh", default="",
+                    help="device mesh spec, e.g. 'data=8' or "
+                         "'data=4,model=2': DiT sampling shards the batch "
+                         "over the data axis (per-example outputs bit-exact "
+                         "vs data=1); serving engines shard their slot "
+                         "pools.  CPU runs force the host device count "
+                         "automatically")
+    ap.add_argument("--eta", type=float, default=0.0,
+                    help="DDIM stochasticity (eta > 0 draws per-step "
+                         "per-example noise from the reserved keys; "
+                         "DiT archs only)")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--n-new", type=int, default=16)
@@ -188,10 +255,19 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if args.mesh:
+        # the --mesh parity contract (per-example outputs bit-exact across
+        # mesh sizes) needs the strict matmul path: at default precision
+        # XLA CPU picks its GEMM backend by shape, so per-shard and
+        # full-batch matmuls round differently
+        jax.config.update("jax_default_matmul_precision", "highest")
+    mesh_cm = (dist_ctx.mesh(**dist_ctx.parse_mesh_spec(args.mesh))
+               if args.mesh else contextlib.nullcontext())
     if cfg.family == "dit":
         # DiT archs sample images: route through the fused single-compile
         # trajectory executor instead of the token-decode engines
-        serve_dit(args, cfg)
+        with mesh_cm:
+            serve_dit(args, cfg)
         return
     needs_gates = (args.policy == "lazy_gate"
                    or (not args.policy and args.lazy != "off"))
@@ -213,12 +289,14 @@ def main():
         policy = build_policy(args, cfg, params, n_steps=16)
         plan = (build_plan(args, cfg, n_steps=16)
                 if policy is None and args.lazy == "plan" else None)
-        eng = ContinuousBatchingEngine(cfg, params, n_slots=args.n_slots,
-                                       max_len=max_len, lazy_mode=args.lazy,
-                                       plan=plan, policy=policy)
-        t0 = time.perf_counter()
-        res = eng.run(trace)
-        wall = time.perf_counter() - t0
+        with mesh_cm:
+            eng = ContinuousBatchingEngine(cfg, params, n_slots=args.n_slots,
+                                           max_len=max_len,
+                                           lazy_mode=args.lazy,
+                                           plan=plan, policy=policy)
+            t0 = time.perf_counter()
+            res = eng.run(trace)
+            wall = time.perf_counter() - t0
         s = res.metrics.summary()
         n_tok = sum(len(res.outputs[r.rid]) - len(r.prompt) for r in trace)
         print(f"arch={cfg.name} policy={policy_label} batching=continuous "
@@ -238,13 +316,14 @@ def main():
     policy = build_policy(args, cfg, params, n_steps=args.n_new)
     plan = build_plan(args, cfg, n_steps=args.n_new) \
         if policy is None and args.lazy == "plan" else None
-    eng = Engine(cfg, params, max_len=args.prompt_len + args.n_new + 8,
-                 lazy_mode=args.lazy, plan=plan, policy=policy)
     prompt = np.random.default_rng(args.seed).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
-    t0 = time.perf_counter()
-    res = eng.generate(prompt, n_new=args.n_new)
-    wall = time.perf_counter() - t0
+    with mesh_cm:
+        eng = Engine(cfg, params, max_len=args.prompt_len + args.n_new + 8,
+                     lazy_mode=args.lazy, plan=plan, policy=policy)
+        t0 = time.perf_counter()
+        res = eng.generate(prompt, n_new=args.n_new)
+        wall = time.perf_counter() - t0
     print(f"arch={cfg.name} policy={policy_label}")
     for row in res.tokens:
         print("  ", row.tolist())

@@ -9,15 +9,13 @@ same driver shards over the production mesh (the dry-run proves every
   PYTHONPATH=src python -m repro.launch.train --arch dit_xl2_256 --lazy --steps 50
 """
 import argparse
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.io import save_checkpoint
-from repro.configs.registry import DIT_ARCHS, get_config
+from repro.configs.registry import get_config
 from repro.data.synthetic import LatentImageDataset, MarkovTokenDataset
 from repro.models import dit as dit_lib
 from repro.models import transformer as tf

@@ -153,7 +153,6 @@ def _block_apply(blk, cfg: ModelConfig, x: Array, c: Array, *,
     ``policy`` (repro.cache.CachePolicy) is the skip-decision authority
     when given — it supplies the lazy-execution mode and threshold; the
     bare ``lazy_mode`` arg is the legacy alias path."""
-    d = cfg.d_model
     if policy is not None:
         lazy_mode = policy.exec_mode
     mod = jax.nn.silu(c) @ blk["mod"]["w"] + blk["mod"]["b"]       # (B, 6D)

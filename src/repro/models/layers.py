@@ -838,7 +838,6 @@ def init_mlstm(key, cfg: ModelConfig) -> dict:
     d = cfg.d_model
     d_in = int(xc.proj_factor * d)
     h = cfg.n_heads
-    hd = d_in // h
     dt = jnp.dtype(cfg.dtype)
     ks = jax.random.split(key, 8)
     return {

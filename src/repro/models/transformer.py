@@ -15,7 +15,6 @@ step (our beyond-paper transfer of the paper's diffusion-step caching).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Tuple
 

@@ -55,15 +55,28 @@ def q_sample(sched: DiffusionSchedule, x0: Array, t: Array, noise: Array) -> Arr
 
 
 def ddim_step(sched: DiffusionSchedule, z_t: Array, eps: Array,
-              t: Array, t_prev: Array) -> Array:
+              t: Array, t_prev: Array, *, eta: float = 0.0,
+              noise: Optional[Array] = None) -> Array:
     """z_{t'} = sqrt(a_{t'}) * (z_t - sqrt(1-a_t) eps)/sqrt(a_t)
-              + sqrt(1-a_{t'}) * eps   (eta = 0)."""
+              + sqrt(1-a_{t'} - sigma^2) * eps + sigma * noise
+
+    with  sigma = eta * sqrt((1-a_{t'})/(1-a_t)) * sqrt(1 - a_t/a_{t'})
+    (Song et al. 2020, Eq. 16).  ``eta`` is STATIC: at eta = 0 the
+    deterministic update is emitted verbatim (no dead noise ops in the
+    graph — the bit-exactness contract with pre-eta samplers), and the
+    final step (t_prev < 0, a_{t'} = 1) gets sigma = 0 so the emitted
+    sample is never perturbed."""
     a_t = sched.alphas_cumprod[t]
     a_p = jnp.where(t_prev >= 0, sched.alphas_cumprod[jnp.maximum(t_prev, 0)], 1.0)
     shape = (-1,) + (1,) * (z_t.ndim - 1)
     a_t, a_p = a_t.reshape(shape), a_p.reshape(shape)
     x0 = (z_t - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
-    return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+    if eta == 0.0 or noise is None:
+        return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+    sigma = (eta * jnp.sqrt((1 - a_p) / (1 - a_t))
+             * jnp.sqrt(1 - a_t / a_p))
+    dir_eps = jnp.sqrt(jnp.maximum(1 - a_p - sigma ** 2, 0.0))
+    return jnp.sqrt(a_p) * x0 + dir_eps * eps + sigma * noise
 
 
 def cfg_eps(eps_cond: Array, eps_uncond: Array, w: float) -> Array:
@@ -71,10 +84,23 @@ def cfg_eps(eps_cond: Array, eps_uncond: Array, w: float) -> Array:
     return w * eps_cond - (w - 1.0) * eps_uncond
 
 
+def per_example_keys(key, batch: int) -> Array:
+    """(B, 2) uint32 key array — one fold_in-derived key per example.
+
+    The eta > 0 noise stream is keyed per EXAMPLE, not per batch: example
+    i's noise depends only on (key, i, step), so it is invariant to how
+    the batch is sharded across a device mesh (each shard folds its own
+    rows) and to the batch size around it — the property the
+    mesh-parity tests pin (tests/test_trajectory_sharded.py)."""
+    return jax.vmap(jax.random.fold_in, (None, 0))(
+        key, jnp.arange(batch, dtype=jnp.uint32))
+
+
 def trajectory_step(params: dict, cfg: ModelConfig, sched: DiffusionSchedule,
                     pol, cfg_scale: float, z: Array, labels: Array,
                     t: Array, t_prev: Array, step: Array,
-                    lazy_cache: Optional[dict], row):
+                    lazy_cache: Optional[dict], row, *,
+                    eta: float = 0.0, noise_keys: Optional[Array] = None):
     """ONE denoising step — the single implementation BOTH executors trace.
 
     The host-loop reference jits this directly (one dispatch per step);
@@ -88,24 +114,38 @@ def trajectory_step(params: dict, cfg: ModelConfig, sched: DiffusionSchedule,
     ``t``/``t_prev``/``step`` are traced int32 scalars; ``row`` is this
     step's traced (L, 2) bool plan row or None; ``lazy_cache`` is the
     previous step's module outputs (never served at ``step == 0``).
-    Returns (z_next, new_lazy_cache, scores).
+    ``eta`` is the STATIC DDIM stochasticity knob: at eta > 0 the step
+    consumes ``noise_keys`` ((B, 2) per-example keys, see
+    ``per_example_keys``), splits each, and draws this step's noise from
+    the split-off halves — the key bookkeeping lives HERE so the fused
+    scan and the host loop replay the identical stream by construction.
+    Returns (z_next, new_lazy_cache, scores, new_noise_keys) with
+    ``new_noise_keys`` None at eta = 0.
     """
     C = cfg.dit_in_channels
     use_cfg = cfg_scale != 1.0
+    B0 = z.shape[0]
     if use_cfg:
-        y_all = jnp.concatenate([labels,
-                                 jnp.full_like(labels, cfg.dit_n_classes)])
+        # CFG doubles the batch INTERLEAVED — [cond_0, uncond_0, cond_1,
+        # ...] rather than [cond...; uncond...] — so each example's pair
+        # is contiguous: under a batch-sharded mesh the pair stays on one
+        # shard (a [z; z] concat along the sharded axis would interleave
+        # shard ownership and force a reshard of every layer activation)
+        y_all = jnp.stack([labels, jnp.full_like(labels, cfg.dit_n_classes)],
+                          axis=1).reshape(-1)
+        zz = jnp.stack([z, z], axis=1).reshape((2 * B0,) + z.shape[1:])
     else:
         y_all = labels
-    zz = jnp.concatenate([z, z]) if use_cfg else z
+        zz = z
     tt = jnp.full((zz.shape[0],), t.astype(jnp.float32), jnp.float32)
     out, new_lazy, scores = dit_lib.dit_forward(
         params, cfg, zz, tt, y_all, lazy_cache=lazy_cache,
         lazy_mode=pol.exec_mode, plan_row=row, fresh=step == 0, policy=pol)
     eps_all, _ = dit_lib.split_eps(out, C)
     if use_cfg:
-        e_c, e_u = jnp.split(eps_all, 2)
-        eps = cfg_eps(e_c, e_u, cfg_scale)
+        # un-interleave via a local reshape (no cross-shard slicing)
+        pair = eps_all.reshape((B0, 2) + eps_all.shape[1:])
+        eps = cfg_eps(pair[:, 0], pair[:, 1], cfg_scale)
     else:
         eps = eps_all
     # fusion boundary shared by both executors: without it XLA fuses the
@@ -113,12 +153,20 @@ def trajectory_step(params: dict, cfg: ModelConfig, sched: DiffusionSchedule,
     # epilogue), changing FMA contraction and flipping ~1 ulp per step
     z, eps = jax.lax.optimization_barrier((z, eps))
     B = z.shape[0]
-    z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev))
-    return z, new_lazy, scores
+    noise, new_keys = None, noise_keys
+    if eta > 0.0:
+        splits = jax.vmap(jax.random.split)(noise_keys)       # (B, 2, 2)
+        new_keys, step_keys = splits[:, 0], splits[:, 1]
+        noise = jax.vmap(
+            lambda k: jax.random.normal(k, z.shape[1:], z.dtype))(step_keys)
+    z = ddim_step(sched, z, eps, jnp.full((B,), t), jnp.full((B,), t_prev),
+                  eta=eta, noise=noise)
+    return z, new_lazy, scores, new_keys
 
 
 def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
                 key, labels: Array, n_steps: int, cfg_scale: float = 1.5,
+                eta: float = 0.0,
                 lazy_mode: str = "off",
                 plan: Optional[np.ndarray] = None,
                 policy=None,
@@ -127,9 +175,11 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
                 ) -> Tuple[Array, Dict]:
     """Full DDIM sampling loop for the DiT denoiser.
 
-    CFG doubles the batch (cond rows + null-label rows); the lazy cache is
-    per batch row, so cond/uncond streams each keep their own cache —
-    matching the paper's implementation.
+    CFG doubles the batch — INTERLEAVED, [cond_0, uncond_0, cond_1, ...],
+    so each example's pair stays on one shard under a data-parallel mesh
+    (see trajectory_step); the lazy cache is per batch row, so cond/uncond
+    streams each keep their own cache — matching the paper's
+    implementation.
 
     Every skip/reuse decision routes through one cache policy
     (repro.cache; DESIGN.md §Cache).  ``policy`` names or carries it
@@ -143,6 +193,10 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
     host-loop reference (``ddim_sample_reference``) instead — per-step
     probe scores / module-output traces need host access between steps.
 
+    ``eta`` > 0 enables stochastic DDIM (Song et al. Eq. 16) on the
+    reserved per-step keys — per-example noise, reproducible under a
+    fixed seed and invariant to batch sharding across a device mesh.
+
     Returns (samples (B,H,W,C), aux); aux carries the final policy state
     and realized skip ratio (fused path) or the per-step score/trace logs
     (debug path).
@@ -151,11 +205,12 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
         from repro.sampling import trajectory
         return trajectory.sample_trajectory(
             params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
-            cfg_scale=cfg_scale, lazy_mode=lazy_mode, plan=plan,
+            cfg_scale=cfg_scale, eta=eta, lazy_mode=lazy_mode, plan=plan,
             policy=policy)
     return ddim_sample_reference(
         params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
-        cfg_scale=cfg_scale, lazy_mode=lazy_mode, plan=plan, policy=policy,
+        cfg_scale=cfg_scale, eta=eta, lazy_mode=lazy_mode, plan=plan,
+        policy=policy,
         collect_scores=collect_scores, collect_traces=collect_traces)
 
 
@@ -163,6 +218,7 @@ def ddim_sample_reference(params: dict, cfg: ModelConfig,
                           sched: DiffusionSchedule, *,
                           key, labels: Array, n_steps: int,
                           cfg_scale: float = 1.5,
+                          eta: float = 0.0,
                           lazy_mode: str = "off",
                           plan: Optional[np.ndarray] = None,
                           policy=None,
@@ -206,12 +262,14 @@ def ddim_sample_reference(params: dict, cfg: ModelConfig,
         lazy_cache = dit_lib.init_dit_lazy_cache(cfg, 2 * B if use_cfg else B)
     plan_dev = (pol.device_plan(n_steps, cfg.n_layers, 2)
                 if lazy_mode == "plan" else None)
+    noise_keys = per_example_keys(key, B) if eta > 0.0 else None
 
     @jax.jit
     def step_eval(params, sched, z, labels, t, t_prev, step, lazy_cache,
-                  row):
+                  row, noise_keys):
         return trajectory_step(params, cfg, sched, pol, cfg_scale, z,
-                               labels, t, t_prev, step, lazy_cache, row)
+                               labels, t, t_prev, step, lazy_cache, row,
+                               eta=eta, noise_keys=noise_keys)
 
     def _log(log, tree):
         """Pipelined device->host collection: start THIS step's transfer
@@ -230,9 +288,9 @@ def ddim_sample_reference(params: dict, cfg: ModelConfig,
     for i, t in enumerate(ts):
         t_prev = ts[i + 1] if i + 1 < len(ts) else -1
         row = plan_dev[i] if plan_dev is not None else None
-        z, lazy_cache, scores = step_eval(params, sched, z, labels,
-                                          jnp.int32(t), jnp.int32(t_prev),
-                                          jnp.int32(i), lazy_cache, row)
+        z, lazy_cache, scores, noise_keys = step_eval(
+            params, sched, z, labels, jnp.int32(t), jnp.int32(t_prev),
+            jnp.int32(i), lazy_cache, row, noise_keys)
         if scores:
             # the same layer-mean statistic the fused executor feeds
             # update_traced_state, kept device-side (no per-step sync)

@@ -11,14 +11,15 @@ scanned input: this module compiles the ENTIRE sampling loop as one
 ``jax.lax.scan`` over steps.
 
 Carry layout (DESIGN.md §Trajectory):
-  (z, lazy_cache, policy_state, rng_key, n_skipped)
+  (z, lazy_cache, policy_state, noise_keys, n_skipped)
     z            — (B, H, W, C) DDIM latent
     lazy_cache   — {"attn": (L, B', N, D), "ffn": ...} previous-step module
                    outputs (B' doubled under CFG); None when exec_mode 'off'
     policy_state — the policy's traced pytree state
                    (CachePolicy.init_traced_state / update_traced_state)
-    rng_key      — split every step; reserved for eta > 0 samplers (eta = 0
-                   DDIM draws no per-step noise)
+    noise_keys   — (B, 2) per-example keys, split every step inside
+                   ddim.trajectory_step for eta > 0 stochastic DDIM; None
+                   at eta = 0 (deterministic DDIM draws no per-step noise)
     n_skipped    — realized skipped-module-call counter (scalar f32)
 
 Scanned inputs: (t, t_prev, step_index, plan_row) — plan rows are a
@@ -27,13 +28,27 @@ where-selects (core.lazy.select_cached), so changing the schedule never
 retraces; the first sampling step is handled by a traced ``fresh`` flag
 instead of a static ``first_step`` branch.
 
+Under an active ``dist.ctx.mesh(data=N)`` context the whole-trajectory
+scan is jitted with ``in_shardings``/``out_shardings`` derived from
+``dist/sharding.trajectory_shardings``: latents, labels, per-example
+noise keys, the lazy-cache carry and every layer activation shard along
+the batch ("data") axis, while the plan array, schedule tables and the
+policy's traced state stay replicated — plan rows are batch-invariant,
+so every policy runs unchanged and per-example bit-exact on any mesh
+size (tests/test_trajectory_sharded.py).  CFG pairs are kept shard-local
+(interleaved batch, see ddim.trajectory_step), so guidance adds no
+resharding; the one caveat on CPU is that each shard must keep >= 2
+forward rows (CFG pairs count) — a single-example shard takes XLA's
+degenerate-dim GEMM path, which rounds ~1 ulp differently.
+
 The result is bit-exact with the host-loop reference
 (sampling/ddim.ddim_sample_reference) for every registered policy, at
-exactly ONE compile per (config, policy, horizon, guidance) —
+exactly ONE compile per (config, policy, horizon, guidance, eta, mesh) —
 tests/test_trajectory.py.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -42,6 +57,8 @@ import numpy as np
 
 from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
+from repro.dist import ctx
+from repro.dist import sharding as sharding_lib
 from repro.models import dit as dit_lib
 from repro.sampling import ddim
 
@@ -69,37 +86,53 @@ _SAMPLER_CACHE: Dict[tuple, object] = {}
 
 
 def _sampler_cache_key(cfg: ModelConfig, pol, n_steps: int,
-                       cfg_scale: float) -> tuple:
+                       cfg_scale: float, eta: float,
+                       batch: Optional[int]) -> tuple:
     """What the TRACE actually depends on.  Keying on the policy instance
     would defeat the compile-once contract: resolve() builds a fresh
     policy object per ddim_sample call for legacy/lazy-mode/string args,
     so every call would recompile the whole trajectory.  Two policies of
     the same class, exec mode and threshold trace identically — the
     schedule itself is a traced input (device_plan), never part of the
-    trace."""
+    trace.  The mesh (axis sizes + device assignment) and — under a mesh
+    only — the global batch join the key: in/out shardings are baked into
+    the jit wrapper, and a batch-sharded executable is only valid for the
+    batch it was built for."""
+    mesh_key = ctx.mesh_cache_key()
     return (cfg, type(pol), pol.exec_mode,
             float(getattr(pol, "threshold", 0.5)),
-            int(n_steps), float(cfg_scale))
+            int(n_steps), float(cfg_scale), float(eta),
+            mesh_key, int(batch) if mesh_key and batch else None)
 
 
-def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float):
+def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,
+                  eta: float = 0.0, *, batch: Optional[int] = None):
     """One jitted whole-trajectory sampler per (config, policy-shape,
-    horizon, guidance scale) — policy-shape meaning (class, exec_mode,
-    threshold), see _sampler_cache_key.
+    horizon, guidance scale, eta, mesh) — policy-shape meaning (class,
+    exec_mode, threshold), see _sampler_cache_key.
 
-    Returns ``sample(params, sched, ts, ts_prev, z0, key, labels, plan,
+    Returns ``sample(params, sched, ts, ts_prev, z0, keys, labels, plan,
     state0) -> (z, aux)`` where ``(ts, ts_prev)`` come from
     ``timestep_arrays``, ``z0`` is the initial latent (generated HOST-side
     by the caller, exactly like the reference loop — inlining the RNG
     into the trace lets XLA fuse it with the first step's math and break
-    bit-parity), ``plan`` is the policy's (n_steps, L, 2) bool device
-    array (None for non-plan modes) and ``state0`` the traced policy
-    state.  Timesteps, plan and state are *inputs*, not closure
-    constants: different schedules of the same shape reuse the one
-    compiled executable (the compile-once contract the trace-cache probe
-    in tests/test_trajectory.py asserts).
+    bit-parity), ``keys`` is the (B, 2) per-example noise-key array for
+    eta > 0 (``ddim.per_example_keys``; any key at eta = 0, unused),
+    ``plan`` is the policy's (n_steps, L, 2) bool device array (None for
+    non-plan modes) and ``state0`` the traced policy state.  Timesteps,
+    plan and state are *inputs*, not closure constants: different
+    schedules of the same shape reuse the one compiled executable (the
+    compile-once contract the trace-cache probe in tests/test_trajectory.py
+    asserts).
+
+    Under an active ``dist.ctx`` mesh the jit carries
+    ``in_shardings``/``out_shardings`` from
+    ``dist/sharding.trajectory_shardings`` (``batch`` sizes the specs) and
+    the traced body runs inside the activation-sharding context, so the
+    scan carry — latent, lazy cache, per-example keys — stays pinned to
+    the batch axis across all n_steps iterations.
     """
-    key = _sampler_cache_key(cfg, policy, n_steps, cfg_scale)
+    key = _sampler_cache_key(cfg, policy, n_steps, cfg_scale, eta, batch)
     cached = _SAMPLER_CACHE.get(key)
     if cached is not None:
         return cached
@@ -109,23 +142,34 @@ def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float):
     use_cfg = cfg_scale != 1.0
     lazy = mode != "off"
     threshold = getattr(pol, "threshold", 0.5)
+    mesh = ctx.current_mesh()
 
-    @jax.jit
-    def sample(params, sched, ts, ts_prev, z0, key, labels, plan, state0):
+    def sample(params, sched, ts, ts_prev, z0, keys, labels, plan, state0):
+        shard_ctx = (ctx.activation_sharding(mesh) if mesh is not None
+                     else nullcontext())
+        with shard_ctx:
+            return _sample(params, sched, ts, ts_prev, z0, keys, labels,
+                           plan, state0)
+
+    def _sample(params, sched, ts, ts_prev, z0, keys, labels, plan, state0):
         B = labels.shape[0]
         BB = 2 * B if use_cfg else B
-        z = z0
-        lazy_cache = dit_lib.init_dit_lazy_cache(cfg, BB) if lazy else None
+        z = ctx.constrain(z0, "batch")
+        lazy_cache = None
+        if lazy:
+            lazy_cache = jax.tree.map(
+                lambda a: ctx.constrain(a, None, "batch"),
+                dit_lib.init_dit_lazy_cache(cfg, BB))
         steps = jnp.arange(n_steps, dtype=jnp.int32)
+        noise_keys = keys if eta > 0.0 else None
 
         def body(carry, xs):
-            z, lzc, pstate, key, n_skipped = carry
+            z, lzc, pstate, nkeys, n_skipped = carry
             t, t_prev, step, row = xs
-            key, _noise_key = jax.random.split(key)      # eta > 0 reserve
             first = step == 0
-            z, new_lzc, scores = ddim.trajectory_step(
+            z, new_lzc, scores, nkeys = ddim.trajectory_step(
                 params, cfg, sched, pol, cfg_scale, z, labels, t, t_prev,
-                step, lzc, row)
+                step, lzc, row, eta=eta, noise_keys=nkeys)
 
             sc = None
             if scores and mode in ("masked", "soft"):
@@ -147,24 +191,59 @@ def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float):
                 n_skipped = n_skipped + jnp.where(
                     first, 0.0, jnp.sum(row.astype(jnp.float32)))
             pstate = pol.update_traced_state(pstate, scores=sc, plan_row=row)
-            return (z, new_lzc, pstate, key, n_skipped), None
+            return (z, new_lzc, pstate, nkeys, n_skipped), None
 
-        carry0 = (z, lazy_cache, state0, key, jnp.zeros((), jnp.float32))
+        carry0 = (z, lazy_cache, state0, noise_keys,
+                  jnp.zeros((), jnp.float32))
         (z, _, pstate, _, n_skipped), _ = jax.lax.scan(
             body, carry0, (ts, ts_prev, steps, plan))
         return z, {"policy_state": pstate, "n_skipped": n_skipped}
 
-    _SAMPLER_CACHE[key] = sample
-    return sample
+    if mesh is not None:
+        if batch is None:
+            raise ValueError("build_sampler under a dist.ctx mesh needs "
+                             "batch= to derive in/out shardings")
+        in_sh, out_sh = sharding_lib.trajectory_shardings(
+            mesh, batch, per_example_keys=eta > 0.0)
+        fn = jax.jit(sample, in_shardings=in_sh, out_shardings=out_sh)
+    else:
+        fn = jax.jit(sample)
+
+    _SAMPLER_CACHE[key] = fn
+    return fn
 
 
 build_sampler.cache_clear = _SAMPLER_CACHE.clear    # test/bench hook
+
+
+def prepare_inputs(cfg: ModelConfig, sched: ddim.DiffusionSchedule, pol, *,
+                   key, labels: Array, n_steps: int,
+                   eta: float = 0.0) -> tuple:
+    """The fused sampler's argument tuple after ``params``:
+    ``(sched, ts, ts_prev, z0, keys, labels, plan, state0)``.
+
+    Shared by ``sample_trajectory``, the dry-run lowering path and the
+    mesh-scaling bench so they feed the jitted sampler identically.  The
+    initial latent is generated host-side (eager, device 0) so its bits
+    never depend on the mesh, exactly like the reference loop."""
+    ts, ts_prev = timestep_arrays(sched.n_train_steps, n_steps)
+    z0 = jax.random.normal(key, (labels.shape[0], cfg.dit_input_size,
+                                 cfg.dit_input_size, cfg.dit_in_channels),
+                           jnp.float32)
+    keys = (ddim.per_example_keys(key, labels.shape[0]) if eta > 0.0
+            else key)
+    plan_arr = (pol.device_plan(n_steps, cfg.n_layers, N_MODULES)
+                if pol.exec_mode == "plan" else None)
+    state0 = pol.init_traced_state(n_steps=n_steps, n_layers=cfg.n_layers,
+                                   n_modules=N_MODULES)
+    return (sched, ts, ts_prev, z0, keys, labels, plan_arr, state0)
 
 
 def sample_trajectory(params: dict, cfg: ModelConfig,
                       sched: ddim.DiffusionSchedule, *,
                       key, labels: Array, n_steps: int,
                       cfg_scale: float = 1.5,
+                      eta: float = 0.0,
                       lazy_mode: str = "off",
                       plan: Optional[np.ndarray] = None,
                       policy=None) -> Tuple[Array, Dict]:
@@ -173,7 +252,10 @@ def sample_trajectory(params: dict, cfg: ModelConfig,
     Same contract as sampling/ddim.ddim_sample (which routes here unless
     a debug collector forces the host loop): CFG doubles the batch, every
     skip/reuse decision goes through one cache policy, and the output is
-    bit-exact with the host-loop reference.
+    bit-exact with the host-loop reference.  ``eta`` > 0 draws per-step
+    per-example DDIM noise from the reserved keys in the carry.  Under an
+    active ``dist.ctx.mesh`` the batch shards along the data axis with
+    per-example outputs bit-exact vs the single-device run.
 
     Returns (samples (B, H, W, C), aux) with
       aux["policy_state"]        — the policy's final traced state pytree
@@ -183,17 +265,11 @@ def sample_trajectory(params: dict, cfg: ModelConfig,
     """
     pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
                                threshold=cfg.lazy.threshold)
-    fn = build_sampler(cfg, pol, int(n_steps), float(cfg_scale))
-    ts, ts_prev = timestep_arrays(sched.n_train_steps, n_steps)
-    z0 = jax.random.normal(key, (labels.shape[0], cfg.dit_input_size,
-                                 cfg.dit_input_size, cfg.dit_in_channels),
-                           jnp.float32)
-    plan_arr = (pol.device_plan(n_steps, cfg.n_layers, N_MODULES)
-                if pol.exec_mode == "plan" else None)
-    state0 = pol.init_traced_state(n_steps=n_steps, n_layers=cfg.n_layers,
-                                   n_modules=N_MODULES)
-    z, aux = fn(params, sched, ts, ts_prev, z0, key, labels, plan_arr,
-                state0)
+    fn = build_sampler(cfg, pol, int(n_steps), float(cfg_scale),
+                       float(eta), batch=int(labels.shape[0]))
+    args = prepare_inputs(cfg, sched, pol, key=key, labels=labels,
+                          n_steps=n_steps, eta=eta)
+    z, aux = fn(params, *args)
     gated = max(n_steps * cfg.n_layers * N_MODULES, 1)
     return z, {"policy_state": aux["policy_state"],
                "realized_skip_ratio": float(aux["n_skipped"]) / gated}

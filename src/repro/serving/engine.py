@@ -15,6 +15,17 @@ slots (transformer.decode_step_mixed), and eviction on EOS / output budget
 / max_len.  Each request's greedy tokens are identical to decoding it
 alone through ``Engine`` (tests/test_serving_scheduler.py); what changes
 is request-level throughput, accounted on the service clock (metrics.py).
+
+Per-slot policy state is the TRACED pytree protocol from the fused
+trajectory executor (CachePolicy.init_traced_state /
+update_traced_state), slot-stacked like the KV/lazy caches: the jitted
+step gathers each slot's current plan row from the policy's device plan
+by its traced step counter, masks fresh slots, runs the mixed decode,
+and advances every slot's state — all under one jit, no host-side
+per-slot plan dicts (DESIGN.md §Serve).  Admission scatters the initial
+state back into the slot (reset-then-join), exactly like the lazy-cache
+reset.  Under an active ``dist.ctx`` mesh the slot axis of every stacked
+tree shards over the data axis — one decode lane per shard.
 """
 from __future__ import annotations
 
@@ -27,6 +38,7 @@ import numpy as np
 
 from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
+from repro.core import lazy as lazy_lib
 from repro.data.synthetic import RequestSpec
 from repro.models import transformer as tf
 from repro.serving import metrics as metrics_lib
@@ -245,20 +257,25 @@ class ContinuousBatchingEngine:
         self.modules_per_slot = metrics_lib.gated_module_calls(
             cfg, window_override=window_override)
         # slots sit at different request steps t_i, so the policy serves a
-        # per-slot row; the compiled plan in _pstate is the row source and
-        # the admission-time skip-budget estimate in one.  The horizon is
-        # policy-derived (plan_horizon) so odd-length schedules cycle
-        # without truncation or misalignment.
-        self.plan_horizon = self.policy.plan_horizon(POLICY_PLAN_STEPS)
-        self._pstate = self.policy.init_state(
-            n_steps=self.plan_horizon, n_layers=cfg.n_layers, n_modules=2)
+        # per-slot row — gathered IN-JIT from the compiled device plan by
+        # each slot's traced step counter.  The horizon is policy-derived
+        # (plan_horizon) so odd-length schedules cycle without truncation
+        # or misalignment; the host-side compiled plan survives only as
+        # the scheduler's admission-time skip-budget estimate.
+        self.plan_horizon = horizon = self.policy.plan_horizon(
+            POLICY_PLAN_STEPS)
+        self._init_state = self.policy.init_traced_state(
+            n_steps=horizon, n_layers=cfg.n_layers, n_modules=2)
+        self._device_plan = None
         self.plan_ratio = 0.0
         if mode == "plan":
-            if self._pstate.get("plan") is None:
+            self._device_plan = self.policy.device_plan(
+                horizon, cfg.n_layers, 2)
+            if self._device_plan is None:
                 raise ValueError(
                     f"policy {self.policy.name!r} drives 'plan' mode but "
                     "compiled no plan")
-            plan_arr = self._pstate["plan"].skip
+            plan_arr = np.asarray(self._device_plan)
             total = self.modules_per_slot * len(plan_arr)
             self.plan_ratio = sum(
                 _row_skips(r, self._attn_like) for r in plan_arr) / max(total, 1)
@@ -273,32 +290,44 @@ class ContinuousBatchingEngine:
                     cache)
 
         @jax.jit
-        def _step(params, tok, index, cache, lazy_cache, fresh, plan_rows):
-            return tf.decode_step_mixed(
+        def _step(params, tok, index, cache, lazy_cache, fresh, slot_state,
+                  plan):
+            """One mixed-position decode step, policy decisions included:
+            per-slot plan rows come from the traced step counters in
+            ``slot_state`` (cycled over the policy horizon), fresh slots
+            serve all-False rows, and every slot's traced state advances
+            via the policy's pure pytree transform (vmapped over the slot
+            axis) — the whole per-step decision path is inside this one
+            compiled program."""
+            rows = None
+            if plan is not None:
+                rows = plan[slot_state["step"] % horizon]      # (B, L, 2)
+                if fresh is not None:
+                    rows = jnp.where(fresh[:, None, None], False, rows)
+            logits, cache, lazy_cache, scores = tf.decode_step_mixed(
                 params, cfg, tok, index, cache, lazy_cache=lazy_cache,
-                lazy_mode=mode, fresh=fresh, plan_rows=plan_rows,
+                lazy_mode=mode, fresh=fresh, plan_rows=rows,
                 policy=pol, window_override=window_override)
+            if rows is not None:
+                new_state = jax.vmap(
+                    lambda s, r: pol.update_traced_state(s, plan_row=r))(
+                        slot_state, rows)
+            else:
+                new_state = jax.vmap(
+                    lambda s: pol.update_traced_state(s))(slot_state)
+            return logits, cache, lazy_cache, scores, new_state, rows
 
         self._prefill = _prefill
         self._step = _step
 
     # ------------------------------------------------------------ internals
-    def _slot_row(self, slot) -> np.ndarray:
-        return np.asarray(self.policy.plan_row(slot.t, self._pstate), bool)
-
-    def _plan_rows(self, pool: SlotPool) -> jnp.ndarray:
-        rows = np.zeros((self.n_slots, self.cfg.n_layers, 2), bool)
-        for i in pool.active_slots():
-            s = pool.slots[i]
-            if not s.fresh:
-                rows[i] = self._slot_row(s)
-        return jnp.asarray(rows)
-
-    def _step_accounting(self, pool: SlotPool, scores
+    def _step_accounting(self, pool: SlotPool, scores, rows
                          ) -> Tuple[float, float]:
         """(executed, skipped) gated module calls for this decode step.
-        Masked mode estimates per-slot skips from the layer-averaged probe
-        scores (the same statistic Engine's realized ratio thresholds)."""
+        Plan mode reads the rows the jitted step ACTUALLY served (already
+        fresh-masked); masked mode estimates per-slot skips from the
+        layer-averaged probe scores (the same statistic Engine's realized
+        ratio thresholds)."""
         M = self.modules_per_slot
         executed = skipped = 0.0
         kinds = (["attn", "ffn"] if self._attn_like.any() else [])
@@ -307,10 +336,11 @@ class ContinuousBatchingEngine:
         thr = self.policy.threshold
         # one device->host transfer per score key, not one per (slot, kind)
         sc = {k: np.asarray(v) for k, v in scores.items()} if scores else {}
+        rows_np = np.asarray(rows, bool) if rows is not None else None
         for i in pool.active_slots():
             s = pool.slots[i]
-            if self.lazy_mode == "plan" and not s.fresh:
-                k = _row_skips(self._slot_row(s), self._attn_like)
+            if self.lazy_mode == "plan" and rows_np is not None:
+                k = _row_skips(rows_np[i], self._attn_like)
             elif self.lazy_mode == "masked" and not s.fresh and sc:
                 k = M * float(np.mean([sc[k][i] > thr for k in kinds]))
             else:
@@ -336,6 +366,11 @@ class ContinuousBatchingEngine:
         sched.submit(requests)
         pool = SlotPool(self.cfg, self.n_slots, self.max_len, lazy=lazy,
                         window_override=self.window_override)
+        # slot-stacked traced policy state, placed like the slot caches
+        # (sharded over the data axis under an active mesh)
+        slot_state = pool.place(
+            lazy_lib.stack_for_slots(self._init_state, self.n_slots))
+        self._slot_state = slot_state            # test/debug introspection
         met = metrics_lib.ServingMetrics(self.n_slots, self.modules_per_slot)
         outputs: Dict[int, np.ndarray] = {}
         now = 0.0
@@ -363,6 +398,12 @@ class ContinuousBatchingEngine:
                 now += metrics_lib.prefill_cost(prompt.shape[1], self.n_slots)
                 i = free.pop(0)
                 pool.admit(i, req, cache1, int(tok0[0]))
+                # reset-then-join: the new occupant starts from the
+                # policy's initial traced state, same rule as the lazy
+                # cache (a slot must never inherit its predecessor's step
+                # counter or reuse-run lengths)
+                slot_state = lazy_lib.slot_cache_scatter(
+                    slot_state, i, self._init_state)
                 met.record_admit(req.rid, req.arrival, now, prompt.shape[1])
                 # empty output budget, or the model's very first greedy
                 # token is EOS (a naturally empty response): complete now
@@ -377,17 +418,17 @@ class ContinuousBatchingEngine:
                 continue
 
             fresh = pool.fresh_vector() if lazy else None
-            plan_rows = (self._plan_rows(pool)
-                         if self.lazy_mode == "plan" else None)
-            logits, cache, lazy_cache, scores = self._step(
+            logits, cache, lazy_cache, scores, slot_state, rows = self._step(
                 self.params, pool.token_vector(), pool.index_vector(),
-                pool.cache, pool.lazy_cache, fresh, plan_rows)
+                pool.cache, pool.lazy_cache, fresh, slot_state,
+                self._device_plan)
+            self._slot_state = slot_state
             pool.cache = cache
             if lazy:
                 pool.lazy_cache = lazy_cache
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
 
-            executed, skipped = self._step_accounting(pool, scores)
+            executed, skipped = self._step_accounting(pool, scores, rows)
             now += metrics_lib.step_cost(executed, self.n_slots,
                                          self.modules_per_slot)
             met.record_step(now, len(active), sched.queue_depth(),

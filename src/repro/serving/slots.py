@@ -12,18 +12,27 @@ Host state is per-slot bookkeeping: the request, its absolute position
 counter, decode-step counter (plan row index), and freshness flag.  The
 position counters are per-slot — the whole point of the mixed-position
 decode step (models/transformer.decode_step_mixed).
+
+Under an active ``dist.ctx`` mesh every slot-stacked tree (KV cache,
+lazy cache, traced policy state via ``place``) shards its slot axis over
+the data axes — one decode lane per data shard
+(dist/sharding.slot_stack_shardings), with admission scatters/evictions
+operating on the sharded arrays unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import RequestSpec
+from repro.dist import ctx as dist_ctx
+from repro.dist import sharding as sharding_lib
 from repro.models import transformer as tf
 
 
@@ -53,14 +62,25 @@ class SlotPool:
         self.window_override = window_override
         single = tf.init_decode_cache(cfg, 1, max_len,
                                       window_override=window_override)
-        self.cache = lazy_lib.stack_for_slots(single, n_slots)
+        self.cache = self.place(lazy_lib.stack_for_slots(single, n_slots))
         self.lazy_cache = None
         if lazy:
-            self.lazy_cache = lazy_lib.stack_for_slots(
+            self.lazy_cache = self.place(lazy_lib.stack_for_slots(
                 tf.init_lazy_decode_cache(cfg, 1,
                                           window_override=window_override),
-                n_slots)
+                n_slots))
         self.slots = [Slot() for _ in range(n_slots)]
+
+    def place(self, stacked):
+        """Pin a slot-stacked tree's placement: slot axis over the data
+        axes when a dist.ctx mesh is active (identity otherwise), so the
+        jitted mixed-position decode runs SPMD over decode lanes."""
+        mesh = dist_ctx.current_mesh()
+        if mesh is None:
+            return stacked
+        return jax.device_put(
+            stacked,
+            sharding_lib.slot_stack_shardings(stacked, mesh, self.n_slots))
 
     # ------------------------------------------------------------ inventory
     def free_slots(self) -> List[int]:

@@ -1,8 +1,7 @@
 """AdamW + schedules, pure-pytree (no optax in this environment)."""
 from __future__ import annotations
 
-import math
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

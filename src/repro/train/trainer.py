@@ -12,7 +12,7 @@ Also ``lm_train_step`` for the assigned LLM architectures.
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

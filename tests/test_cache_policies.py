@@ -252,12 +252,18 @@ def test_engine_plan_horizon_follows_odd_length_schedule():
     eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
                                    policy=pol)
     assert eng.plan_horizon == T_odd
-    served = eng._pstate["plan"].skip
+    # the engine's device plan (the in-jit row source) serves the full
+    # schedule, unresampled
+    served = np.asarray(eng._device_plan)
     expect = pol.compile_plan(T_odd, cfg.n_layers, 2).skip
-    np.testing.assert_array_equal(served, expect)      # full schedule, unresampled
-    # rows cycle with period 7, not 16
+    np.testing.assert_array_equal(served, expect)
+    # rows cycle with period 7, not 16 — both through the host plan_row
+    # API and the engine's traced gather (plan[t % horizon])
+    state = pol.init_state(n_steps=T_odd, n_layers=cfg.n_layers, n_modules=2)
     for t in range(3 * T_odd):
-        np.testing.assert_array_equal(pol.plan_row(t, eng._pstate),
+        np.testing.assert_array_equal(pol.plan_row(t, state),
+                                      expect[t % T_odd])
+        np.testing.assert_array_equal(served[t % eng.plan_horizon],
                                       expect[t % T_odd])
 
     # stride derives a stride-aligned horizon so cycled rows keep the

@@ -1,0 +1,119 @@
+"""Benchmark regression gate (benchmarks/check_regression.py): metric
+collection from the BENCH_* schemas, the >5% one-sided tolerance, baseline
+update/self-test flows, and the CLI exit codes CI keys off."""
+
+import json
+
+from benchmarks import check_regression as cr
+
+
+def traj_payload(ratios):
+    return {
+        "schema": "repro.bench.trajectory/v1",
+        "policies": {
+            name: {"realized_skip_ratio": r} for name, r in ratios.items()
+        },
+    }
+
+
+def cache_payload(saving):
+    return {
+        "schema": "repro.bench.cache_policies/v1",
+        "workloads": {
+            "dit": {
+                "policies": {
+                    "router": {
+                        "realized_skip_ratio": 0.5,
+                        "plan_flop_saving": saving,
+                    }
+                }
+            }
+        },
+    }
+
+
+def write(directory, name, payload):
+    directory.mkdir(parents=True, exist_ok=True)
+    (directory / name).write_text(json.dumps(payload))
+
+
+def test_collect_metrics_flattens_both_schemas():
+    m = cr.collect_metrics(traj_payload({"stride": 0.4, "none": 0.0}))
+    assert m == {
+        "trajectory/stride/realized_skip_ratio": 0.4,
+        "trajectory/none/realized_skip_ratio": 0.0,
+    }
+    m = cr.collect_metrics(cache_payload(0.38))
+    assert m["cache_policies/dit/router/plan_flop_saving"] == 0.38
+    assert m["cache_policies/dit/router/realized_skip_ratio"] == 0.5
+    assert cr.collect_metrics({"schema": "other/v1"}) == {}
+
+
+def test_compare_tolerance_is_one_sided():
+    base = {"m": 0.40}
+    assert cr.compare(base, {"m": 0.40}) == []
+    assert cr.compare(base, {"m": 0.39}) == []          # within 5%
+    assert cr.compare(base, {"m": 0.60}) == []          # improvement: fine
+    assert len(cr.compare(base, {"m": 0.37})) == 1      # 7.5% drop: fail
+    assert len(cr.compare(base, {})) == 1               # vanished: fail
+    # zero baselines (the `none` policy) gate nothing
+    assert cr.compare({"z": 0.0}, {"z": 0.0}) == []
+    assert cr.compare({"z": 0.0}, {}) == []
+
+
+def test_gate_fails_on_injected_flop_saving_regression(tmp_path):
+    """The acceptance demonstration: a >5% compiled-FLOP-saving drop vs
+    the committed baseline makes the gate exit nonzero."""
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    write(baseline, "BENCH_cache_policies.json", cache_payload(0.40))
+    write(current, "BENCH_cache_policies.json", cache_payload(0.40 * 0.90))
+    rc = cr.main(["--baseline-dir", str(baseline),
+                  "--current-dir", str(current)])
+    assert rc == 1
+    # within tolerance -> clean exit
+    write(current, "BENCH_cache_policies.json", cache_payload(0.40 * 0.97))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 0
+
+
+def test_gate_fails_on_skip_ratio_regression(tmp_path):
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    write(baseline, "BENCH_trajectory.json", traj_payload({"stride": 0.44}))
+    write(current, "BENCH_trajectory.json", traj_payload({"stride": 0.30}))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 1
+
+
+def test_missing_baselines_fail_loudly(tmp_path):
+    assert cr.main(["--baseline-dir", str(tmp_path / "nope"),
+                    "--current-dir", str(tmp_path / "alsono")]) == 1
+
+
+def test_update_writes_baselines(tmp_path):
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    write(current, "BENCH_trajectory.json", traj_payload({"stride": 0.44}))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current), "--update"]) == 0
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 0
+
+
+def test_self_test_bites(tmp_path):
+    current = tmp_path / "cur"
+    write(current, "BENCH_trajectory.json",
+          traj_payload({"stride": 0.44, "none": 0.0}))
+    assert cr.main(["--current-dir", str(current), "--self-test"]) == 0
+    # no artifacts at all: the self-test must refuse to vacuously pass
+    assert cr.main(["--current-dir", str(tmp_path / "empty"),
+                    "--self-test"]) == 1
+
+
+def test_committed_baselines_cover_the_gated_files():
+    """The baselines this PR commits must exist and contain gated
+    metrics — otherwise the CI gate would be a no-op."""
+    metrics = cr.load_metrics(cr.DEFAULT_BASELINE_DIR)
+    gated = {k: v for k, v in metrics.items() if v > cr.ZERO_FLOOR}
+    assert len(gated) >= 5, (
+        f"expected committed baselines under {cr.DEFAULT_BASELINE_DIR}, "
+        f"found gated metrics: {sorted(gated)}"
+    )

@@ -3,7 +3,6 @@ analyzer, plan-mode unrolled decode, checkpoint round-trip."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import LazyConfig, ModelConfig
 from repro.dist import hlo as hlo_lib

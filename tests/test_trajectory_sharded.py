@@ -1,0 +1,357 @@
+"""Mesh-sharded fused trajectory executor (dist.ctx.mesh +
+sampling/trajectory): per-example bit-exact parity across data=1/2/8
+meshes, the compile-once-per-mesh contract, eta > 0 stochastic DDIM on
+the reserved per-step keys, sharded-HLO accounting (dist/hlo), and the
+continuous-batching engine's sharded slot pool + traced per-slot policy
+state.
+
+Mesh tests skip when the process has fewer devices than the mesh needs —
+the multi-device CI leg (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+runs them against a real 8-device mesh; a subprocess smoke keeps ONE
+sharded parity check alive even in the single-device suite."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache as cache_lib
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import LatentImageDataset
+from repro.dist import ctx, hlo as hlo_lib
+from repro.models import dit as dit_lib
+from repro.sampling import ddim, trajectory
+from repro.train import optim, trainer
+
+T, L, M = 5, 3, 2
+# divides every tested data-axis size AND keeps >= 2 forward rows per
+# shard even without CFG: a one-example shard hits XLA CPU's
+# degenerate-dim GEMM path, which rounds ~1 ulp differently (the
+# documented boundary of the bit-exactness contract, DESIGN.md
+# §Trajectory)
+BATCH = 16
+
+
+def need_devices(n):
+    return pytest.mark.skipif(
+        len(jax.devices()) < n,
+        reason=f"needs {n} devices (XLA_FLAGS="
+               f"--xla_force_host_platform_device_count={n})")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="dit_shard", family="dit", n_layers=L, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, dit_patch=2,
+                      dit_input_size=8, dit_in_channels=4, dit_n_classes=10,
+                      rope_type="none", dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    sched = ddim.linear_schedule(100)
+    # brief pretraining so adaLN-zero gates are nonzero and skips reach
+    # the sample (otherwise every parity check is vacuous)
+    it = LatentImageDataset(cfg, seed=0).batches(8, seed=1)
+    opt = optim.adamw_init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(10):
+        x0, y = next(it)
+        key, k = jax.random.split(key)
+        params, opt, _ = trainer.diffusion_train_step(
+            params, opt, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            lr=2e-3)
+    return cfg, params, sched
+
+
+def make_policy(name):
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=2)
+    if name == "lazy_gate":
+        return cache_lib.get_policy("lazy_gate", threshold=0.1)
+    if name == "plan":
+        return cache_lib.get_policy(
+            "plan", plan=lazy_lib.uniform_plan(T, L, M, 0.5, seed=0).skip)
+    if name == "static_router":
+        return cache_lib.get_policy("static_router", ratio=0.5)
+    raise ValueError(name)
+
+
+def sample_kw(name, cfg_scale=1.5, eta=0.0):
+    return dict(key=jax.random.PRNGKey(3),
+                labels=jnp.arange(BATCH) % 10, n_steps=T,
+                cfg_scale=cfg_scale, eta=eta, policy=make_policy(name))
+
+
+# ---------------------------------------------------------------------------
+# per-example bit-exact parity across mesh sizes
+# ---------------------------------------------------------------------------
+
+
+@need_devices(8)
+@pytest.mark.parametrize("cfg_scale", [1.0, 1.5], ids=["cfg_off", "cfg_on"])
+@pytest.mark.parametrize("name", ["stride", "lazy_gate", "plan",
+                                  "static_router"])
+def test_mesh_parity_bit_exact(setup, name, cfg_scale):
+    """data=1, 2, 8 meshes all reproduce the no-mesh single-device sample
+    bit-for-bit, per example — plan rows are batch-invariant, so sharding
+    the batch must not change any decision or any bit."""
+    cfg, params, sched = setup
+    kw = sample_kw(name, cfg_scale=cfg_scale)
+    base, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    base = np.asarray(base)
+    if name != "none":
+        assert aux["realized_skip_ratio"] > 0.0, "vacuous parity: no skips"
+    for n_data in (1, 2, 8):
+        with ctx.mesh(data=n_data):
+            got, aux_m = trajectory.sample_trajectory(params, cfg, sched,
+                                                      **kw)
+        np.testing.assert_array_equal(
+            np.asarray(got), base,
+            err_msg=f"{name} data={n_data} broke per-example bit-exactness")
+        assert aux_m["realized_skip_ratio"] == pytest.approx(
+            aux["realized_skip_ratio"]), \
+            f"{name} data={n_data} changed the realized skip accounting"
+
+
+@need_devices(8)
+def test_mesh_parity_eta_stochastic(setup):
+    """eta > 0 noise is keyed per example (ddim.per_example_keys), so the
+    stochastic sampler is ALSO mesh-invariant bit-for-bit."""
+    cfg, params, sched = setup
+    kw = sample_kw("stride", eta=0.5)
+    base, _ = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    with ctx.mesh(data=8):
+        got, _ = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@need_devices(8)
+def test_latents_actually_shard(setup):
+    """The parity must not be trivial: under data=8 the returned latents
+    carry a data-axis sharding with 8 shards."""
+    cfg, params, sched = setup
+    with ctx.mesh(data=8) as mesh:
+        got, _ = trajectory.sample_trajectory(params, cfg, sched,
+                                              **sample_kw("stride"))
+        assert got.sharding.spec[0] == ("data",)
+        assert len(got.sharding.device_set) == 8
+        assert mesh.shape["data"] == 8
+
+
+# ---------------------------------------------------------------------------
+# compile-once per (config, policy, steps, guidance, eta, mesh)
+# ---------------------------------------------------------------------------
+
+
+@need_devices(8)
+def test_single_compile_per_mesh(setup):
+    cfg, params, sched = setup
+    from benchmarks.bench_trajectory import compile_counter
+    kw = sample_kw("stride")
+    trajectory.build_sampler.cache_clear()
+    with ctx.mesh(data=8):
+        trajectory.sample_trajectory(params, cfg, sched, **kw)
+        fn = trajectory.build_sampler(cfg, kw["policy"], T, 1.5, batch=BATCH)
+        assert fn._cache_size() == 1
+        # warm resample on the same mesh: zero new backend compiles
+        with compile_counter() as c:
+            trajectory.sample_trajectory(params, cfg, sched, **kw)
+        assert c["n"] == 0, f"warm sharded sample compiled {c['n']} times"
+        assert fn._cache_size() == 1
+    # re-entering an equivalent mesh context must hit the same executable
+    with ctx.mesh(data=8):
+        with compile_counter() as c:
+            trajectory.sample_trajectory(params, cfg, sched, **kw)
+        assert c["n"] == 0, "equivalent mesh context retraced the sampler"
+
+
+# ---------------------------------------------------------------------------
+# sharded-HLO accounting (dist/hlo partitions + per-device vs global)
+# ---------------------------------------------------------------------------
+
+
+@need_devices(8)
+def test_sharded_hlo_accounting(setup):
+    """The compiled sharded scan reports partitions=8, ~1/8 the per-device
+    FLOPs of the single-device program (the modeled >=4x batch-throughput
+    scaling the bench asserts), and global FLOPs within 10% of the
+    single-device total."""
+    cfg, params, sched = setup
+    pol = make_policy("static_router")
+    labels = jnp.arange(BATCH) % 10
+    flops = {}
+    for n_data in (1, 8):
+        trajectory.build_sampler.cache_clear()
+        with ctx.mesh(data=n_data):
+            fn = trajectory.build_sampler(cfg, pol, T, 1.5, batch=BATCH)
+            args = trajectory.prepare_inputs(
+                cfg, sched, pol, key=jax.random.PRNGKey(3), labels=labels,
+                n_steps=T)
+            mod = hlo_lib.sharded_totals(
+                fn.lower(params, *args).compile().as_text())
+        assert mod["partitions"] == n_data
+        flops[n_data] = mod
+    scaling = flops[1]["flops"] / flops[8]["flops"]
+    assert scaling >= 4.0, f"modeled throughput scaling only {scaling:.2f}x"
+    assert flops[8]["flops_global"] == pytest.approx(
+        flops[1]["flops_global"], rel=0.10)
+    # plan rows are replicated and CFG pairs are interleaved shard-local,
+    # so the plan-mode scan body is COMMUNICATION-FREE — any collective
+    # here means a layout regression (e.g. the old [z; z] concat, which
+    # resharded every activation)
+    assert not flops[8]["collective"], \
+        f"plan-mode sharded scan grew collectives: {flops[8]['collective']}"
+
+
+def test_module_partitions_parses_header_only():
+    txt = ("HloModule jit_sample, entry_computation_layout={()->f32[]}, "
+           "num_partitions=8\n\nENTRY %main () -> f32[] {\n"
+           "  ROOT %c = f32[] constant(0), metadata={num_partitions=99}\n}\n")
+    assert hlo_lib.module_partitions(txt) == 8
+    assert hlo_lib.module_partitions("HloModule m\nENTRY %e () -> f32[] {\n"
+                                     "}\n") == 1
+    mod = hlo_lib.sharded_totals(txt)
+    assert mod["partitions"] == 8
+    assert mod["flops_global"] == mod["flops"] * 8
+
+
+# ---------------------------------------------------------------------------
+# mesh context plumbing (any device count)
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mesh_spec():
+    assert ctx.parse_mesh_spec("") == {"data": 1, "model": 1}
+    assert ctx.parse_mesh_spec("data=8") == {"data": 8, "model": 1}
+    assert ctx.parse_mesh_spec("data=4,model=2") == {"data": 4, "model": 2}
+    for bad in ("dat=8", "data=0", "data=x", "8"):
+        with pytest.raises(ValueError):
+            ctx.parse_mesh_spec(bad)
+
+
+def test_mesh_context_single_device():
+    """data=1 meshes work on any host; the context activates and restores
+    the thread-local state, and too-large meshes fail loudly."""
+    assert ctx.current_mesh() is None
+    with ctx.mesh(data=1) as m:
+        assert ctx.current_mesh() is m
+        assert ctx.mesh_cache_key() is not None
+        with ctx.mesh(data=1):
+            pass                         # nesting restores cleanly
+        assert ctx.current_mesh() is m
+    assert ctx.current_mesh() is None
+    with pytest.raises(ValueError, match="devices"):
+        ctx.build_mesh(data=10 ** 6)
+
+
+def test_mesh_cache_key_stable_across_contexts():
+    with ctx.mesh(data=1) as m1:
+        k1 = ctx.mesh_cache_key()
+    with ctx.mesh(data=1) as m2:
+        k2 = ctx.mesh_cache_key()
+    assert k1 == k2
+    assert m1.axis_names == m2.axis_names
+
+
+# ---------------------------------------------------------------------------
+# sharded serving: slot pool over the data axis, traced per-slot state
+# ---------------------------------------------------------------------------
+
+
+@need_devices(8)
+@pytest.mark.parametrize("mode", ["off", "plan"])
+def test_sharded_serving_token_parity(mode):
+    """The continuous-batching engine under mesh(data=8) — slot axis of
+    every stacked tree (KV, lazy cache, traced policy state) sharded, one
+    decode lane per device — serves every request the same greedy tokens
+    as the unsharded engine."""
+    from repro.data.synthetic import request_trace
+    from repro.models import transformer as tf
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      head_dim=16, d_ff=64, vocab_size=61, dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    trace = list(request_trace(6, cfg.vocab_size, seed=3,
+                               mean_interarrival=0.4,
+                               short_prompt=(3, 3), long_prompt=(6, 6),
+                               short_output=(3, 5), long_output=(6, 8)))
+    plan = (lazy_lib.uniform_plan(8, cfg.n_layers, 2, 0.5, seed=1)
+            if mode == "plan" else None)
+    kw = dict(n_slots=8, max_len=32, lazy_mode=mode, plan=plan)
+    base = ContinuousBatchingEngine(cfg, params, **kw).run(trace)
+    with ctx.mesh(data=8) as mesh:
+        eng = ContinuousBatchingEngine(cfg, params, **kw)
+        sharded = eng.run(trace)
+        # the pool must actually shard: 8 slots over 8 data shards
+        leaf = jax.tree.leaves(eng._slot_state)[0]
+        pool_sharded = len(leaf.sharding.device_set) == 8
+    assert mesh.shape["data"] == 8
+    assert pool_sharded, "slot-stacked state stayed on one device"
+    for r in trace:
+        np.testing.assert_array_equal(
+            sharded.outputs[r.rid], base.outputs[r.rid],
+            err_msg=f"rid={r.rid} mode={mode} diverged under the mesh")
+
+
+# ---------------------------------------------------------------------------
+# subprocess smoke: one sharded parity check even in the 1-device suite
+# ---------------------------------------------------------------------------
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+jax.config.update("jax_platforms", "cpu")
+jax.config.update("jax_default_matmul_precision", "highest")
+import jax.numpy as jnp
+import numpy as np
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.dist import ctx
+from repro.models import dit as dit_lib
+from repro.sampling import ddim, trajectory
+from repro import cache as cache_lib
+
+cfg = ModelConfig(name="dit_sub", family="dit", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, dit_patch=2,
+                  dit_input_size=8, dit_in_channels=4, dit_n_classes=10,
+                  rope_type="none", dtype="float32",
+                  lazy=LazyConfig(enabled=True, mode="masked"))
+params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+sched = ddim.linear_schedule(100)
+kw = dict(key=jax.random.PRNGKey(3), labels=jnp.arange(8) % 10, n_steps=4,
+          cfg_scale=1.5, policy=cache_lib.get_policy("stride", stride=2))
+base, _ = trajectory.sample_trajectory(params, cfg, sched, **kw)
+with ctx.mesh(data=8):
+    got, _ = trajectory.sample_trajectory(params, cfg, sched, **kw)
+print("RESULT " + json.dumps({
+    "exact": bool(np.array_equal(np.asarray(base), np.asarray(got))),
+    "n_dev": len(jax.devices()),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_parity_subprocess_smoke():
+    """8 fake devices need a fresh process (device count locks at first
+    jax init) — this keeps one sharded bit-exactness check in the default
+    single-device tier-1 run."""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         os.environ.get("PYTHONPATH", "")]))
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, out.stdout
+    res = json.loads(line[0][len("RESULT "):])
+    assert res["n_dev"] == 8
+    assert res["exact"], "sharded executor diverged from single-device"

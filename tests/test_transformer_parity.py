@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import (LazyConfig, MLAConfig, ModelConfig, MoEConfig,
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,
                                 SSMConfig, XLSTMConfig)
 from repro.models import transformer as tf
 
