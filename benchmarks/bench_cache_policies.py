@@ -50,8 +50,10 @@ from repro.data.synthetic import LatentImageDataset
 from repro.dist import hlo as hlo_lib
 from repro.models import dit as dit_lib
 from repro.models import transformer as tf
+from repro.cache import schedule as schedule_lib
 from repro.sampling import ddim
 from repro.serving.engine import Engine, POLICY_PLAN_STEPS
+from repro.train import learned as learned_lib
 from repro.train import optim, trainer
 
 SCHEMA = "repro.bench.cache_policies/v1"
@@ -202,9 +204,40 @@ def _policy_set(calib, scores_mean, threshold_q: float, router_ratio: float):
     }, (gate.distill(scores_mean) if scores_mean is not None else None)
 
 
+def _learned_policy_set(params, cfg, sched, scores_mean, calib, *, n_steps,
+                        gate_ratio, router_ratio, router_steps):
+    """The trained-schedule variants (DESIGN.md §Train), each a first-class
+    plan-mode policy the fused executor runs like any other:
+
+      learned_gate   — the fixture's lazy-trained probe scores distilled at
+                       a target ratio (train/learned's gate pipeline);
+      learned_router — per-layer router logits trained by backprop through
+                       the relaxed (mix_cached) trajectory, hardened to the
+                       per-layer-quota plan;
+      learned_delta  — the Δ-DiT-style depth-banded residual cache, placed
+                       by the calibration profile (no gradients needed —
+                       the calibrated member of the learned column family).
+    """
+    art_gate = schedule_lib.distill_scores("lazy_gate", cfg.name,
+                                           scores_mean,
+                                           target_ratio=gate_ratio)
+    theta, _ = learned_lib.train_router(params, cfg, sched, n_steps=n_steps,
+                                        target_ratio=router_ratio,
+                                        steps=router_steps, batch=2, lr=5e-2)
+    art_router = learned_lib.distill_router_schedule(
+        theta, cfg, target_ratio=router_ratio)
+    return {
+        "learned_gate": cache_lib.get_policy("learned", artifact=art_gate),
+        "learned_router": cache_lib.get_policy("learned",
+                                               artifact=art_router),
+        "learned_delta": cache_lib.get_policy("delta", ratio=router_ratio,
+                                              calibration=calib),
+    }
+
+
 def run_dit(*, d_model=96, n_layers=4, input_size=16, pretrain=40,
             lazy_steps=40, n_steps=12, batch=2, threshold_q=0.5,
-            router_ratio=0.5):
+            router_ratio=0.5, gate_ratio=0.35, router_steps=8):
     cfg, params, sched = dit_fixture(
         d_model=d_model, n_layers=n_layers, input_size=input_size,
         pretrain=pretrain, lazy_steps=lazy_steps)
@@ -224,6 +257,10 @@ def run_dit(*, d_model=96, n_layers=4, input_size=16, pretrain=40,
                                         cfg_scale=1.5)
     policies, gate_plan = _policy_set(calib, scores_mean, threshold_q,
                                       router_ratio)
+    policies.update(_learned_policy_set(
+        params, cfg, sched, scores_mean, calib, n_steps=n_steps,
+        gate_ratio=gate_ratio, router_ratio=router_ratio,
+        router_steps=router_steps))
     flops_fn = dit_flops_for_row(cfg, params, 2 * batch)
 
     out = {}
@@ -257,6 +294,19 @@ def run_dit(*, d_model=96, n_layers=4, input_size=16, pretrain=40,
     assert float(jnp.max(jnp.abs(x_dg - ref))) == 0.0, \
         "lazy_gate at zero skip ratio drifted from the baseline"
     out["lazy_gate"]["parity_at_zero_ratio"] = True
+
+    # learned-schedule acceptance (ROADMAP item 2): the trained lazy-gate
+    # schedule must deliver a real skip ratio AND place its skips better
+    # than the calibrate-then-threshold baseline does at ITS ratio
+    lg = out["learned_gate"]
+    assert lg["realized_skip_ratio"] >= 0.30, \
+        f"learned_gate skip ratio {lg['realized_skip_ratio']} < 0.30"
+    assert lg["drift_mse"] < out["smoothcache"]["drift_mse"], \
+        (f"learned_gate drift {lg['drift_mse']:.3g} not below smoothcache "
+         f"{out['smoothcache']['drift_mse']:.3g}")
+    for name in ("learned_gate", "learned_router", "learned_delta"):
+        assert out[name]["plan_flop_saving"] > 0.0, \
+            f"{name} removed no compiled FLOPs"
 
     meta = {"arch": "dit_xl2_256", "reduced": {
         "n_layers": cfg.n_layers, "d_model": cfg.d_model,
@@ -338,8 +388,13 @@ def run_lm(*, d_model=64, n_layers=2, n_new=12, prompt_len=4, threshold_q=0.5,
 
 def run_bench(*, smoke: bool = False):
     if smoke:
+        # pretrain/lazy_steps large enough that the probes RANK safety:
+        # on a near-random trunk the scores track activation magnitude
+        # (highest on the noisy early steps — exactly where caching hurts)
+        # and the learned_gate acceptance below would compare garbage
         dit_meta, dit_res = run_dit(d_model=64, n_layers=3, input_size=16,
-                                    pretrain=4, lazy_steps=4, n_steps=6)
+                                    pretrain=16, lazy_steps=64, n_steps=6,
+                                    router_steps=4)
         lm_meta, lm_res = run_lm(d_model=32, n_layers=2, n_new=8)
     else:
         dit_meta, dit_res = run_dit()

@@ -1,10 +1,12 @@
 """repro.cache — pluggable skip/reuse policy subsystem.
 
 See policy.py for the interface/registry, policies.py for the built-in
-policies (none | stride | lazy_gate | smoothcache | static_router | plan),
-and calibrate.py for the probe pass that emits the reusable calibration
-artifact the training-free policies consume.  DESIGN.md §Cache documents
-how each policy maps onto the lazy executor's modes.
+policies (none | stride | lazy_gate | smoothcache | static_router | plan |
+delta | learned), calibrate.py for the probe pass that emits the reusable
+calibration artifact the training-free policies consume, and schedule.py
+for the learned-schedule artifact the trained policies distill into.
+DESIGN.md §Cache documents how each policy maps onto the lazy executor's
+modes; DESIGN.md §Train covers the trained variants.
 
 ``calibrate`` is intentionally not imported here: it pulls in the samplers
 (sampling/ddim, models/transformer), which themselves route decisions
@@ -13,13 +15,18 @@ through this package — import ``repro.cache.calibrate`` explicitly.
 from repro.cache.policy import (CachePolicy, available_policies,
                                 from_legacy, get_policy, register_policy,
                                 resolve)
-from repro.cache.policies import (LazyGatePolicy, NonePolicy, PlanPolicy,
-                                  SmoothCachePolicy, StaticRouterPolicy,
-                                  StridePolicy, noop_plan_row)
+from repro.cache.policies import (DeltaCachePolicy, LazyGatePolicy,
+                                  LearnedSchedulePolicy, NonePolicy,
+                                  PlanPolicy, SmoothCachePolicy,
+                                  StaticRouterPolicy, StridePolicy,
+                                  noop_plan_row)
+from repro.cache.schedule import ScheduleArtifact, distill_scores
 
 __all__ = [
     "CachePolicy", "available_policies", "from_legacy", "get_policy",
     "register_policy", "resolve",
-    "LazyGatePolicy", "NonePolicy", "PlanPolicy", "SmoothCachePolicy",
-    "StaticRouterPolicy", "StridePolicy", "noop_plan_row",
+    "DeltaCachePolicy", "LazyGatePolicy", "LearnedSchedulePolicy",
+    "NonePolicy", "PlanPolicy", "SmoothCachePolicy", "StaticRouterPolicy",
+    "StridePolicy", "noop_plan_row",
+    "ScheduleArtifact", "distill_scores",
 ]

@@ -17,6 +17,15 @@
                   affinities.
   plan          — thin wrapper over an explicit core.lazy.LazyPlan (the
                   legacy `--lazy plan` path).
+  delta         — Δ-DiT-style (Chen et al., arXiv:2406.01125) feature-
+                  residual cache: skip a contiguous DEPTH BAND of blocks
+                  per step, sliding rear->front across the trajectory
+                  (or placed by calibrated residuals), re-adding each
+                  skipped module's cached residual-branch output.
+  learned       — deployable form of a TRAINED schedule
+                  (cache/schedule.ScheduleArtifact from train/learned.py):
+                  the distilled LazyPlan of the paper's trained lazy
+                  gates or the differentiable router.
 
 All static policies keep the first AND last steps always-fresh — the
 paper's observation that trajectory endpoints are least similar across
@@ -29,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache.policy import CachePolicy, register_policy
+from repro.cache.schedule import ScheduleArtifact
 from repro.core import lazy as lazy_lib
 
 
@@ -248,6 +258,157 @@ class StaticRouterPolicy(CachePolicy):
 
     def plan_horizon(self, default: int) -> int:
         return self.profile.shape[0] if self.profile is not None else default
+
+
+@register_policy("delta")
+class DeltaCachePolicy(CachePolicy):
+    """Δ-DiT-style feature-residual cache (arXiv:2406.01125).
+
+    Δ-DiT caches Δ-Cache — the residual a block group ADDS to the stream
+    (group output minus group input) — and re-applies the stale Δ instead
+    of recomputing the group, caching REAR blocks early in the trajectory
+    (when steps shape outlines) and FRONT blocks late (when they refine
+    detail).  Our lazy cache already stores each module's residual-branch
+    output F(Z) pre-output-gate (models/dit.py), which IS the per-module
+    feature residual, so the policy reduces to a depth-banded schedule
+    over the existing plan machinery: each skipping step freezes one
+    contiguous band of ``width`` layers (both modules — Δ-DiT caches
+    whole blocks).
+
+    Band placement: with a calibration profile (cache/calibrate), each
+    step's band is the contiguous window with the SMALLEST summed
+    consecutive-step residual error — the measured "this Δ barely moved"
+    signal; without one, the Δ-DiT default slides rear -> front at
+    ``split`` (fraction of the trajectory at which the band flips ends).
+    ``refresh`` forces full-recompute steps (t % refresh == 0) so no Δ
+    serves stale features indefinitely — Δ-DiT's cache interval.  The
+    traced run_len state mirrors smoothcache's, so the fused executor
+    accounts realized reuse runs identically.
+    """
+
+    def __init__(self, ratio: float = 0.5, calibration=None,
+                 split: float = 0.5, refresh: int = 4):
+        if not 0.0 <= ratio <= 1.0:
+            raise ValueError(f"ratio must be in [0, 1], got {ratio}")
+        if not 0.0 <= split <= 1.0:
+            raise ValueError(f"split must be in [0, 1], got {split}")
+        if refresh < 2:
+            raise ValueError(f"refresh must be >= 2, got {refresh}")
+        self.ratio = float(ratio)
+        self.split = float(split)
+        self.refresh = int(refresh)
+        self.calibration = calibration
+        self.profile = (None if calibration is None
+                        else _as_profile(calibration, "delta"))
+
+    def _band(self, t: int, n_steps: int, n_layers: int, width: int,
+              prof_row) -> slice:
+        """The contiguous layer band frozen at step ``t``."""
+        if width >= n_layers:
+            return slice(0, n_layers)
+        if prof_row is not None:
+            # calibrated placement: window with the least summed residual
+            # error (non-finite entries mean "never skip" -> +inf cost)
+            cost = np.where(np.isfinite(prof_row), prof_row, np.inf).sum(-1)
+            sums = [cost[i:i + width].sum() for i in
+                    range(n_layers - width + 1)]
+            start = int(np.argmin(sums))
+            if not np.isfinite(sums[start]):
+                return slice(0, 0)            # nothing safely skippable
+            return slice(start, start + width)
+        # Δ-DiT default: rear band while outlines form, front band after
+        if t < self.split * n_steps:
+            return slice(n_layers - width, n_layers)
+        return slice(0, width)
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        skip = np.zeros((n_steps, n_layers, n_modules), bool)
+        skippable = [t for t in range(1, n_steps - 1)
+                     if t % self.refresh != 0]
+        if self.ratio <= 0 or not skippable:
+            return lazy_lib.LazyPlan(skip)
+        prof = (None if self.profile is None else
+                _resample_steps(self.calibration, self.profile, n_steps))
+        # band width compensating for refresh holes, so the overall plan
+        # ratio tracks ``ratio`` (clipped to the full depth)
+        width = min(n_layers, int(round(
+            self.ratio * n_steps * n_layers / len(skippable))))
+        for t in skippable:
+            band = self._band(t, n_steps, n_layers, width,
+                              None if prof is None else prof[t])
+            skip[t, band, :] = True
+        return lazy_lib.LazyPlan(skip)
+
+    def plan_horizon(self, default: int) -> int:
+        # refresh-aligned horizon keeps cycled schedules congruent with
+        # the t % refresh recompute rule (same reasoning as stride)
+        base = (self.profile.shape[0] if self.profile is not None
+                else default)
+        return -(-base // self.refresh) * self.refresh
+
+    def init_traced_state(self, *, n_steps, n_layers, n_modules=2):
+        st = super().init_traced_state(n_steps=n_steps, n_layers=n_layers,
+                                       n_modules=n_modules)
+        st["run_len"] = jnp.zeros((n_layers, n_modules), jnp.int32)
+        return st
+
+    def update_traced_state(self, state, *, scores=None, plan_row=None):
+        state = super().update_traced_state(state, scores=scores,
+                                            plan_row=plan_row)
+        if plan_row is not None:
+            state["run_len"] = jnp.where(plan_row, state["run_len"] + 1, 0)
+        return state
+
+
+@register_policy("learned")
+class LearnedSchedulePolicy(CachePolicy):
+    """A trained schedule, deployed.
+
+    Wraps a ``cache/schedule.ScheduleArtifact`` — the distilled output of
+    the learned-schedule harness (train/learned.py): the paper's trained
+    lazy-gate probes or the differentiable per-layer router, hardened
+    into a static LazyPlan.  Pass the artifact object (``artifact=``) or
+    a saved JSON path (``path=``).  Exec mode is 'plan', so the fused
+    trajectory executor, the serving engines and the dist/hlo FLOP
+    accounting consume it exactly like any other static policy — the
+    whole point of the distill step.
+
+    Deployment step counts different from the trained horizon resample
+    the stored SCORES (nearest-step, like calibration artifacts) and
+    re-distill with the artifact's recorded rule, rather than crudely
+    cycling plan rows — the learned evidence, not one hardening of it,
+    is the durable object."""
+
+    def __init__(self, artifact=None, path: str = ""):
+        if artifact is None and not path:
+            raise ValueError("learned policy needs artifact= or path=")
+        if artifact is None:
+            artifact = ScheduleArtifact.load(path)
+        if not isinstance(artifact, ScheduleArtifact):
+            raise TypeError("artifact must be a cache.schedule."
+                            f"ScheduleArtifact, got {type(artifact).__name__}")
+        self.artifact = artifact
+
+    def compile_plan(self, n_steps, n_layers, n_modules=2):
+        art = self.artifact
+        if (art.n_layers, len(art.modules)) != (n_layers, n_modules):
+            raise ValueError(
+                f"schedule artifact is (T, {art.n_layers}, "
+                f"{len(art.modules)}), model needs (T, {n_layers}, "
+                f"{n_modules})")
+        if n_steps == art.n_steps:
+            return art.plan()
+        idx = np.round(np.linspace(0.0, art.n_steps - 1,
+                                   n_steps)).astype(int)
+        scores = art.scores[idx]
+        if art.target_ratio is None:
+            return lazy_lib.plan_from_scores(scores,
+                                             threshold=art.threshold)
+        return lazy_lib.plan_with_target_ratio(
+            scores, art.target_ratio, per_layer=(art.kind == "router"))
+
+    def plan_horizon(self, default: int) -> int:
+        return self.artifact.n_steps
 
 
 @register_policy("plan")

@@ -1,0 +1,140 @@
+"""Learned-schedule artifacts: the distilled form of a trained skip policy.
+
+The training harness (train/learned.py) produces *scores* — per
+(step, layer, module) laziness evidence: batch-averaged probe sigmoids for
+the paper's lazy gates, annealed router gate probabilities for the
+Learning-to-Cache-style router.  Deployment wants a static
+``core.lazy.LazyPlan`` the fused trajectory executor and the serving
+engines consume unchanged (exec_mode 'plan': skipped modules absent from
+the compiled HLO).  A ``ScheduleArtifact`` records both — the learned
+scores (so the plan can be re-distilled at a different ratio or step
+count without retraining) and the distilled boolean plan — as a small
+JSON, mirroring the calibration artifact (cache/calibrate.py) that the
+training-free policies use.
+
+    artifact = distill_scores("lazy_gate", cfg.name, scores,
+                              target_ratio=0.4)
+    artifact.save("artifacts/schedule_lazy_gate.json")
+    pol = repro.cache.get_policy("learned", artifact=artifact)   # or path=
+
+Schema ``repro.cache.schedule/v1`` (DESIGN.md §Train).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import lazy as lazy_lib
+
+SCHEMA = "repro.cache.schedule/v1"
+
+#: the trained variants a schedule artifact may record
+KINDS = ("lazy_gate", "router")
+
+
+@dataclass
+class ScheduleArtifact:
+    kind: str                    # one of KINDS — which trainer produced it
+    arch: str
+    n_steps: int
+    n_layers: int
+    modules: Tuple[str, ...]     # plan-column names, e.g. ('attn', 'ffn')
+    scores: np.ndarray           # (T, L, M) learned scores in [0, 1]
+    skip: np.ndarray             # (T, L, M) bool distilled plan
+    threshold: float = 0.5       # only meaningful for threshold distills
+    target_ratio: Optional[float] = None   # only for target-ratio distills
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"schedule kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        self.scores = np.asarray(self.scores, np.float64)
+        self.skip = np.asarray(self.skip, bool)
+        expect = (self.n_steps, self.n_layers, len(self.modules))
+        for name, arr in (("scores", self.scores), ("skip", self.skip)):
+            if arr.shape != expect:
+                raise ValueError(f"{name} shape {arr.shape} != "
+                                 f"(n_steps, n_layers, n_modules) {expect}")
+        if self.skip[0].any():
+            raise ValueError("schedule skips on step 0 (no cache exists "
+                             "yet) — distillation must keep it fresh")
+
+    # ------------------------------------------------------------ views
+    def plan(self) -> lazy_lib.LazyPlan:
+        return lazy_lib.LazyPlan(self.skip.copy())
+
+    @property
+    def lazy_ratio(self) -> float:
+        return float(self.skip.mean())
+
+    # ------------------------------------------------------------ (de)serialize
+    def to_json(self) -> dict:
+        return {"schema": SCHEMA, "kind": self.kind, "arch": self.arch,
+                "n_steps": self.n_steps, "n_layers": self.n_layers,
+                "modules": list(self.modules),
+                "scores": self.scores.tolist(),
+                "skip": self.skip.astype(int).tolist(),
+                "threshold": self.threshold,
+                "target_ratio": self.target_ratio,
+                "meta": self.meta}
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "ScheduleArtifact":
+        if obj.get("schema") != SCHEMA:
+            raise ValueError(f"not a schedule artifact "
+                             f"(schema={obj.get('schema')!r})")
+        return cls(kind=obj["kind"], arch=obj["arch"],
+                   n_steps=obj["n_steps"], n_layers=obj["n_layers"],
+                   modules=tuple(obj["modules"]),
+                   scores=np.asarray(obj["scores"], np.float64),
+                   skip=np.asarray(obj["skip"], bool),
+                   threshold=float(obj.get("threshold", 0.5)),
+                   target_ratio=obj.get("target_ratio"),
+                   meta=obj.get("meta", {}))
+
+    @classmethod
+    def load(cls, path: str) -> "ScheduleArtifact":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+def distill_scores(kind: str, arch: str, scores: np.ndarray, *,
+                   modules: Tuple[str, ...] = ("attn", "ffn"),
+                   threshold: float = 0.5,
+                   target_ratio: Optional[float] = None,
+                   per_layer: bool = False,
+                   meta: Optional[Dict[str, Any]] = None
+                   ) -> ScheduleArtifact:
+    """Learned (T, L, M) scores -> a deployable ScheduleArtifact.
+
+    Two distillation rules, matching the two training variants:
+      * ``target_ratio=None`` — the paper's rule: threshold the scores
+        (core.lazy.plan_from_scores; inference skips where s > 0.5).
+      * ``target_ratio=r`` — deployment's knob: pick the top-scoring
+        module calls to hit ratio ``r`` exactly
+        (core.lazy.plan_with_target_ratio: endpoints always fresh, the
+        REFRESH rotation bounds staleness).  ``per_layer=True`` adds the
+        uniform per-layer quota — the Learning-to-Cache router shape.
+    """
+    scores = np.asarray(scores, np.float64)
+    if target_ratio is None:
+        plan = lazy_lib.plan_from_scores(scores, threshold=threshold)
+    else:
+        plan = lazy_lib.plan_with_target_ratio(scores, target_ratio,
+                                               per_layer=per_layer)
+    return ScheduleArtifact(
+        kind=kind, arch=arch, n_steps=scores.shape[0],
+        n_layers=scores.shape[1], modules=modules, scores=scores,
+        skip=plan.skip, threshold=threshold, target_ratio=target_ratio,
+        meta=dict(meta or {}))

@@ -32,6 +32,16 @@ def save_checkpoint(path: str, params: Any, extra: Optional[dict] = None):
     np.savez(path, **flat)
 
 
+def load_extras(path: str) -> dict:
+    """The ``extra`` scalars/arrays a checkpoint was saved with (step
+    counters, optimizer step, recipe metadata) — the counterpart of
+    ``save_checkpoint``'s ``extra`` argument, used by the lazy-training
+    resume path (train/learned.py) to continue a recipe mid-run."""
+    data = np.load(path)
+    return {k.split("/", 1)[1]: data[k] for k in data.files
+            if k.startswith("__extra__/")}
+
+
 def restore_checkpoint(path: str, params_template: Any, shardings=None):
     """Restore into the structure of ``params_template``."""
     data = np.load(path)

@@ -100,6 +100,26 @@ def select_cached(skip, y_new: Array, cache_y: Array,
     return jnp.where(skip, cache_y, y_new)
 
 
+def mix_cached(weight, y_new: Array, cache_y: Array,
+               fresh: Optional[Array] = None) -> Array:
+    """Differentiable relaxation of ``select_cached``: a convex mixture
+
+        y = (1 - w) * y_new + w * cache_y
+
+    with ``weight`` in [0, 1] — scalar, (B,), or broadcastable like
+    ``select_cached``'s skip.  This is the path a *learned router* trains
+    through (train/learned.py): the relaxed-Bernoulli gate rides a traced
+    FLOAT plan row, gradients flow into the router logits, and hardening
+    the weights (w -> {0, 1}) recovers the select exactly.  ``fresh``
+    zeroes the mixture weight so a just-reset cache is never blended in
+    (same contract as soft mode)."""
+    w = jnp.reshape(weight.astype(y_new.dtype),
+                    (-1,) + (1,) * (y_new.ndim - 1))
+    if fresh is not None:
+        w = w * _not_fresh(fresh, y_new.ndim).astype(w.dtype)
+    return (1 - w) * y_new + w * cache_y
+
+
 def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
                  gate: Optional[dict],
                  cache_y: Optional[Array],
@@ -141,7 +161,12 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
             y = fn(z)
             if cache_y is None:
                 return LazyOut(y, y, None)
-            y = select_cached(plan_skip, y, cache_y, fresh)
+            if jnp.issubdtype(plan_skip.dtype, jnp.floating):
+                # relaxed plan entry (learned-router training): mix
+                # instead of select so gradients reach the router logits
+                y = mix_cached(plan_skip, y, cache_y, fresh)
+            else:
+                y = select_cached(plan_skip, y, cache_y, fresh)
             return LazyOut(y, y, None)
         if plan_skip and cache_y is not None:
             return LazyOut(cache_y, cache_y, None)   # module absent from HLO
@@ -173,17 +198,30 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
 # ---------------------------------------------------------------------------
 
 
-def lazy_loss(scores: Dict[str, Array], rho_attn: float, rho_ffn: float) -> Array:
-    """scores: mapping module-name -> stacked scores (L, B) or (B,).
+def lazy_loss(scores: Dict[str, Array], rho_attn: float, rho_ffn: float,
+              rho_block: Optional[float] = None) -> Array:
+    """scores: mapping module-kind -> stacked scores (L, B) or (B,).
 
-    Names containing 'attn' use rho_attn, others rho_ffn.  Returns a scalar:
-        rho * mean_b sum_l (1 - s_{l,b}).
+    The rho mapping is EXPLICIT per module kind — 'attn' -> rho_attn,
+    'ffn' -> rho_ffn, 'block' (single-module SSM/xLSTM layers) ->
+    rho_block, defaulting to rho_ffn.  An unknown score key raises
+    instead of silently inheriting a penalty: the old substring match
+    ('attn' in name) handed every future module kind rho_ffn, which
+    miscalibrated the laziness pressure without any signal.
+
+    Returns a scalar:  sum_kinds rho_kind * mean_b sum_l (1 - s_{l,b}).
     """
+    rho_by_kind = {"attn": rho_attn, "ffn": rho_ffn,
+                   "block": rho_ffn if rho_block is None else rho_block}
     total = jnp.zeros((), jnp.float32)
     for name, s in scores.items():
-        rho = rho_attn if "attn" in name else rho_ffn
+        if name not in rho_by_kind:
+            raise ValueError(
+                f"unknown gated-module kind {name!r} in lazy-loss scores; "
+                f"known kinds: {tuple(rho_by_kind)} — add an explicit rho "
+                "mapping before gating a new module kind")
         s2 = s if s.ndim == 2 else s[None]
-        total = total + rho * jnp.mean(jnp.sum(1.0 - s2, axis=0))
+        total = total + rho_by_kind[name] * jnp.mean(jnp.sum(1.0 - s2, axis=0))
     return total
 
 

@@ -4,9 +4,24 @@ On this CPU container it runs reduced configs end-to-end; on a real pod the
 same driver shards over the production mesh (the dry-run proves every
 (arch × shape × mesh) lowers — repro.launch.dryrun).
 
+DiT training is phased like the paper (DESIGN.md §Train):
+
+  --phase pretrain   standard diffusion pretraining (full params)
+  --phase lazy       the paper's lazy recipe: frozen base, probe-only AdamW
+                     (train/learned.train_lazy_gates) — checkpointable
+                     mid-run (--ckpt + --ckpt-every) and resumable
+                     (--resume) with gate params AND optimizer state
+  --phase router     learned per-layer router (train/learned.train_router)
+
+``--distill out.json`` distills the trained schedule to a
+cache/schedule.ScheduleArtifact the ``learned`` cache policy — and with
+it the fused trajectory executor, serving engines and dry-run — consumes
+unchanged.
+
   PYTHONPATH=src python -m repro.launch.train --arch llama3_2_1b --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch dit_xl2_256 --steps 20
-  PYTHONPATH=src python -m repro.launch.train --arch dit_xl2_256 --lazy --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch dit_xl2_256 \
+      --phase lazy --steps 50 --distill artifacts/lazy_gate.json
 """
 import argparse
 import time
@@ -20,7 +35,57 @@ from repro.data.synthetic import LatentImageDataset, MarkovTokenDataset
 from repro.models import dit as dit_lib
 from repro.models import transformer as tf
 from repro.sampling import ddim
-from repro.train import optim, trainer
+from repro.train import learned, optim, trainer
+
+
+def run_lazy_phase(params, cfg, sched, args):
+    """The lazy recipe + the train-smoke health gate CI leans on."""
+    opt_state, start = None, 0
+    if args.resume:
+        params, opt_state, start = learned.restore_train_state(
+            args.resume, params)
+        print(f"resumed {args.resume} at step {start}")
+    params, opt, history = learned.train_lazy_gates(
+        params, cfg, sched, steps=args.steps, batch=args.batch, lr=args.lr,
+        n_sample_steps=args.sample_steps, seed=0, opt_state=opt_state,
+        start_step=start, ckpt_path=args.ckpt,
+        ckpt_every=args.ckpt_every or (args.steps if args.ckpt else 0),
+        log_every=10)
+    if not history:
+        print(f"recipe already complete at step {start} — nothing to do")
+        return params
+    # health gate (CI train-smoke): the recipe must end on a finite loss
+    # with live gate gradients — a silently-frozen probe (the masking bug
+    # this PR fixes) or a NaN'd trunk both fail here, loudly
+    last = history[-1]
+    assert all(map(lambda v: jnp.isfinite(jnp.asarray(v)), last.values())), \
+        f"non-finite training stats: {last}"
+    assert last["gnorm"] > 0.0, "gate gradient norm is zero — probes frozen"
+    if args.distill:
+        art = learned.distill_gate_schedule(
+            params, cfg, sched, key=jax.random.PRNGKey(1),
+            labels=jnp.arange(min(4, cfg.dit_n_classes)),
+            n_steps=args.sample_steps,
+            target_ratio=args.target_ratio)
+        art.save(args.distill)
+        print(f"schedule (ratio {art.lazy_ratio:.3f}) -> {args.distill}")
+    return params
+
+
+def run_router_phase(params, cfg, sched, args):
+    theta, history = learned.train_router(
+        params, cfg, sched, n_steps=args.sample_steps,
+        target_ratio=args.target_ratio or 0.5, steps=args.steps,
+        batch=min(args.batch, 2), lr=args.lr, log_every=10)
+    last = history[-1]
+    assert all(map(lambda v: jnp.isfinite(jnp.asarray(v)), last.values())), \
+        f"non-finite router stats: {last}"
+    if args.distill:
+        art = learned.distill_router_schedule(
+            theta, cfg, target_ratio=args.target_ratio or 0.5)
+        art.save(args.distill)
+        print(f"schedule (ratio {art.lazy_ratio:.3f}) -> {args.distill}")
+    return params
 
 
 def main():
@@ -30,12 +95,26 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--phase", default="",
+                    choices=["", "pretrain", "lazy", "router"],
+                    help="DiT training phase (default: pretrain)")
     ap.add_argument("--lazy", action="store_true",
-                    help="lazy-learning phase (DiT archs): frozen base + probes")
+                    help="alias for --phase lazy (legacy flag)")
+    ap.add_argument("--sample-steps", type=int, default=10,
+                    help="sampling horizon the lazy/router phases train for")
+    ap.add_argument("--target-ratio", type=float, default=None,
+                    help="skip ratio for --distill (None: threshold rule)")
+    ap.add_argument("--distill", default="",
+                    help="write the trained ScheduleArtifact JSON here")
     ap.add_argument("--full-scale", action="store_true",
                     help="use the full config (needs a real pod)")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the lazy phase every N steps")
+    ap.add_argument("--resume", default="",
+                    help="resume the lazy phase from this checkpoint")
     args = ap.parse_args()
+    phase = args.phase or ("lazy" if args.lazy else "pretrain")
 
     cfg = get_config(args.arch)
     if not args.full_scale:
@@ -47,21 +126,22 @@ def main():
     if cfg.family == "dit":
         params = dit_lib.init_dit(key, cfg)
         sched = ddim.linear_schedule(200)
-        data = LatentImageDataset(cfg, seed=0)
-        it = data.batches(args.batch, seed=1)
-        opt = optim.adamw_init(params)
-        step_fn = trainer.lazy_train_step if args.lazy \
-            else trainer.diffusion_train_step
-        for i in range(args.steps):
-            x0, y = next(it)
-            key, k = jax.random.split(key)
-            params, opt, aux = step_fn(params, opt, cfg, sched,
-                                       jnp.asarray(x0), jnp.asarray(y), k,
-                                       lr=args.lr)
-            if i % 10 == 0 or i == args.steps - 1:
-                extra = (f" s_attn={float(aux.get('s_attn', 0)):.3f}"
-                         if args.lazy else "")
-                print(f"step {i:4d} loss {float(aux['loss']):.4f}{extra}")
+        if phase == "lazy":
+            params = run_lazy_phase(params, cfg, sched, args)
+        elif phase == "router":
+            params = run_router_phase(params, cfg, sched, args)
+        else:
+            data = LatentImageDataset(cfg, seed=0)
+            it = data.batches(args.batch, seed=1)
+            opt = optim.adamw_init(params)
+            for i in range(args.steps):
+                x0, y = next(it)
+                key, k = jax.random.split(key)
+                params, opt, aux = trainer.diffusion_train_step(
+                    params, opt, cfg, sched, jnp.asarray(x0),
+                    jnp.asarray(y), k, lr=args.lr)
+                if i % 10 == 0 or i == args.steps - 1:
+                    print(f"step {i:4d} loss {float(aux['loss']):.4f}")
     else:
         params = tf.init_lm(key, cfg)
         data = MarkovTokenDataset(cfg.vocab_size, seed=0)
@@ -77,7 +157,7 @@ def main():
 
     print(f"trained {args.steps} steps in {time.time() - t0:.1f}s "
           f"({tf.count_params(params) / 1e6:.1f}M params)")
-    if args.ckpt:
+    if args.ckpt and (cfg.family != "dit" or phase == "pretrain"):
         save_checkpoint(args.ckpt, params)
         print(f"checkpoint -> {args.ckpt}")
 

@@ -84,6 +84,30 @@ def cfg_eps(eps_cond: Array, eps_uncond: Array, w: float) -> Array:
     return w * eps_cond - (w - 1.0) * eps_uncond
 
 
+@jax.custom_vjp
+def _fusion_barrier(xs):
+    """``optimization_barrier`` with a pass-through gradient.
+
+    The primal is the barrier verbatim (identical HLO, so the
+    bit-exactness contract between the executors is untouched), but the
+    stock primitive has no differentiation rule — and the learned-router
+    trainer (train/learned.py) backpropagates through whole unrolled
+    ``trajectory_step`` chains.  The barrier only constrains *scheduling*;
+    its Jacobian is the identity, so cotangents pass straight through."""
+    return jax.lax.optimization_barrier(xs)
+
+
+def _fusion_barrier_fwd(xs):
+    return jax.lax.optimization_barrier(xs), None
+
+
+def _fusion_barrier_bwd(_, g):
+    return (g,)
+
+
+_fusion_barrier.defvjp(_fusion_barrier_fwd, _fusion_barrier_bwd)
+
+
 def per_example_keys(key, batch: int) -> Array:
     """(B, 2) uint32 key array — one fold_in-derived key per example.
 
@@ -151,7 +175,7 @@ def trajectory_step(params: dict, cfg: ModelConfig, sched: DiffusionSchedule,
     # fusion boundary shared by both executors: without it XLA fuses the
     # DDIM update with whatever surrounds it (a scan carry vs a jit
     # epilogue), changing FMA contraction and flipping ~1 ulp per step
-    z, eps = jax.lax.optimization_barrier((z, eps))
+    z, eps = _fusion_barrier((z, eps))
     B = z.shape[0]
     noise, new_keys = None, noise_keys
     if eta > 0.0:

@@ -1,0 +1,298 @@
+"""Learned skip schedules — the harness that closes the lazy-learning loop.
+
+Three trained variants share this one harness (ROADMAP item 2), each
+distilling to a ``cache/schedule.ScheduleArtifact`` the fused trajectory
+executor and the serving engines consume unchanged (via the ``learned``
+cache policy):
+
+  * ``train_lazy_gates`` — the PAPER's contribution (LazyDiT §3.3, Eq. 5):
+    base weights frozen, only the linear probes train, loss =
+    diffusion MSE + rho * sum(1 - s).  Wraps trainer.lazy_train_step in a
+    resumable recipe: per-step keys are fold_in-derived (resume-exact) and
+    the gate params + AdamW state checkpoint via checkpoint/io mid-run.
+  * ``train_router`` — Learning-to-Cache-style (arXiv:2406.01733)
+    differentiable per-layer router: relaxed-Bernoulli gates
+    w = sigmoid((theta + logistic)/tau) ride the traced FLOAT plan rows
+    (core.lazy.mix_cached) through the whole unrolled DDIM trajectory,
+    trained against the no-skip teacher's final latent with a
+    target-ratio penalty, temperature annealed toward the hard plan.
+  * the Δ-DiT feature-residual variant needs no gradients — it is the
+    ``delta`` cache policy over a calibration profile (cache/policies.py)
+    — but ships through the same benchmark column family (``learned_*``
+    in bench_cache_policies) so the three are compared head-to-head.
+
+DESIGN.md §Train documents the artifact flow; launch/train.py is the CLI.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import policies as cache_policies
+from repro.cache import policy as cache_policy
+from repro.cache.schedule import ScheduleArtifact, distill_scores
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import LatentImageDataset
+from repro.sampling import ddim
+from repro.train import optim, trainer
+
+Array = jax.Array
+
+N_MODULES = 2                    # plan columns: 0 = attention, 1 = ffn
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing — gate params + AdamW state, resumable mid-recipe
+# ---------------------------------------------------------------------------
+
+
+def save_train_state(path: str, params, opt_state: optim.AdamWState,
+                     step: int) -> str:
+    """Checkpoint the lazy-training state: params (the gates are the only
+    leaves that move; the frozen trunk rides along so restore is bit-exact
+    with zero merge logic — a production impl would shard/subset), both
+    AdamW moment trees, and the step counters."""
+    ckpt_io.save_checkpoint(
+        path, {"params": params, "mu": opt_state.mu, "nu": opt_state.nu},
+        extra={"step": int(step), "opt_step": int(opt_state.step)})
+    return path
+
+
+def restore_train_state(path: str, params_template
+                        ) -> Tuple[dict, optim.AdamWState, int]:
+    """Restore (params, opt_state, next_step) from ``save_train_state``."""
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                         params_template)
+    tree = ckpt_io.restore_checkpoint(
+        path, {"params": params_template, "mu": zeros, "nu": zeros})
+    extras = ckpt_io.load_extras(path)
+    opt = optim.AdamWState(jnp.asarray(int(extras["opt_step"]), jnp.int32),
+                           tree["mu"], tree["nu"])
+    return tree["params"], opt, int(extras["step"])
+
+
+# ---------------------------------------------------------------------------
+# Variant (a): the paper's lazy-gate probe training
+# ---------------------------------------------------------------------------
+
+
+def train_lazy_gates(params, cfg: ModelConfig, sched: ddim.DiffusionSchedule,
+                     *, steps: int, batch: int = 8, lr: float = 1e-2,
+                     n_sample_steps: int = 10, seed: int = 0,
+                     data: Optional[LatentImageDataset] = None,
+                     opt_state: Optional[optim.AdamWState] = None,
+                     start_step: int = 0,
+                     ckpt_path: str = "", ckpt_every: int = 0,
+                     log_every: int = 0
+                     ) -> Tuple[dict, optim.AdamWState, List[Dict[str, float]]]:
+    """The paper's 500-step lazy recipe, shrunk to ``steps``.
+
+    Frozen base + probe-only AdamW updates (trainer.lazy_train_step: gate
+    grads masked BEFORE global-norm clipping).  Deterministic given
+    (seed, batch): batch ``i`` and RNG key ``i`` are derived by index, so
+    a run restored from a mid-recipe checkpoint (``start_step`` > 0)
+    continues bit-exactly where the interrupted one left off
+    (tests/test_trainer.py).  Returns (params, opt_state, history) with
+    one float-dict per executed step."""
+    data = data or LatentImageDataset(cfg, seed=seed)
+    it = data.batches(batch, seed=seed + 1)
+    base_key = jax.random.PRNGKey(seed)
+    opt = opt_state if opt_state is not None else optim.adamw_init(params)
+    history: List[Dict[str, float]] = []
+    for i in range(steps):
+        x0, y = next(it)
+        if i < start_step:
+            continue                       # replay the data stream only
+        k = jax.random.fold_in(base_key, i)
+        params, opt, aux = trainer.lazy_train_step(
+            params, opt, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            n_sample_steps=n_sample_steps, lr=lr)
+        history.append({k2: float(v) for k2, v in aux.items()})
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            h = history[-1]
+            print(f"lazy step {i:4d} loss {h['loss']:.4f} "
+                  f"lazy {h['lazy_loss']:.5f} gnorm {h['gnorm']:.4f} "
+                  f"s_attn {h.get('s_attn', 0.0):.3f}")
+        if ckpt_path and ckpt_every and ((i + 1) % ckpt_every == 0
+                                         or i == steps - 1):
+            save_train_state(ckpt_path, params, opt, i + 1)
+    return params, opt, history
+
+
+def collect_gate_scores(params, cfg: ModelConfig,
+                        sched: ddim.DiffusionSchedule, *, key, labels,
+                        n_steps: int, cfg_scale: float = 1.5) -> np.ndarray:
+    """Batch-averaged trained-probe scores over a masked-mode sampling
+    run: the (T, L, 2) evidence a gate schedule distills from."""
+    _, aux = ddim.ddim_sample(params, cfg, sched, key=key, labels=labels,
+                              n_steps=n_steps, cfg_scale=cfg_scale,
+                              lazy_mode="masked", collect_scores=True)
+    sc = np.stack([np.stack([s["attn"], s["ffn"]], -1)
+                   for s in aux["scores"]])          # (T, L, B', 2)
+    return sc.mean(2)
+
+
+def distill_gate_schedule(params, cfg: ModelConfig,
+                          sched: ddim.DiffusionSchedule, *, key, labels,
+                          n_steps: int, cfg_scale: float = 1.5,
+                          threshold: float = 0.5,
+                          target_ratio: Optional[float] = None
+                          ) -> ScheduleArtifact:
+    """Trained gates -> deployable schedule artifact.
+
+    ``target_ratio=None`` thresholds the scores (the paper's inference
+    rule, core.lazy.plan_from_scores); a target ratio instead picks the
+    top-scoring calls (deployment's '50% lazy' knob) with endpoint
+    freshness + refresh rotation."""
+    scores = collect_gate_scores(params, cfg, sched, key=key, labels=labels,
+                                 n_steps=n_steps, cfg_scale=cfg_scale)
+    return distill_scores(
+        "lazy_gate", cfg.name, scores, threshold=threshold,
+        target_ratio=target_ratio,
+        meta={"cfg_scale": cfg_scale, "batch": int(labels.shape[0]),
+              "lazy_threshold": cfg.lazy.threshold})
+
+
+# ---------------------------------------------------------------------------
+# Variant (b): differentiable per-layer router (Learning-to-Cache-style)
+# ---------------------------------------------------------------------------
+
+
+def init_router_logits(n_steps: int, n_layers: int,
+                       n_modules: int = N_MODULES,
+                       init: float = -1.0) -> Array:
+    """(T, L, M) router logits; ``init`` < 0 starts diligent, like the
+    probes — caching must be learned, not assumed."""
+    return jnp.full((n_steps, n_layers, n_modules), init, jnp.float32)
+
+
+def _router_allow(n_steps: int, n_layers: int,
+                  n_modules: int = N_MODULES) -> np.ndarray:
+    """Trajectory endpoints are pinned fresh (the repo-wide invariant):
+    the router may not even *relax* toward skipping them."""
+    allow = np.ones((n_steps, n_layers, n_modules), np.float32)
+    allow[0] = 0.0
+    allow[-1] = 0.0
+    return allow
+
+
+def _build_router_step(cfg: ModelConfig, cfg_scale: float):
+    """The jitted router update.  The student trajectory is the SAME
+    ddim.trajectory_step both executors trace, unrolled over the (small)
+    sampling horizon with a traced FLOAT plan row per step — plan-mode
+    lazy execution then mixes instead of selecting (core.lazy.mix_cached),
+    so gradients flow from the final latent into every gate weight."""
+    from repro.models import dit as dit_lib
+
+    pol = cache_policies.PlanPolicy(
+        plan=np.zeros((1, cfg.n_layers, N_MODULES), bool))
+
+    @functools.partial(jax.jit, static_argnames=("n_steps",))
+    def step(theta, opt_state, params, sched, ts, ts_prev, z0, teacher,
+             labels, noise, tau, allow, target_ratio, lam, lr,
+             n_steps: int):
+        B = labels.shape[0]
+        BB = 2 * B if cfg_scale != 1.0 else B
+
+        def loss_fn(theta):
+            w = jax.nn.sigmoid((theta + noise) / tau) * allow   # (T, L, M)
+            z = z0
+            cache = dit_lib.init_dit_lazy_cache(cfg, BB)
+            for i in range(n_steps):
+                z, cache, _, _ = ddim.trajectory_step(
+                    params, cfg, sched, pol, cfg_scale, z, labels,
+                    ts[i], ts_prev[i], jnp.int32(i), cache, w[i])
+            distill = jnp.mean((z - teacher) ** 2)
+            ratio = jnp.mean(w)
+            return distill + lam * (ratio - target_ratio) ** 2, \
+                (distill, ratio)
+
+        (loss, (distill, ratio)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(theta)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        theta, opt_state = optim.adamw_update(opt_state, grads, theta, lr=lr)
+        return theta, opt_state, {"loss": loss, "distill": distill,
+                                  "relaxed_ratio": ratio, "gnorm": gnorm}
+    return step
+
+
+def train_router(params, cfg: ModelConfig, sched: ddim.DiffusionSchedule, *,
+                 n_steps: int, target_ratio: float = 0.5,
+                 steps: int = 100, batch: int = 2, lr: float = 5e-2,
+                 cfg_scale: float = 1.5, lam: float = 10.0,
+                 tau0: float = 2.0, tau1: float = 0.25, seed: int = 0,
+                 log_every: int = 0
+                 ) -> Tuple[Array, List[Dict[str, float]]]:
+    """Learn the static router's (T, L, M) schedule by gradient descent.
+
+    Per update: fresh latents + labels, the no-skip TEACHER final latent
+    from the fused none-policy sampler (one compile, reused every step),
+    then relaxed-Bernoulli gates through the unrolled student trajectory
+    with loss = ||z_student - z_teacher||^2 + lam * (ratio - target)^2.
+    Temperature anneals geometrically tau0 -> tau1, hardening the gates;
+    ``distill_router_schedule`` snaps them to the per-layer-quota plan
+    (the static_router shape, now learned instead of calibrated)."""
+    ts, ts_prev = _timestep_arrays(sched, n_steps)
+    none_pol = cache_policy.get_policy("none")
+    from repro.sampling import trajectory as traj_lib
+    teacher_fn = traj_lib.build_sampler(cfg, none_pol, n_steps,
+                                        float(cfg_scale), 0.0)
+    state0 = none_pol.init_traced_state(n_steps=n_steps,
+                                        n_layers=cfg.n_layers,
+                                        n_modules=N_MODULES)
+    step_fn = _build_router_step(cfg, float(cfg_scale))
+    allow = jnp.asarray(_router_allow(n_steps, cfg.n_layers))
+
+    theta = init_router_logits(n_steps, cfg.n_layers)
+    opt = optim.adamw_init(theta)
+    base_key = jax.random.PRNGKey(seed)
+    history: List[Dict[str, float]] = []
+    for i in range(steps):
+        kz, kl, kn, kt = jax.random.split(jax.random.fold_in(base_key, i), 4)
+        z0 = jax.random.normal(kz, (batch, cfg.dit_input_size,
+                                    cfg.dit_input_size, cfg.dit_in_channels),
+                               jnp.float32)
+        labels = jax.random.randint(kl, (batch,), 0, cfg.dit_n_classes)
+        teacher, _ = teacher_fn(params, sched, ts, ts_prev, z0, kt, labels,
+                                None, state0)
+        teacher = jax.lax.stop_gradient(teacher)
+        u = jax.random.uniform(kn, theta.shape, minval=1e-6, maxval=1 - 1e-6)
+        noise = jnp.log(u) - jnp.log1p(-u)           # logistic (concrete)
+        tau = float(tau0 * (tau1 / tau0) ** (i / max(steps - 1, 1)))
+        theta, opt, aux = step_fn(theta, opt, params, sched, ts, ts_prev,
+                                  z0, teacher, labels, noise,
+                                  jnp.float32(tau), allow,
+                                  jnp.float32(target_ratio),
+                                  jnp.float32(lam), jnp.float32(lr),
+                                  n_steps=n_steps)
+        history.append({k: float(v) for k, v in aux.items()})
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            h = history[-1]
+            print(f"router step {i:4d} loss {h['loss']:.5f} "
+                  f"distill {h['distill']:.5f} tau {tau:.3f} "
+                  f"ratio {h['relaxed_ratio']:.3f}")
+    return theta, history
+
+
+def distill_router_schedule(theta: Array, cfg: ModelConfig, *,
+                            target_ratio: float,
+                            meta: Optional[dict] = None) -> ScheduleArtifact:
+    """Annealed router logits -> hard plan: sigmoid(theta) as affinities
+    through the per-layer-quota distill (every layer spends the same skip
+    budget per step — the Learning-to-Cache router shape)."""
+    scores = np.asarray(jax.nn.sigmoid(theta), np.float64)
+    scores *= _router_allow(*scores.shape)
+    return distill_scores("router", cfg.name, scores,
+                          target_ratio=target_ratio, per_layer=True,
+                          meta=dict(meta or {}))
+
+
+def _timestep_arrays(sched: ddim.DiffusionSchedule,
+                     n_steps: int) -> Tuple[Array, Array]:
+    from repro.sampling import trajectory as traj_lib
+    return traj_lib.timestep_arrays(sched.n_train_steps, n_steps)

@@ -44,6 +44,20 @@ def gate_mask(params) -> dict:
     return walk(params, False)
 
 
+def mask_grads(grads, mask):
+    """Zero every gradient leaf outside ``mask`` (the frozen base weights).
+
+    This must happen BEFORE global-norm clipping: the frozen base-weight
+    gradients dominate the global norm (they outnumber the probe params by
+    orders of magnitude), so clipping the raw tree silently shrank every
+    probe update by the base-weight norm — laziness then trains at a tiny
+    effective LR no matter what ``lr`` says.  Zeroing also makes the
+    frozen-weight VJP branches dead code inside the jitted step, so XLA
+    prunes the wasted backward through the frozen trunk."""
+    return jax.tree.map(
+        lambda g, m: g if m else jnp.zeros_like(g), grads, mask)
+
+
 # ---------------------------------------------------------------------------
 # DiT diffusion pretraining
 # ---------------------------------------------------------------------------
@@ -121,9 +135,13 @@ def lazy_train_step(params, opt_state, cfg: ModelConfig,
     frozen = jax.lax.stop_gradient(params)
     (loss, aux), grads = jax.value_and_grad(lazy_learning_loss, has_aux=True)(
         params, frozen, cfg, sched, x0, y, key, n_sample_steps)
+    mask = gate_mask(params)
+    # gate-subtree grads ONLY reach the clip: the global norm (and the
+    # reported gnorm) describes the probe updates, not the frozen trunk
+    grads = mask_grads(grads, mask)
     grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
     params, opt_state = optim.adamw_update(opt_state, grads, params, lr=lr,
-                                           mask=gate_mask(params))
+                                           mask=mask)
     aux.update({"loss": loss, "gnorm": gnorm})
     return params, opt_state, aux
 

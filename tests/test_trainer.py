@@ -1,0 +1,300 @@
+"""Lazy-learning trainer + learned-schedule harness (train/trainer,
+train/learned): gradient masking BEFORE global-norm clipping, the
+frozen-leaf AdamW contract, recipe direction (lazy loss down, diffusion
+loss bounded, base weights bit-exact), mid-recipe checkpoint resume, and
+trained-schedule distillation round-tripping through the fused executor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import get_policy
+from repro.cache.schedule import ScheduleArtifact
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.models import dit as dit_lib
+from repro.sampling import ddim, trajectory
+from repro.train import learned, optim, trainer
+
+
+def dit_tiny(**kw):
+    base = dict(name="dit_tiny", family="dit", n_layers=3, d_model=64,
+                n_heads=4, n_kv_heads=4, d_ff=128, dit_patch=2,
+                dit_input_size=8, dit_in_channels=4, dit_n_classes=10,
+                rope_type="none", dtype="float32",
+                lazy=LazyConfig(enabled=True, mode="soft",
+                                rho_attn=1e-2, rho_ffn=1e-2))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dit_tiny()
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    sched = ddim.linear_schedule(100)
+    return cfg, params, sched
+
+
+def split_leaves(params):
+    """(gate_leaves, base_leaves) as {path: np.ndarray}."""
+    mask = trainer.gate_mask(params)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_m = jax.tree_util.tree_leaves(mask)
+    gates, base = {}, {}
+    for (path, leaf), m in zip(flat_p, flat_m):
+        (gates if m else base)[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return gates, base
+
+
+# ---------------------------------------------------------------------------
+# satellite: grads masked to the gate subtree BEFORE global-norm clipping
+# ---------------------------------------------------------------------------
+
+
+def test_mask_grads_zeroes_only_frozen_leaves(setup):
+    _, params, _ = setup
+    mask = trainer.gate_mask(params)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+    masked = trainer.mask_grads(grads, mask)
+    for g, m in zip(jax.tree_util.tree_leaves(masked),
+                    jax.tree_util.tree_leaves(mask)):
+        if m:
+            np.testing.assert_array_equal(np.asarray(g), 1.0)
+        else:
+            np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_clip_after_masking_sees_only_gate_norm():
+    """The bug this PR fixes: clipping the raw tree let the frozen trunk's
+    gradient norm scale the probe updates down.  After masking, the
+    global norm IS the gate norm — a huge frozen-leaf gradient must not
+    shrink a small gate gradient at all."""
+    grads = {"blk": {"w": jnp.full((64, 64), 1e3),       # frozen, huge
+                     "g_attn": {"w": jnp.full((4,), 0.3)}}}
+    mask = trainer.gate_mask(grads)
+    masked = trainer.mask_grads(grads, mask)
+    clipped, gnorm = optim.clip_by_global_norm(masked, 1.0)
+    np.testing.assert_allclose(float(gnorm), 0.3 * 2.0, rtol=1e-6)
+    # gate norm 0.6 < 1.0 -> the gate gradient passes through UNSCALED
+    np.testing.assert_allclose(np.asarray(clipped["blk"]["g_attn"]["w"]),
+                               0.3, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(clipped["blk"]["w"]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: frozen leaves are bit-identical through adamw_update
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_frozen_leaves_bit_identical_with_zero_moments(setup):
+    """Regression: a masked AdamW step must leave frozen leaves
+    BIT-identical with their moments exactly zero — weight decay, bias
+    correction, and the moment EMAs must all be dead on masked leaves,
+    even when (hypothetically) nonzero gradients reach them."""
+    _, params, _ = setup
+    mask = trainer.gate_mask(params)
+    opt = optim.adamw_init(params)
+    grads = jax.tree.map(lambda p: jnp.full_like(p, 0.37), params)
+    p = params
+    for _ in range(3):
+        p, opt = optim.adamw_update(opt, grads, p, lr=1e-2,
+                                    weight_decay=0.01, mask=mask)
+    _, base0 = split_leaves(params)
+    gates1, base1 = split_leaves(p)
+    assert gates1  # the mask found the probes at all
+    for k in base0:
+        np.testing.assert_array_equal(
+            base0[k], base1[k], err_msg=f"frozen leaf {k} moved")
+    flat_mu = jax.tree_util.tree_flatten_with_path(opt.mu)[0]
+    flat_nu = jax.tree_util.tree_leaves(opt.nu)
+    flat_m = jax.tree_util.tree_leaves(mask)
+    for (path, mu), nu, m in zip(flat_mu, flat_nu, flat_m):
+        if not m:
+            np.testing.assert_array_equal(
+                np.asarray(mu), 0.0,
+                err_msg=f"frozen mu {jax.tree_util.keystr(path)} nonzero")
+            np.testing.assert_array_equal(np.asarray(nu), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: explicit rho mapping in the lazy loss
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_loss_unknown_kind_raises():
+    s = jnp.full((2, 3), 0.5)
+    with pytest.raises(ValueError, match="unknown gated-module kind"):
+        lazy_lib.lazy_loss({"attn": s, "cross_attn": s}, 1e-2, 1e-2)
+
+
+def test_lazy_loss_explicit_rho_per_kind():
+    s = jnp.full((2, 3), 0.75)            # sum_l (1 - s) = 0.5 per kind
+    got = float(lazy_lib.lazy_loss({"attn": s, "ffn": s, "block": s},
+                                   0.1, 0.2, rho_block=0.4))
+    np.testing.assert_allclose(got, 0.5 * (0.1 + 0.2 + 0.4), rtol=1e-6)
+    # block defaults to rho_ffn when no rho_block is given
+    got2 = float(lazy_lib.lazy_loss({"block": s}, 0.1, 0.2))
+    np.testing.assert_allclose(got2, 0.5 * 0.2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the lazy recipe: direction + frozen trunk
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_recipe_trains_gates_only(setup):
+    cfg, params, sched = setup
+    p1, opt1, hist = learned.train_lazy_gates(
+        params, cfg, sched, steps=20, batch=8, lr=5e-2, n_sample_steps=6,
+        seed=0)
+    first, last = hist[0], hist[-1]
+    # laziness is learned: the lazy loss drops, scores rise...
+    assert last["lazy_loss"] < first["lazy_loss"]
+    assert last["s_attn"] > first["s_attn"]
+    # ...with the diffusion term bounded (the probes may not wreck eps)
+    assert np.isfinite(last["loss"])
+    assert last["diffusion_loss"] < 4.0 * max(first["diffusion_loss"], 1e-3)
+    # and the frozen trunk is BIT-exact
+    _, base0 = split_leaves(params)
+    gates1, base1 = split_leaves(p1)
+    for k in base0:
+        np.testing.assert_array_equal(
+            base0[k], base1[k], err_msg=f"base weight {k} moved")
+    # while the probes actually moved
+    gates0, _ = split_leaves(params)
+    assert any(not np.array_equal(gates0[k], gates1[k]) for k in gates0)
+
+
+def test_lazy_recipe_checkpoint_resume_bit_exact(setup, tmp_path):
+    cfg, params, sched = setup
+    ck = str(tmp_path / "lazy.npz")
+    # straight 8-step run
+    pa, oa, _ = learned.train_lazy_gates(
+        params, cfg, sched, steps=8, batch=4, lr=1e-2, n_sample_steps=6,
+        seed=3)
+    # interrupted at step 4, checkpointed, restored, continued to 8
+    learned.train_lazy_gates(
+        params, cfg, sched, steps=4, batch=4, lr=1e-2, n_sample_steps=6,
+        seed=3, ckpt_path=ck, ckpt_every=4)
+    p_r, opt_r, nxt = learned.restore_train_state(ck, params)
+    assert nxt == 4
+    pb, ob, _ = learned.train_lazy_gates(
+        p_r, cfg, sched, steps=8, batch=4, lr=1e-2, n_sample_steps=6,
+        seed=3, opt_state=opt_r, start_step=nxt)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pa, pb)
+    # optimizer state (moments + step counter) resumes bit-exactly too
+    assert int(oa.step) == int(ob.step)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), oa.mu, ob.mu)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), oa.nu, ob.nu)
+
+
+# ---------------------------------------------------------------------------
+# distillation: trained gates -> artifact -> fused executor, with parity
+# ---------------------------------------------------------------------------
+
+
+def test_distilled_schedule_roundtrips_through_fused_sampler(setup, tmp_path):
+    cfg, params, sched = setup
+    p1, _, _ = learned.train_lazy_gates(
+        params, cfg, sched, steps=10, batch=8, lr=5e-2, n_sample_steps=5,
+        seed=1)
+    labels = jnp.array([0, 1])
+    art = learned.distill_gate_schedule(
+        p1, cfg, sched, key=jax.random.PRNGKey(2), labels=labels,
+        n_steps=5, target_ratio=0.4)
+    assert not art.skip[0].any() and not art.skip[-1].any()
+    assert art.lazy_ratio > 0.0
+    # JSON round trip preserves the artifact exactly
+    path = str(tmp_path / "sched.json")
+    art.save(path)
+    art2 = ScheduleArtifact.load(path)
+    np.testing.assert_array_equal(art.skip, art2.skip)
+    np.testing.assert_allclose(art.scores, art2.scores)
+    # the learned policy serves the plan through BOTH executors, bit-exact
+    pol = get_policy("learned", path=path)
+    kw = dict(key=jax.random.PRNGKey(4), labels=labels, n_steps=5,
+              cfg_scale=1.5)
+    ref, _ = ddim.ddim_sample_reference(params, cfg, sched, policy=pol, **kw)
+    fused, aux = trajectory.sample_trajectory(params, cfg, sched,
+                                              policy=pol, **kw)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(fused))
+    np.testing.assert_allclose(aux["realized_skip_ratio"], art.lazy_ratio,
+                               atol=1e-6)
+
+
+def test_learned_policy_resamples_to_other_horizons():
+    rng = np.random.default_rng(0)
+    art = ScheduleArtifact(
+        kind="lazy_gate", arch="dit_tiny", n_steps=6, n_layers=3,
+        modules=("attn", "ffn"),
+        scores=rng.uniform(0, 1, (6, 3, 2)),
+        skip=lazy_lib.plan_from_scores(
+            rng.uniform(0, 1, (6, 3, 2)), 0.5).skip,
+        target_ratio=0.4)
+    pol = get_policy("learned", artifact=art)
+    for T in (4, 9):
+        plan = pol.compile_plan(T, 3, 2)
+        assert plan.skip.shape == (T, 3, 2)
+        assert not plan.skip[0].any()
+
+
+# ---------------------------------------------------------------------------
+# learned router: differentiable gates through the relaxed trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_mix_cached_hardening_recovers_select():
+    rng = np.random.default_rng(1)
+    y_new = jnp.asarray(rng.normal(size=(2, 5, 8)).astype(np.float32))
+    cache = jnp.asarray(rng.normal(size=(2, 5, 8)).astype(np.float32))
+    for w in (0.0, 1.0):
+        mixed = lazy_lib.mix_cached(jnp.float32(w), y_new, cache)
+        selected = lazy_lib.select_cached(jnp.bool_(w > 0.5), y_new, cache)
+        np.testing.assert_array_equal(np.asarray(mixed),
+                                      np.asarray(selected))
+    # and the relaxation is differentiable in the gate weight
+    g = jax.grad(lambda w: jnp.sum(lazy_lib.mix_cached(w, y_new, cache)))(
+        jnp.float32(0.5))
+    assert np.isfinite(float(g)) and float(g) != 0.0
+
+
+def test_router_trains_and_distills(setup):
+    cfg, params, sched = setup
+    theta, hist = learned.train_router(
+        params, cfg, sched, n_steps=4, target_ratio=0.4, steps=2, batch=2,
+        lr=5e-2, cfg_scale=1.5)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert all(np.isfinite(h["gnorm"]) and h["gnorm"] > 0.0 for h in hist)
+    assert not np.array_equal(
+        np.asarray(theta), np.asarray(learned.init_router_logits(4, 3)))
+    art = learned.distill_router_schedule(theta, cfg, target_ratio=0.4)
+    assert art.kind == "router"
+    assert not art.skip[0].any() and not art.skip[-1].any()
+    assert art.lazy_ratio > 0.0
+    # router-quota shape: layers share the per-step budget to within the
+    # one-module slack the globally-rotating refresh holes introduce
+    per_layer = art.skip.sum(axis=2)                   # (T, L)
+    assert (per_layer.max(axis=1) - per_layer.min(axis=1) <= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint extras
+# ---------------------------------------------------------------------------
+
+
+def test_save_restore_train_state_roundtrip(setup, tmp_path):
+    _, params, _ = setup
+    opt = optim.adamw_init(params)
+    path = str(tmp_path / "state.npz")
+    learned.save_train_state(path, params, opt, step=7)
+    p2, opt2, nxt = learned.restore_train_state(path, params)
+    assert nxt == 7 and int(opt2.step) == 0
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, p2)
+    assert os.path.exists(path)

@@ -53,7 +53,7 @@ def synth_dit_artifact(n_steps=T, n_layers=L, seed=0):
 
 
 def make_policy(name):
-    """All six registered policies, parameterized so each actually skips
+    """All eight registered policies, parameterized so each actually skips
     (lazy_gate threshold below the untrained probes' ~0.12 scores)."""
     if name == "none":
         return cache_lib.get_policy("none")
@@ -72,11 +72,20 @@ def make_policy(name):
     if name == "plan":
         return cache_lib.get_policy(
             "plan", plan=lazy_lib.uniform_plan(T, L, M, 0.5, seed=0).skip)
+    if name == "delta":
+        return cache_lib.get_policy("delta", ratio=0.5,
+                                    calibration=synth_dit_artifact(seed=2))
+    if name == "learned":
+        rng = np.random.default_rng(3)
+        art = cache_lib.distill_scores(
+            "lazy_gate", "dit_traj", rng.uniform(0, 1, (T, L, M)),
+            target_ratio=0.4)
+        return cache_lib.get_policy("learned", artifact=art)
     raise ValueError(name)
 
 
 ALL_POLICIES = ("none", "stride", "lazy_gate", "smoothcache",
-                "static_router", "plan")
+                "static_router", "plan", "delta", "learned")
 
 
 # ---------------------------------------------------------------------------
