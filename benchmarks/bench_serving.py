@@ -11,6 +11,12 @@ virtual-time model that charges only executed gated-module calls, i.e. the
 request-level projection of the compiled-HLO savings bench_compute
 measures.  Host wall-clock on this CPU container says nothing about served
 throughput and is not reported.
+
+A second table (``per_policy``) reruns the same trace per cache policy
+with obs telemetry on: goodput-under-SLO and the serving-side
+cached-vs-fresh drift means (repro.obs.slot_cache_drift) join the gated
+baselines — drift is the quality-proxy column, so a policy change that
+silently serves staler caches trips the regression gate.
 """
 from __future__ import annotations
 
@@ -20,14 +26,32 @@ import os
 import jax
 
 from benchmarks.common import ARTIFACTS
+from repro import cache as cache_lib
 from repro.configs.base import LazyConfig, ModelConfig
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import request_trace
 from repro.models import transformer as tf
 from repro.serving.engine import ContinuousBatchingEngine
 
+SCHEMA = "repro.bench.serving/v1"
+
 RATIOS = (0.0, 0.3, 0.5)
 PLAN_STEPS = 16
+
+# telemetry-on per-policy cells: the none baseline (drift NaN — no lazy
+# cache to drift), the training-free stride floor, and the L2C-shaped
+# seeded router
+POLICY_CELLS = ("none", "stride", "static_router")
+
+
+def _cell_policy(name: str, seed: int):
+    if name == "none":
+        return cache_lib.get_policy("none")
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=2)
+    if name == "static_router":
+        return cache_lib.get_policy("static_router", ratio=0.5, seed=seed)
+    raise ValueError(name)
 
 
 def _cfg(n_layers: int, d_model: int) -> ModelConfig:
@@ -77,7 +101,27 @@ def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
     hi = results["continuous"]["ratio_0.5"]["requests_per_s"]
     assert hi > lo, f"lazy 0.5 ({hi:.3f}) not faster than 0.0 ({lo:.3f})"
 
+    # telemetry-on per-policy cells: drift + goodput columns (repro.obs)
+    per_policy = {}
+    for name in POLICY_CELLS:
+        eng = ContinuousBatchingEngine(
+            cfg, params, n_slots=n_slots, max_len=max_len,
+            policy=_cell_policy(name, seed), telemetry=True)
+        s = eng.run(trace).metrics.summary()
+        per_policy[name] = {
+            "requests_per_s": s["requests_per_s"],
+            "goodput_per_s": s["goodput_per_s"],
+            "realized_lazy_ratio": s["realized_lazy_ratio"],
+            "drift_rel_l2_mean": s["drift_rel_l2_mean"],
+            "drift_cos_mean": s["drift_cos_mean"],
+        }
+        rows.append(("serving", "policy", name,
+                     f"goodput={s['goodput_per_s']:.3f}/s",
+                     f"drift_rel_l2={s['drift_rel_l2_mean']:.4f}",
+                     f"realized_lazy={s['realized_lazy_ratio']:.2f}"))
+
     payload = {
+        "schema": SCHEMA,
         "model": {"n_layers": n_layers, "d_model": d_model},
         "n_slots": n_slots,
         "n_requests": n_requests,
@@ -85,6 +129,7 @@ def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
         "clock": "virtual service clock (serving/metrics.py): "
                  "executed gated-module calls + fixed step overhead",
         "results": results,
+        "per_policy": per_policy,
     }
     os.makedirs(ARTIFACTS, exist_ok=True)
     path = os.path.normpath(os.path.join(ARTIFACTS, "BENCH_serving.json"))

@@ -19,28 +19,42 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import shutil
 import sys
 from pathlib import Path
 
-# A gated metric may drop by at most this fraction of its baseline value
-# before the gate fails.  Higher-is-better metrics only.
+# A gated metric may move against its better-direction by at most this
+# fraction of its baseline value before the gate fails (a drop for
+# higher-is-better metrics, a rise for lower-is-better ones).
 RELATIVE_DROP_TOLERANCE = 0.05
 
 # Baselines at or below this are treated as "legitimately zero" (e.g. the
 # `none` policy's skip ratio) and gate nothing.
 ZERO_FLOOR = 1e-9
 
-GATED_FILES = ("BENCH_trajectory.json", "BENCH_cache_policies.json")
+# Metric names ending with one of these gate in the LOWER-is-better
+# direction (serving drift: staler served caches are worse).
+LOWER_IS_BETTER_SUFFIXES = ("drift_rel_l2_mean",)
+
+GATED_FILES = (
+    "BENCH_trajectory.json",
+    "BENCH_cache_policies.json",
+    "BENCH_serving.json",
+)
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_BASELINE_DIR = REPO_ROOT / "benchmarks" / "baselines"
 DEFAULT_CURRENT_DIR = REPO_ROOT / "artifacts"
 
 
+def is_lower_better(metric: str) -> bool:
+    return metric.endswith(LOWER_IS_BETTER_SUFFIXES)
+
+
 def collect_metrics(payload: dict) -> dict[str, float]:
     """Flatten one BENCH_*.json payload into {metric_path: value} for every
-    gated (higher-is-better, machine-independent) metric."""
+    gated, machine-independent metric (direction per is_lower_better)."""
     metrics: dict[str, float] = {}
     schema = str(payload.get("schema", ""))
     if schema.startswith("repro.bench.trajectory"):
@@ -54,6 +68,17 @@ def collect_metrics(payload: dict) -> dict[str, float]:
                     if field in row:
                         key = f"cache_policies/{workload}/{name}/{field}"
                         metrics[key] = float(row[field])
+    if schema.startswith("repro.bench.serving"):
+        for name, row in payload.get("per_policy", {}).items():
+            for field in (
+                "goodput_per_s",
+                "requests_per_s",
+                "realized_lazy_ratio",
+                "drift_rel_l2_mean",
+                "drift_cos_mean",
+            ):
+                if field in row:
+                    metrics[f"serving/{name}/{field}"] = float(row[field])
     return metrics
 
 
@@ -63,20 +88,35 @@ def compare(
     tolerance: float = RELATIVE_DROP_TOLERANCE,
 ) -> list[str]:
     """Failure messages for every gated metric that regressed past the
-    tolerance or vanished; metrics with no baseline are informational only."""
+    tolerance or vanished; metrics with no baseline are informational only.
+
+    NaN on either side means "no data for this metric in that run" (e.g.
+    drift of a policy serving no lazy cache, percentiles of a run with no
+    completions) — such metrics are skipped, never treated as zero or as
+    a regression."""
     failures = []
     for metric in sorted(baseline):
         base = baseline[metric]
+        cur = current.get(metric)
+        if math.isnan(base) or (cur is not None and math.isnan(cur)):
+            continue
         if base <= ZERO_FLOOR:
             continue
-        cur = current.get(metric)
         if cur is None:
             failures.append(
                 f"{metric}: present in baseline ({base:.4f}) but missing "
                 "from the current artifacts"
             )
             continue
-        if cur < base * (1.0 - tolerance):
+        if is_lower_better(metric):
+            if cur > base * (1.0 + tolerance):
+                rise = cur / base - 1.0
+                failures.append(
+                    f"{metric}: {base:.4f} -> {cur:.4f} ({rise:.1%} rise "
+                    f"exceeds the {tolerance:.0%} tolerance; lower is "
+                    "better)"
+                )
+        elif cur < base * (1.0 - tolerance):
             drop = 1.0 - cur / base
             failures.append(
                 f"{metric}: {base:.4f} -> {cur:.4f} ({drop:.1%} drop "
@@ -108,9 +148,11 @@ def update_baselines(current_dir: Path, baseline_dir: Path) -> list[str]:
 
 
 def self_test(current_dir: Path) -> int:
-    """Prove the gate bites: a synthetic baseline whose every gated metric
-    sits >5% above the current artifacts MUST fail, and the artifacts
-    compared against themselves MUST pass."""
+    """Prove the gate bites: a synthetic baseline perturbed >5% against
+    every gated metric's better-direction MUST fail (inflated for
+    higher-is-better metrics, deflated for lower-is-better ones), and the
+    artifacts compared against themselves MUST pass.  NaN metrics carry
+    no data and are excluded from the perturbation."""
     current = load_metrics(current_dir)
     if not current:
         print(
@@ -118,18 +160,22 @@ def self_test(current_dir: Path) -> int:
             "(run `python -m benchmarks.run --smoke` first)"
         )
         return 1
-    inflated = {k: v * 1.25 for k, v in current.items() if v > ZERO_FLOOR}
-    if not inflated:
-        print("self-test: every gated metric is zero; nothing to inflate")
+    perturbed = {
+        k: (v * 0.75 if is_lower_better(k) else v * 1.25)
+        for k, v in current.items()
+        if v > ZERO_FLOOR and not math.isnan(v)
+    }
+    if not perturbed:
+        print("self-test: every gated metric is zero; nothing to perturb")
         return 1
-    injected = compare(inflated, current)
+    injected = compare(perturbed, current)
     clean = compare(current, current)
     print(
         f"self-test: {len(current)} gated metrics; injected regression "
-        f"flagged {len(injected)}/{len(inflated)} inflated baselines; "
+        f"flagged {len(injected)}/{len(perturbed)} perturbed baselines; "
         f"clean comparison flagged {len(clean)}"
     )
-    if len(injected) != len(inflated) or clean:
+    if len(injected) != len(perturbed) or clean:
         print("self-test FAILED: the gate does not bite")
         return 1
     print("self-test OK")

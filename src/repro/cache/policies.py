@@ -109,6 +109,9 @@ class StridePolicy(CachePolicy):
         # congruent with the t % stride rule across cycle boundaries
         return -(-default // self.stride) * self.stride
 
+    def describe_params(self):
+        return {"stride": self.stride}
+
     def decide(self, step, layer, module, z=None, state=None) -> bool:
         if state is not None:
             return super().decide(step, layer, module, z, state)
@@ -154,6 +157,9 @@ class LazyGatePolicy(CachePolicy):
         """Batch-averaged probe scores (T, L, M) -> the calibrated static
         plan (core.lazy.plan_from_scores) for compiled deployment."""
         return lazy_lib.plan_from_scores(scores, threshold=self.threshold)
+
+    def describe_params(self):
+        return {"threshold": self.threshold, "soft": self.exec_mode == "soft"}
 
 
 @register_policy("smoothcache")
@@ -220,6 +226,10 @@ class SmoothCachePolicy(CachePolicy):
             state["run_len"] = jnp.where(plan_row, state["run_len"] + 1, 0)
         return state
 
+    def describe_params(self):
+        return {"error_threshold": self.error_threshold,
+                "max_skip_run": self.max_skip_run}
+
 
 @register_policy("static_router")
 class StaticRouterPolicy(CachePolicy):
@@ -258,6 +268,10 @@ class StaticRouterPolicy(CachePolicy):
 
     def plan_horizon(self, default: int) -> int:
         return self.profile.shape[0] if self.profile is not None else default
+
+    def describe_params(self):
+        return {"ratio": self.ratio, "seed": self.seed,
+                "calibrated": self.profile is not None}
 
 
 @register_policy("delta")
@@ -359,6 +373,11 @@ class DeltaCachePolicy(CachePolicy):
             state["run_len"] = jnp.where(plan_row, state["run_len"] + 1, 0)
         return state
 
+    def describe_params(self):
+        return {"ratio": self.ratio, "split": self.split,
+                "refresh": self.refresh,
+                "calibrated": self.profile is not None}
+
 
 @register_policy("learned")
 class LearnedSchedulePolicy(CachePolicy):
@@ -410,6 +429,11 @@ class LearnedSchedulePolicy(CachePolicy):
     def plan_horizon(self, default: int) -> int:
         return self.artifact.n_steps
 
+    def describe_params(self):
+        art = self.artifact
+        return {"kind": art.kind, "arch": art.arch, "n_steps": art.n_steps,
+                "threshold": art.threshold, "target_ratio": art.target_ratio}
+
 
 @register_policy("plan")
 class PlanPolicy(CachePolicy):
@@ -436,6 +460,10 @@ class PlanPolicy(CachePolicy):
 
     def plan_horizon(self, default: int) -> int:
         return self.plan.skip.shape[0]
+
+    def describe_params(self):
+        return {"n_steps": int(self.plan.skip.shape[0]),
+                "lazy_ratio": float(self.plan.lazy_ratio)}
 
 
 def noop_plan_row(n_layers: int, n_modules: int = 2) -> np.ndarray:

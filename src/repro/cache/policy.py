@@ -171,9 +171,21 @@ class CachePolicy:
         return plan.lazy_ratio if plan is not None else 0.0
 
     def describe(self) -> Dict:
-        return {"name": self.name, "exec_mode": self.exec_mode,
-                "requires_gates": self.requires_gates,
-                "requires_calibration": self.requires_calibration}
+        """JSON-ready self-description — the label block obs reports and
+        benches attach to a policy's rows.  Subclasses add their knobs via
+        ``describe_params`` so the report says WHICH smoothcache/stride/...
+        produced a curve, not just the policy family."""
+        out = {"name": self.name, "exec_mode": self.exec_mode,
+               "requires_gates": self.requires_gates,
+               "requires_calibration": self.requires_calibration}
+        params = self.describe_params()
+        if params:
+            out["params"] = params
+        return out
+
+    def describe_params(self) -> Dict:
+        """Policy-specific knobs for describe(); JSON-serializable."""
+        return {}
 
 
 # ---------------------------------------------------------------------------

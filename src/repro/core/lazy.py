@@ -194,6 +194,37 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Cache drift — the telemetry statistic (repro.obs)
+# ---------------------------------------------------------------------------
+
+
+def module_drift(new_y: Array, old_y: Array, *,
+                 eps: float = 1e-12) -> Tuple[Array, Array]:
+    """(cosine, relative-L2) drift between a module's fresh output and its
+    previous-step lazy cache, batched over leading dims beyond (N, D).
+
+    This is the statistic SmoothCache calibrates offline and the paper's
+    §3.2 similarity analysis measures — exposed here so the fused
+    executor's telemetry carry (repro.obs.telemetry) can compute it
+    in-trace from the scan's cache buffers, with no extra forward pass:
+
+        cos = tr[new^T old] / max(||new||_F ||old||_F, eps)     (paper Eq. 3)
+        rel = ||new - old||_F / max(||old||_F, eps)
+
+    Reductions run in f32 regardless of input dtype.  A zero ``old``
+    (just-initialized cache) yields cos = 0, rel = ||new|| / eps — callers
+    mask first-step / fresh entries rather than this function guessing."""
+    n32, o32 = new_y.astype(jnp.float32), old_y.astype(jnp.float32)
+    old_norm = jnp.linalg.norm(o32, axis=(-2, -1))
+    new_norm = jnp.linalg.norm(n32, axis=(-2, -1))
+    cos = (jnp.sum(n32 * o32, axis=(-2, -1))
+           / jnp.maximum(new_norm * old_norm, eps))
+    rel = (jnp.linalg.norm(n32 - o32, axis=(-2, -1))
+           / jnp.maximum(old_norm, eps))
+    return cos, rel
+
+
+# ---------------------------------------------------------------------------
 # Lazy loss + realized ratio (paper Eq. 5 and the lazy-ratio Γ)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,310 @@
+"""Laziness observability report: skip heatmaps, drift curves, traces.
+
+Runs telemetry-instrumented sampling for a set of cache policies (one
+fused-trajectory run each, counters riding the scan carry — repro.obs),
+optionally a short telemetry-on serving trace, and writes the assembled
+report plus the run's structured trace:
+
+    artifacts/OBS_report.json   repro.obs.report/v1 — per-policy skip
+                                heatmaps, drift-by-step curves, gate-score
+                                means, compile-event timeline, service-
+                                clock percentiles
+    artifacts/OBS_trace.json    Chrome trace-event JSON (Perfetto /
+                                chrome://tracing)
+    artifacts/OBS_events.jsonl  the same events, one JSON object per line
+
+  # default: 4 policies on reduced dit_xl2_256, no serving leg
+  PYTHONPATH=src python -m repro.launch.obs
+
+  # CI obs-smoke: tiny run + short serving trace
+  PYTHONPATH=src python -m repro.launch.obs --steps 6 --batch 2 \
+      --serve --serve-requests 8 --n-slots 2
+
+The CLI FAILS (nonzero exit) if any policy's drift telemetry is
+non-finite or the trace breaks the Chrome schema — the observability
+artifacts are validated where they are produced, not in the viewer.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
+from repro.configs.registry import get_config
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import request_trace
+from repro.models import dit as dit_lib
+from repro.models import transformer as tf
+from repro.obs import report as report_lib
+from repro.obs import trace as trace_lib
+from repro.sampling import ddim, trajectory
+from repro.serving import metrics as serving_metrics
+from repro.serving.engine import ContinuousBatchingEngine
+
+# same directory benchmarks/common.ARTIFACTS resolves to, without making
+# the launcher depend on the benchmarks package being importable
+ARTIFACTS = os.path.join(os.path.dirname(__file__),
+                         "..", "..", "..", "artifacts")
+
+DEFAULT_POLICIES = ("none", "smoothcache", "static_router", "learned")
+
+#: policies that need a calibration profile to be built here
+CALIBRATED = ("smoothcache", "static_router", "delta", "learned")
+
+
+def build_obs_policy(name: str, cfg, n_steps: int, calibration=None, *,
+                     lazy_ratio: float = 0.4, seed: int = 0):
+    """A ready-to-run policy for one report leg.  ``learned`` has no
+    trained artifact in a fresh checkout, so it is synthesized from the
+    calibration profile: low consecutive-step error -> high laziness
+    score, distilled at ``lazy_ratio`` — the same evidence a trained
+    router converges to, in deployable ScheduleArtifact form."""
+    if name == "none":
+        return cache_lib.get_policy("none")
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=2)
+    if name == "lazy_gate":
+        return cache_lib.get_policy("lazy_gate",
+                                    threshold=cfg.lazy.threshold)
+    if name == "plan":
+        return cache_lib.get_policy(
+            "plan", plan=lazy_lib.uniform_plan(n_steps, cfg.n_layers, 2,
+                                               lazy_ratio, seed=seed).skip)
+    if name in CALIBRATED and calibration is None:
+        raise ValueError(f"policy {name!r} needs a calibration profile")
+    if name == "smoothcache":
+        return cache_lib.get_policy(
+            "smoothcache", calibration=calibration,
+            error_threshold=calibration.quantile_threshold(lazy_ratio))
+    if name == "static_router":
+        return cache_lib.get_policy("static_router", ratio=lazy_ratio,
+                                    calibration=calibration, seed=seed)
+    if name == "delta":
+        return cache_lib.get_policy("delta", ratio=lazy_ratio,
+                                    calibration=calibration)
+    if name == "learned":
+        rel = np.asarray(calibration.resampled(n_steps), np.float64)
+        scores = np.where(np.isfinite(rel), 1.0 / (1.0 + rel), 0.0)
+        art = cache_lib.distill_scores("router", cfg.name, scores,
+                                       target_ratio=lazy_ratio,
+                                       per_layer=True,
+                                       meta={"source": "obs-calibration"})
+        return cache_lib.get_policy("learned", artifact=art)
+    return cache_lib.get_policy(name)
+
+
+def collect_sampling(cfg, params, sched, policy_names, *, n_steps: int,
+                     batch: int, seed: int, lazy_ratio: float,
+                     tracer: trace_lib.Tracer,
+                     cfg_scale: float = 1.5) -> Dict[str, Dict]:
+    """One telemetry-on fused-trajectory run per policy -> report legs."""
+    labels = jnp.arange(batch) % cfg.dit_n_classes
+    key = jax.random.PRNGKey(seed)
+    calibration = None
+    if any(n in CALIBRATED for n in policy_names):
+        with tracer.span("calibrate_dit", cat="obs"):
+            calibration = calibrate_lib.calibrate_dit(
+                params, cfg, sched, key=jax.random.PRNGKey(seed + 1),
+                labels=labels[:2], n_steps=n_steps)
+    legs: Dict[str, Dict] = {}
+    for name in policy_names:
+        pol = build_obs_policy(name, cfg, n_steps, calibration,
+                               lazy_ratio=lazy_ratio, seed=seed)
+        with tracer.span(f"sample:{name}", cat="obs",
+                         args={"policy": name, "n_steps": n_steps}):
+            x, aux = trajectory.sample_trajectory(
+                params, cfg, sched, key=key, labels=labels,
+                n_steps=n_steps, cfg_scale=cfg_scale, policy=pol,
+                telemetry=True)
+            jax.block_until_ready(x)
+        legs[name] = {"telemetry": aux["telemetry"],
+                      "policy": pol.describe(),
+                      "realized_skip_ratio": aux["realized_skip_ratio"]}
+    return legs
+
+
+def collect_serving(cfg, params, *, n_requests: int, n_slots: int,
+                    seed: int, lazy_ratio: float, slo: float,
+                    tracer: trace_lib.Tracer) -> Dict[str, float]:
+    """A short telemetry-on continuous-batching trace -> service-clock
+    summary (latency/TTFT percentiles, goodput-under-SLO, drift means)."""
+    trace = request_trace(n_requests, cfg.vocab_size, seed=seed,
+                          mean_interarrival=0.3,
+                          short_prompt=(4, 4), long_prompt=(10, 10),
+                          short_output=(3, 6), long_output=(8, 14))
+    max_len = max(len(r.prompt) + r.max_new for r in trace) + 4
+    plan = lazy_lib.uniform_plan(16, cfg.n_layers, 2, lazy_ratio, seed=seed)
+    with tracer.span("serve_trace", cat="obs",
+                     args={"n_requests": n_requests, "n_slots": n_slots}):
+        eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
+                                       max_len=max_len, lazy_mode="plan",
+                                       plan=plan, telemetry=True,
+                                       tracer=tracer)
+        res = eng.run(trace)
+    return res.metrics.summary(slo_latency_s=slo)
+
+
+def verify_report(report: Dict) -> None:
+    """Raise if the report misses its core metrics or any policy's drift
+    telemetry came back non-finite — run-time validation of the artifact
+    this CLI exists to produce."""
+    metrics = report.get("metrics", {})
+    for required in ("skip_heatmap", "drift_by_step"):
+        if required not in metrics:
+            raise ValueError(f"report is missing metric {required!r}")
+    for pol, leg in metrics["drift_by_step"].items():
+        for key in ("rel_l2", "cosine"):
+            vals = leg[key]
+            if not all(math.isfinite(v) for v in vals):
+                raise ValueError(
+                    f"non-finite drift in policy {pol!r} ({key}): {vals}")
+
+
+def _jsonify(obj):
+    if isinstance(obj, (np.floating, np.integer)):
+        return obj.item()
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
+
+
+def write_artifacts(report: Dict, tracer: trace_lib.Tracer,
+                    out_dir: str) -> Dict[str, str]:
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {"report": os.path.join(out_dir, "OBS_report.json"),
+             "trace": os.path.join(out_dir, "OBS_trace.json"),
+             "events": os.path.join(out_dir, "OBS_events.jsonl")}
+    with open(paths["report"], "w") as f:
+        json.dump(report, f, indent=1, default=_jsonify)
+    trace_lib.validate_chrome_trace(tracer.sorted_events())
+    tracer.to_chrome(paths["trace"])
+    tracer.to_jsonl(paths["events"])
+    return paths
+
+
+def run_report(*, arch: str = "dit_xl2_256",
+               policies=DEFAULT_POLICIES,
+               n_steps: int = 8, batch: int = 2, seed: int = 0,
+               lazy_ratio: float = 0.4,
+               serve: bool = False, serve_arch: str = "llama3_2_1b",
+               serve_requests: int = 8, n_slots: int = 2,
+               slo: float = serving_metrics.DEFAULT_SLO_LATENCY_S,
+               out_dir: str = ARTIFACTS,
+               cfg=None, params=None,
+               serve_cfg=None, serve_params=None,
+               write: bool = True):
+    """The whole instrumented run: sampling legs (+ optional serving leg)
+    under one tracer with jax.monitoring compile capture, assembled into
+    a validated repro.obs.report/v1.  Tests inject tiny ``cfg``/``params``
+    (and ``serve_cfg``/``serve_params``) to skip the registry models.
+
+    Returns (report, tracer, paths) — ``paths`` empty if ``write=False``.
+    """
+    if cfg is None:
+        cfg = get_config(arch).reduced()
+    if cfg.family != "dit":
+        raise ValueError(f"--arch must be a DiT config, got {cfg.name!r} "
+                         f"(family {cfg.family!r})")
+    tracer = trace_lib.Tracer()
+    with tracer.capture_compile_events():
+        if params is None:
+            with tracer.span("init_dit", cat="obs"):
+                params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+        sched = ddim.linear_schedule(1000)
+        legs = collect_sampling(cfg, params, sched, tuple(policies),
+                                n_steps=n_steps, batch=batch, seed=seed,
+                                lazy_ratio=lazy_ratio, tracer=tracer)
+        serving = None
+        if serve:
+            if serve_cfg is None:
+                serve_cfg = get_config(serve_arch).reduced()
+            if serve_params is None:
+                with tracer.span("init_lm", cat="obs"):
+                    serve_params = tf.init_lm(jax.random.PRNGKey(0),
+                                              serve_cfg)
+            serving = collect_serving(serve_cfg, serve_params,
+                                      n_requests=serve_requests,
+                                      n_slots=n_slots, seed=seed,
+                                      lazy_ratio=lazy_ratio, slo=slo,
+                                      tracer=tracer)
+
+    ctx = {"config": {"arch": cfg.name, "policies": list(policies),
+                      "n_steps": n_steps, "batch": batch, "seed": seed,
+                      "lazy_ratio": lazy_ratio, "serve": bool(serve),
+                      "n_slots": n_slots if serve else None},
+           "sampling": legs, "serving": serving, "tracer": tracer}
+    report = report_lib.build_report(ctx)
+    verify_report(report)
+    paths = write_artifacts(report, tracer, out_dir) if write else {}
+    return report, tracer, paths
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="dit_xl2_256",
+                    help="DiT config for the sampling legs (reduced)")
+    ap.add_argument("--policies",
+                    default=",".join(DEFAULT_POLICIES),
+                    help="comma-separated cache policies to instrument")
+    ap.add_argument("--steps", type=int, default=8,
+                    help="DDIM sampling steps per policy leg")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lazy-ratio", type=float, default=0.4,
+                    help="target ratio for ratio-driven policies and the "
+                         "smoothcache threshold quantile")
+    ap.add_argument("--serve", action="store_true",
+                    help="append a telemetry-on continuous-batching leg")
+    ap.add_argument("--serve-arch", default="llama3_2_1b",
+                    help="LM config for the serving leg (reduced)")
+    ap.add_argument("--serve-requests", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=2)
+    ap.add_argument("--slo", type=float,
+                    default=serving_metrics.DEFAULT_SLO_LATENCY_S,
+                    help="goodput latency SLO (virtual seconds)")
+    ap.add_argument("--out-dir", default=ARTIFACTS)
+    args = ap.parse_args(argv)
+
+    names = tuple(n.strip() for n in args.policies.split(",") if n.strip())
+    unknown = [n for n in names if n not in cache_lib.available_policies()]
+    if unknown:
+        ap.error(f"unknown policies {unknown}; "
+                 f"available: {sorted(cache_lib.available_policies())}")
+
+    report, tracer, paths = run_report(
+        arch=args.arch, policies=names, n_steps=args.steps,
+        batch=args.batch, seed=args.seed, lazy_ratio=args.lazy_ratio,
+        serve=args.serve, serve_arch=args.serve_arch,
+        serve_requests=args.serve_requests, n_slots=args.n_slots,
+        slo=args.slo, out_dir=args.out_dir)
+
+    drift = report["metrics"]["drift_by_step"]
+    heat = report["metrics"]["skip_heatmap"]
+    print(f"obs report: arch={report['config']['arch']} "
+          f"steps={report['config']['n_steps']} "
+          f"policies={','.join(names)}")
+    for name in names:
+        print(f"  {name:14s} skip={heat[name]['realized_skip_ratio']:6.1%} "
+              f"drift_rel_l2={drift[name]['rel_l2_mean']:.5f} "
+              f"drift_cos={drift[name]['cosine_mean']:.5f}")
+    n_compile = len(tracer.compile_events())
+    print(f"  compile events captured: {n_compile}")
+    if report["metrics"].get("service_percentiles"):
+        s = report["metrics"]["service_percentiles"]
+        print(f"  serving: {s['requests_per_s']:.3f} req/s  "
+              f"goodput {s['goodput_per_s']:.3f}/s (SLO {s['slo_latency_s']}s)"
+              f"  drift_rel_l2={s['drift_rel_l2_mean']:.5f}")
+    for kind, path in paths.items():
+        print(f"  {kind:7s} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -143,7 +143,7 @@ def build_policy(args, cfg, params, n_steps: int, sched=None):
     return cache_lib.get_policy(name)
 
 
-def serve_dit(args, cfg):
+def serve_dit(args, cfg, tracer=None):
     """DiT archs serve image sampling, not token decode: the whole DDIM
     trajectory runs through the fused single-compile executor
     (sampling/trajectory.py) — one XLA program per (config, policy,
@@ -169,13 +169,17 @@ def serve_dit(args, cfg):
     kw = dict(key=jax.random.PRNGKey(args.seed), labels=labels,
               n_steps=n_steps, eta=args.eta, policy=policy,
               lazy_mode=args.lazy, plan=plan)
+    span = (tracer.span if tracer is not None
+            else (lambda *a, **k: contextlib.nullcontext()))
     t0 = time.perf_counter()
-    x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
-    jax.block_until_ready(x)
+    with span("sample:compile+run", cat="serve"):
+        x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+        jax.block_until_ready(x)
     compile_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
-    x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
-    jax.block_until_ready(x)
+    with span("sample:steady", cat="serve"):
+        x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+        jax.block_until_ready(x)
     wall = time.perf_counter() - t0
     policy_label = args.policy or f"lazy:{args.lazy}"
     mesh = dist_ctx.current_mesh()
@@ -252,8 +256,31 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="mean request arrivals per virtual second")
     ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of this run "
+                         "(repro.obs: compile events, serving decisions "
+                         "on the service clock) to this path")
     args = ap.parse_args()
 
+    with contextlib.ExitStack() as stack:
+        tracer = None
+        if args.trace:
+            from repro.obs import trace as obs_trace
+            tracer = obs_trace.Tracer()
+            stack.enter_context(tracer.capture_compile_events())
+            # callback (not a trailing call) so every early return of the
+            # serve body still writes + validates the trace on exit
+            stack.callback(_write_trace, tracer, args.trace)
+        _serve(args, tracer)
+
+
+def _write_trace(tracer, path: str) -> None:
+    from repro.obs import trace as obs_trace
+    obs_trace.validate_chrome_trace(tracer.sorted_events())
+    print(f"trace -> {tracer.to_chrome(path)}")
+
+
+def _serve(args, tracer=None):
     cfg = get_config(args.arch).reduced()
     if args.mesh:
         # the --mesh parity contract (per-example outputs bit-exact across
@@ -267,7 +294,7 @@ def main():
         # DiT archs sample images: route through the fused single-compile
         # trajectory executor instead of the token-decode engines
         with mesh_cm:
-            serve_dit(args, cfg)
+            serve_dit(args, cfg, tracer)
         return
     needs_gates = (args.policy == "lazy_gate"
                    or (not args.policy and args.lazy != "off"))
@@ -293,7 +320,8 @@ def main():
             eng = ContinuousBatchingEngine(cfg, params, n_slots=args.n_slots,
                                            max_len=max_len,
                                            lazy_mode=args.lazy,
-                                           plan=plan, policy=policy)
+                                           plan=plan, policy=policy,
+                                           tracer=tracer)
             t0 = time.perf_counter()
             res = eng.run(trace)
             wall = time.perf_counter() - t0

@@ -1,0 +1,21 @@
+"""repro.obs — zero-dependency observability for the lazy stack.
+
+Three layers (DESIGN.md §Obs):
+
+  * ``obs.telemetry`` — on-device counters riding the fused scan carry:
+    per-(step, layer, module) executed/skipped fractions, gate-score
+    summaries and cached-vs-fresh drift (cosine / relative L2 against the
+    lazy cache), drained in one device->host sync.  Off by default; off
+    means bit-identical HLO.
+  * ``obs.trace`` — structured tracer: spans/events as JSONL + Chrome
+    trace-event JSON (Perfetto-viewable), jax.monitoring compile events,
+    serving decisions on the virtual service clock.
+  * ``obs.report`` — metrics registry + report assembly; the CLI lives in
+    ``repro.launch.obs`` and writes ``artifacts/OBS_*.json``.
+"""
+from repro.obs.report import (available_metrics, build_report,  # noqa: F401
+                              register_metric)
+from repro.obs.telemetry import (drain, init_trajectory_telemetry,  # noqa: F401
+                                 slot_cache_drift, summarize,
+                                 trajectory_step_update)
+from repro.obs.trace import Tracer, validate_chrome_trace  # noqa: F401

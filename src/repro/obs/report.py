@@ -1,0 +1,124 @@
+"""Metrics registry + report assembly for ``launch/obs.py``.
+
+A report metric is a named function over the observation context — the
+dict ``launch/obs.py`` assembles from one instrumented run:
+
+    ctx["config"]    run parameters (arch, steps, batch, policies)
+    ctx["sampling"]  {policy_name: {"telemetry": drained pytree (numpy),
+                                    "policy": CachePolicy.describe(),
+                                    "realized_skip_ratio": float}}
+    ctx["serving"]   ServingMetrics.summary() of the serving leg (optional)
+    ctx["tracer"]    the run's obs.trace.Tracer (optional)
+
+Registering a metric (``@register_metric``) is all it takes to grow the
+report; ``build_report`` runs every registered metric and collects the
+non-None results under ``report["metrics"]`` with the schema tag
+``repro.obs.report/v1``.  Metrics must be pure reads of the context —
+the registry is how the serving and sampling legs share one reporting
+surface without importing each other.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import telemetry as telemetry_lib
+
+SCHEMA = "repro.obs.report/v1"
+
+_METRICS: Dict[str, Callable[[Dict], Optional[Dict]]] = {}
+
+
+def register_metric(name: str):
+    def deco(fn):
+        _METRICS[name] = fn
+        return fn
+    return deco
+
+
+def available_metrics() -> Tuple[str, ...]:
+    return tuple(sorted(_METRICS))
+
+
+def build_report(ctx: Dict) -> Dict:
+    report = {"schema": SCHEMA, "config": dict(ctx.get("config", {})),
+              "metrics": {}}
+    for name in sorted(_METRICS):
+        value = _METRICS[name](ctx)
+        if value is not None:
+            report["metrics"][name] = value
+    return report
+
+
+def _sampling(ctx) -> Dict[str, Dict]:
+    return ctx.get("sampling") or {}
+
+
+@register_metric("skip_heatmap")
+def _skip_heatmap(ctx) -> Optional[Dict]:
+    """Per-policy (step, layer) skipped-module-call heatmap + realized
+    ratio — the report's picture of WHERE each policy spends laziness."""
+    out = {}
+    for name, leg in _sampling(ctx).items():
+        summ = telemetry_lib.summarize(leg["telemetry"])
+        if not summ:
+            continue
+        out[name] = {"heatmap": summ["skip_heatmap"],
+                     "realized_skip_ratio": summ["realized_skip_ratio"]}
+    return out or None
+
+
+@register_metric("drift_by_step")
+def _drift_by_step(ctx) -> Optional[Dict]:
+    """Per-policy cached-vs-fresh drift curves over sampling steps — the
+    per-(step) mean of the (L, M) drift counters, both as relative L2 and
+    cosine similarity (paper Eq. 3)."""
+    out = {}
+    for name, leg in _sampling(ctx).items():
+        summ = telemetry_lib.summarize(leg["telemetry"])
+        if not summ:
+            continue
+        out[name] = {"rel_l2": summ["drift_rel_l2_by_step"],
+                     "cosine": summ["drift_cos_by_step"],
+                     "rel_l2_mean": summ["drift_rel_l2_mean"],
+                     "cosine_mean": summ["drift_cos_mean"]}
+    return out or None
+
+
+@register_metric("gate_scores")
+def _gate_scores(ctx) -> Optional[Dict]:
+    """Mean probe score per policy (nonzero only for masked/soft policies
+    — the paper's learned gates)."""
+    out = {}
+    for name, leg in _sampling(ctx).items():
+        tele = leg["telemetry"]
+        if not tele:
+            continue
+        out[name] = float(np.asarray(tele["gate_scores"]).mean())
+    return out or None
+
+
+@register_metric("policies")
+def _policies(ctx) -> Optional[Dict]:
+    return {name: leg["policy"]
+            for name, leg in _sampling(ctx).items()} or None
+
+
+@register_metric("compile_timeline")
+def _compile_timeline(ctx) -> Optional[list]:
+    """jax.monitoring compile / trace-cache events captured during the
+    run, as (name, ts_us, dur_us) rows — a silently recompiling fused
+    sampler shows up here as extra backend_compile spans."""
+    tracer = ctx.get("tracer")
+    if tracer is None:
+        return None
+    return [{"name": e["name"], "ts_us": e["ts"], "dur_us": e["dur"]}
+            for e in tracer.compile_events()] or None
+
+
+@register_metric("service_percentiles")
+def _service_percentiles(ctx) -> Optional[Dict]:
+    """The serving leg's service-clock summary (requests/s, latency and
+    TTFT percentiles, goodput-under-SLO, per-policy drift means)."""
+    return ctx.get("serving") or None

@@ -1,0 +1,176 @@
+"""On-device laziness telemetry — the counters that ride the fused scan.
+
+The fused trajectory executor (sampling/trajectory.py) compiles the whole
+DDIM loop into one ``lax.scan``; nothing about a step is observable from
+the host until the trajectory returns.  This module defines the OPTIONAL
+telemetry pytree that rides the scan carry when observability is on:
+
+    executed      (T, L, M) f32  fraction of the batch that RAN module m
+    skipped       (T, L, M) f32  fraction that served the lazy cache
+    gate_scores   (T, L, M) f32  layer-mean probe scores (masked/soft modes)
+    drift_cos     (T, L, M) f32  cosine(new cache, previous cache)
+    drift_rel_l2  (T, L, M) f32  ||new - old||_F / ||old||_F
+
+with M following the repo-wide plan-column convention (0 = attention,
+1 = ffn).  Every step writes its row via ``.at[step].set`` inside the scan
+body; the host drains the whole pytree in ONE device->host sync after the
+trajectory (``drain``).
+
+Drift semantics: the lazy cache holds each module's previous-step output,
+and its next value is the SERVED output (fresh where executed, the cache
+itself where skipped — core/lazy.lazy_execute).  Comparing consecutive
+cache states therefore measures cached-vs-fresh drift exactly where it is
+meaningful: an executed module's entry is "how far the cache had drifted
+from the fresh output" (the error skipping WOULD have served — the
+statistic SmoothCache thresholds), and a skipped module's entry is 0 / 1
+by construction (it served the cache verbatim).  Step 0 primes the cache
+and is pinned to rel = 0, cos = 1.
+
+Bit-exactness: telemetry only ADDS reduction consumers of the scan-carry
+cache buffers — it never feeds back into the latent math — and both cache
+operands pass through an ``optimization_barrier`` before reduction, so XLA
+cannot refuse/refuse-to-fuse the main path differently because of the new
+consumers.  With telemetry off the carry entry is ``None`` (an empty
+pytree): the traced jaxpr, the compiled HLO and the output bits are
+identical to a build with no telemetry support at all
+(tests/test_obs.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lazy as lazy_lib
+
+Array = jax.Array
+
+# plan-column names, index-aligned with the (L, M) telemetry columns
+MODULE_KINDS = ("attn", "ffn")
+
+COUNTER_KEYS = ("executed", "skipped", "gate_scores",
+                "drift_cos", "drift_rel_l2")
+
+
+def init_trajectory_telemetry(n_steps: int, n_layers: int,
+                              n_modules: int = 2) -> Dict[str, Array]:
+    """Zeroed telemetry pytree for an ``n_steps``-step trajectory."""
+    def z():
+        return jnp.zeros((n_steps, n_layers, n_modules), jnp.float32)
+    return {k: z() for k in COUNTER_KEYS}
+
+
+def trajectory_step_update(tele: Optional[Dict[str, Array]], step: Array, *,
+                           first: Array, mode: str, threshold: float,
+                           row: Optional[Array],
+                           scores: Optional[Dict[str, Array]],
+                           old_cache: Optional[dict],
+                           new_cache: Optional[dict]) -> Optional[Dict]:
+    """Write step ``step``'s telemetry row — a pure traced transform for
+    the scan body.  ``row`` is the step's (L, M) bool plan row (plan mode);
+    ``scores`` the per-module probe scores (masked/soft); ``old_cache`` /
+    ``new_cache`` the lazy cache entering and leaving the step, each
+    ``{"attn": (L, B', N, D), "ffn": ...}``.  Returns the advanced pytree,
+    or None untouched (telemetry off)."""
+    if tele is None:
+        return None
+    n_layers, n_modules = tele["executed"].shape[1:]
+    zeros = jnp.zeros((n_layers, n_modules), jnp.float32)
+
+    gate = zeros
+    if scores and mode in ("masked", "soft"):
+        # mirror the executor's ACTUAL select: lazy_execute thresholds per
+        # sample, so the realized skip fraction is the batch mean of
+        # per-sample threshold crossings (same rule as n_skipped)
+        per_sample = jnp.stack([scores[k] for k in MODULE_KINDS],
+                               axis=-1) > threshold            # (L, B', M)
+        skipped = jnp.where(first, 0.0,
+                            per_sample.astype(jnp.float32).mean(axis=1))
+        gate = jnp.stack([scores[k].mean(-1) for k in MODULE_KINDS], axis=-1)
+    elif row is not None:
+        skipped = jnp.where(first, 0.0, row.astype(jnp.float32))
+    else:
+        skipped = zeros
+
+    cos, rel = jnp.ones_like(zeros), zeros
+    if old_cache is not None and new_cache is not None:
+        # the barrier pins both operands as materialized values: the new
+        # reduction consumers cannot change how XLA fuses the producers
+        # feeding the main latent path (the bit-exactness contract)
+        old_cache, new_cache = jax.lax.optimization_barrier(
+            (old_cache, new_cache))
+        per_kind = [lazy_lib.module_drift(new_cache[k], old_cache[k])
+                    for k in MODULE_KINDS]                     # [(L,B'),...]
+        cos = jnp.stack([c.mean(axis=-1) for c, _ in per_kind], axis=-1)
+        rel = jnp.stack([r.mean(axis=-1) for _, r in per_kind], axis=-1)
+        # step 0 primes a zero-initialized cache: no previous step exists
+        cos = jnp.where(first, 1.0, cos)
+        rel = jnp.where(first, 0.0, rel)
+
+    return {
+        "executed": tele["executed"].at[step].set(1.0 - skipped),
+        "skipped": tele["skipped"].at[step].set(skipped),
+        "gate_scores": tele["gate_scores"].at[step].set(gate),
+        "drift_cos": tele["drift_cos"].at[step].set(cos),
+        "drift_rel_l2": tele["drift_rel_l2"].at[step].set(rel),
+    }
+
+
+def drain(tele) -> Dict[str, np.ndarray]:
+    """Device -> host in one sync: the single transfer the whole
+    trajectory's telemetry costs."""
+    if tele is None:
+        return {}
+    return {k: np.asarray(v) for k, v in jax.device_get(tele).items()}
+
+
+def summarize(tele_np: Dict[str, np.ndarray]) -> Dict:
+    """Host-side reductions of a drained telemetry pytree — the report
+    rows launch/obs.py and bench_serving consume."""
+    if not tele_np:
+        return {}
+    skipped = np.asarray(tele_np["skipped"], np.float64)
+    gated = np.asarray(tele_np["executed"]) + skipped
+    rel = np.asarray(tele_np["drift_rel_l2"], np.float64)
+    cos = np.asarray(tele_np["drift_cos"], np.float64)
+    return {
+        "realized_skip_ratio": float(skipped.sum() / max(gated.sum(), 1e-9)),
+        # (T, L): per-(step, layer) skipped module calls, 0..M
+        "skip_heatmap": skipped.sum(axis=-1).tolist(),
+        "drift_rel_l2_by_step": rel.mean(axis=(1, 2)).tolist(),
+        "drift_cos_by_step": cos.mean(axis=(1, 2)).tolist(),
+        "drift_rel_l2_mean": float(rel.mean()),
+        "drift_cos_mean": float(cos.mean()),
+        "gate_score_mean": float(np.asarray(tele_np["gate_scores"]).mean()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Serving-side drift (slot-stacked LM lazy caches)
+# ---------------------------------------------------------------------------
+
+
+def slot_cache_drift(new_cache, old_cache, *, eps: float = 1e-12):
+    """(cos, rel_l2) per SLOT across every leaf of a slot-stacked lazy
+    cache (serving/slots.SlotPool): each leaf is (n_slots, ...); the
+    reduction flattens a slot's entries across all leaves so one scalar
+    pair summarizes how far the slot's cached module outputs moved this
+    decode step.  Runs in-trace (the engine's jitted ``_step``); callers
+    mask fresh / inactive slots host-side."""
+    old_cache, new_cache = jax.lax.optimization_barrier(
+        (old_cache, new_cache))
+
+    def flat(tree):
+        return [leaf.astype(jnp.float32).reshape(leaf.shape[0], -1)
+                for leaf in jax.tree.leaves(tree)]
+
+    news, olds = flat(new_cache), flat(old_cache)
+    dot = sum(jnp.sum(n * o, axis=-1) for n, o in zip(news, olds))
+    nn = sum(jnp.sum(n * n, axis=-1) for n in news)
+    oo = sum(jnp.sum(o * o, axis=-1) for o in olds)
+    dd = sum(jnp.sum((n - o) ** 2, axis=-1) for n, o in zip(news, olds))
+    cos = dot / jnp.maximum(jnp.sqrt(nn * oo), eps)
+    rel = jnp.sqrt(dd) / jnp.maximum(jnp.sqrt(oo), eps)
+    return cos, rel

@@ -1,0 +1,184 @@
+"""Structured tracing: spans/events as JSONL + Chrome trace-event JSON.
+
+Zero-dependency tracer for the whole stack — host-side phases (policy
+builds, calibration probes, sampling calls), ``jax.monitoring`` compile /
+trace-cache events, and serving-engine decisions on the VIRTUAL service
+clock (serving/metrics.py).  Events accumulate in memory and export two
+ways:
+
+  * ``to_jsonl(path)``  — one event object per line (stream-appendable,
+    grep-able);
+  * ``to_chrome(path)`` — the Chrome trace-event JSON array format
+    (``{"traceEvents": [...]}``), loadable in Perfetto / chrome://tracing.
+
+Event model (the Chrome trace-event phases actually used):
+
+  ph "X"  complete span   (ts + dur, both µs)
+  ph "i"  instant event   (admission decisions, completions, ...)
+  ph "C"  counter sample  (queue depth, active slots, ...)
+  ph "M"  metadata        (process names for the fixed pids below)
+
+Processes separate the three clocks so Perfetto lays them out as tracks:
+pid HOST (wall clock, µs since the tracer started), pid JAX (compile /
+trace-cache events, wall clock), pid SERVICE (the virtual service clock,
+1 virtual second = 1e6 "µs").  Exports sort events by (pid, tid, ts), so
+timestamps are monotonically non-decreasing per track no matter the
+append order — ``validate_chrome_trace`` checks exactly the invariants
+the tests pin (required fields, known phases, per-track monotonic ts,
+non-negative durations).
+"""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterable, List, Optional
+
+# fixed process ids (Chrome trace pids are numeric; "M" metadata events
+# name them for the viewer)
+PID_HOST = 1
+PID_JAX = 2
+PID_SERVICE = 3
+
+_PROCESS_NAMES = {PID_HOST: "repro.host", PID_JAX: "repro.jax",
+                  PID_SERVICE: "repro.service-clock"}
+
+KNOWN_PHASES = ("X", "i", "C", "M")
+
+# the jax.monitoring event the compile-count probes already key on
+# (benchmarks/bench_trajectory.compile_counter)
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+COMPILE_EVENT_PREFIXES = ("/jax/core/compile", "/jax/core/tracing")
+
+
+class Tracer:
+    """Append-only event collector with Chrome-trace + JSONL export."""
+
+    def __init__(self):
+        self.events: List[Dict] = []
+        self._t0 = time.perf_counter()
+        for pid, name in _PROCESS_NAMES.items():
+            self.events.append({"ph": "M", "name": "process_name",
+                                "pid": pid, "tid": 0, "ts": 0.0,
+                                "args": {"name": name}})
+
+    # ------------------------------------------------------------ clocks
+    def now_us(self) -> float:
+        """Wall-clock µs since the tracer started (pids HOST / JAX)."""
+        return (time.perf_counter() - self._t0) * 1e6
+
+    @staticmethod
+    def service_us(now_s: float) -> float:
+        """Virtual service clock -> trace µs (1 virtual second = 1e6)."""
+        return float(now_s) * 1e6
+
+    # ------------------------------------------------------------ emit
+    def complete(self, name: str, ts_us: float, dur_us: float, *,
+                 pid: int = PID_HOST, tid: int = 0, cat: str = "host",
+                 args: Optional[Dict] = None) -> None:
+        self.events.append({"ph": "X", "name": name, "cat": cat,
+                            "pid": pid, "tid": tid,
+                            "ts": float(ts_us), "dur": max(float(dur_us), 0.0),
+                            "args": dict(args or {})})
+
+    def instant(self, name: str, *, ts_us: Optional[float] = None,
+                pid: int = PID_HOST, tid: int = 0, cat: str = "host",
+                args: Optional[Dict] = None) -> None:
+        self.events.append({"ph": "i", "name": name, "cat": cat,
+                            "pid": pid, "tid": tid, "s": "t",
+                            "ts": float(self.now_us() if ts_us is None
+                                        else ts_us),
+                            "args": dict(args or {})})
+
+    def counter(self, name: str, values: Dict[str, float], *,
+                ts_us: Optional[float] = None, pid: int = PID_HOST,
+                cat: str = "host") -> None:
+        self.events.append({"ph": "C", "name": name, "cat": cat,
+                            "pid": pid, "tid": 0,
+                            "ts": float(self.now_us() if ts_us is None
+                                        else ts_us),
+                            "args": {k: float(v) for k, v in values.items()}})
+
+    @contextmanager
+    def span(self, name: str, *, cat: str = "host", tid: int = 0,
+             args: Optional[Dict] = None):
+        """Wall-clock complete span around a host-side block."""
+        t0 = self.now_us()
+        try:
+            yield
+        finally:
+            self.complete(name, t0, self.now_us() - t0, pid=PID_HOST,
+                          tid=tid, cat=cat, args=args)
+
+    # ------------------------------------------------------------ jax events
+    @contextmanager
+    def capture_compile_events(self):
+        """Record ``jax.monitoring`` duration events (XLA backend compiles,
+        trace-cache misses) as spans on the JAX track.  The listener fires
+        when an event ENDS, so the span is back-dated by its duration;
+        export-time sorting restores per-track ts order."""
+        from jax import monitoring as _pub
+        from jax._src import monitoring as _mon
+
+        def _listener(event, duration, **kw):
+            if not event.startswith(COMPILE_EVENT_PREFIXES):
+                return
+            dur_us = float(duration) * 1e6
+            self.complete(event, self.now_us() - dur_us, dur_us,
+                          pid=PID_JAX, cat="compile",
+                          args={k: str(v) for k, v in kw.items()})
+
+        _pub.register_event_duration_secs_listener(_listener)
+        try:
+            yield self
+        finally:
+            _mon._unregister_event_duration_listener_by_callback(_listener)
+
+    def compile_events(self) -> List[Dict]:
+        return [e for e in self.events if e.get("cat") == "compile"]
+
+    # ------------------------------------------------------------ export
+    def sorted_events(self) -> List[Dict]:
+        return sorted(self.events,
+                      key=lambda e: (e["pid"], e.get("tid", 0), e["ts"]))
+
+    def to_chrome(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump({"traceEvents": self.sorted_events(),
+                       "displayTimeUnit": "ms"}, f)
+        return path
+
+    def to_jsonl(self, path: str) -> str:
+        with open(path, "w") as f:
+            for ev in self.sorted_events():
+                f.write(json.dumps(ev) + "\n")
+        return path
+
+
+def validate_chrome_trace(events: Iterable[Dict]) -> None:
+    """Raise ValueError unless ``events`` is schema-valid Chrome trace
+    data: required fields present, phases known, timestamps non-negative
+    and monotonically non-decreasing per (pid, tid) track, durations
+    non-negative.  Used by the tests AND by launch/obs.py before it
+    writes the trace artifact — an invalid trace fails the run, not the
+    viewer."""
+    last_ts: Dict[tuple, float] = {}
+    for i, ev in enumerate(events):
+        for field in ("ph", "name", "pid", "tid", "ts"):
+            if field not in ev:
+                raise ValueError(f"event {i} missing {field!r}: {ev}")
+        if ev["ph"] not in KNOWN_PHASES:
+            raise ValueError(f"event {i} has unknown phase {ev['ph']!r}")
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"event {i} has invalid ts {ts!r}")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"event {i} (X) has invalid dur {dur!r}")
+        track = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(track, 0.0):
+            raise ValueError(
+                f"event {i} ({ev['name']!r}) goes backwards on track "
+                f"{track}: ts {ts} < {last_ts[track]}")
+        last_ts[track] = ts

@@ -196,6 +196,7 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
                 policy=None,
                 collect_scores: bool = False,
                 collect_traces: bool = False,
+                telemetry: bool = False,
                 ) -> Tuple[Array, Dict]:
     """Full DDIM sampling loop for the DiT denoiser.
 
@@ -221,16 +222,27 @@ def ddim_sample(params: dict, cfg: ModelConfig, sched: DiffusionSchedule, *,
     reserved per-step keys — per-example noise, reproducible under a
     fixed seed and invariant to batch sharding across a device mesh.
 
+    ``telemetry=True`` (repro.obs) rides the fused executor's scan carry
+    with per-(step, layer, module) counters — executed/skipped fractions,
+    gate scores, cached-vs-fresh drift — returned drained (numpy) as
+    ``aux["telemetry"]``.  Telemetry is a fused-path feature; combining it
+    with the debug collectors (which force the host loop) is an error.
+
     Returns (samples (B,H,W,C), aux); aux carries the final policy state
     and realized skip ratio (fused path) or the per-step score/trace logs
     (debug path).
     """
+    if telemetry and (collect_scores or collect_traces):
+        raise ValueError(
+            "telemetry=True requires the fused trajectory executor; "
+            "collect_scores/collect_traces force the host-loop reference "
+            "— drop the collectors or the telemetry flag")
     if not (collect_scores or collect_traces):
         from repro.sampling import trajectory
         return trajectory.sample_trajectory(
             params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
             cfg_scale=cfg_scale, eta=eta, lazy_mode=lazy_mode, plan=plan,
-            policy=policy)
+            policy=policy, telemetry=telemetry)
     return ddim_sample_reference(
         params, cfg, sched, key=key, labels=labels, n_steps=n_steps,
         cfg_scale=cfg_scale, eta=eta, lazy_mode=lazy_mode, plan=plan,

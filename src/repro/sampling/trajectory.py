@@ -21,6 +21,10 @@ Carry layout (DESIGN.md §Trajectory):
                    ddim.trajectory_step for eta > 0 stochastic DDIM; None
                    at eta = 0 (deterministic DDIM draws no per-step noise)
     n_skipped    — realized skipped-module-call counter (scalar f32)
+    telemetry    — optional repro.obs counter pytree (per-(step, layer,
+                   module) executed/skipped/gate/drift, (T, L, 2) f32
+                   each); None — zero pytree leaves — when telemetry is
+                   off, keeping the traced program identical
 
 Scanned inputs: (t, t_prev, step_index, plan_row) — plan rows are a
 (T, L, 2) bool DEVICE array (CachePolicy.device_plan) consumed via
@@ -60,6 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.dist import ctx
 from repro.dist import sharding as sharding_lib
 from repro.models import dit as dit_lib
+from repro.obs import telemetry as obs_telemetry
 from repro.sampling import ddim
 
 Array = jax.Array
@@ -87,7 +92,8 @@ _SAMPLER_CACHE: Dict[tuple, object] = {}
 
 def _sampler_cache_key(cfg: ModelConfig, pol, n_steps: int,
                        cfg_scale: float, eta: float,
-                       batch: Optional[int]) -> tuple:
+                       batch: Optional[int],
+                       telemetry: bool) -> tuple:
     """What the TRACE actually depends on.  Keying on the policy instance
     would defeat the compile-once contract: resolve() builds a fresh
     policy object per ddim_sample call for legacy/lazy-mode/string args,
@@ -97,16 +103,21 @@ def _sampler_cache_key(cfg: ModelConfig, pol, n_steps: int,
     trace.  The mesh (axis sizes + device assignment) and — under a mesh
     only — the global batch join the key: in/out shardings are baked into
     the jit wrapper, and a batch-sharded executable is only valid for the
-    batch it was built for."""
+    batch it was built for.  ``telemetry`` joins it too: the telemetry
+    carry (repro.obs) changes the traced program, so on/off each own a
+    separate executable and toggling observability never retraces the
+    other's."""
     mesh_key = ctx.mesh_cache_key()
     return (cfg, type(pol), pol.exec_mode,
             float(getattr(pol, "threshold", 0.5)),
             int(n_steps), float(cfg_scale), float(eta),
-            mesh_key, int(batch) if mesh_key and batch else None)
+            mesh_key, int(batch) if mesh_key and batch else None,
+            bool(telemetry))
 
 
 def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,
-                  eta: float = 0.0, *, batch: Optional[int] = None):
+                  eta: float = 0.0, *, batch: Optional[int] = None,
+                  telemetry: bool = False):
     """One jitted whole-trajectory sampler per (config, policy-shape,
     horizon, guidance scale, eta, mesh) — policy-shape meaning (class,
     exec_mode, threshold), see _sampler_cache_key.
@@ -131,8 +142,19 @@ def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,
     the traced body runs inside the activation-sharding context, so the
     scan carry — latent, lazy cache, per-example keys — stays pinned to
     the batch axis across all n_steps iterations.
+
+    ``telemetry=True`` (repro.obs) threads the per-(step, layer, module)
+    counter pytree through the scan carry — executed/skipped fractions,
+    gate-score summaries and cached-vs-fresh drift against the lazy cache
+    — surfaced as ``aux["telemetry"]`` and drained by the caller in one
+    device->host sync.  An exec_mode-'off' policy gets a lazy cache
+    threaded anyway (mode 'off' never READS it, so the latent math is
+    unchanged) purely so consecutive-step drift is measurable for the
+    `none` baseline.  With telemetry off the carry entry is None — zero
+    pytree leaves, identical jaxpr/HLO to a telemetry-free build.
     """
-    key = _sampler_cache_key(cfg, policy, n_steps, cfg_scale, eta, batch)
+    key = _sampler_cache_key(cfg, policy, n_steps, cfg_scale, eta, batch,
+                             telemetry)
     cached = _SAMPLER_CACHE.get(key)
     if cached is not None:
         return cached
@@ -156,15 +178,21 @@ def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,
         BB = 2 * B if use_cfg else B
         z = ctx.constrain(z0, "batch")
         lazy_cache = None
-        if lazy:
+        # telemetry threads a cache even at exec_mode 'off': mode 'off'
+        # never reads it (the latent math is untouched) but its next value
+        # is the step's fresh module outputs, so consecutive-step drift is
+        # measurable for the `none` baseline too
+        if lazy or telemetry:
             lazy_cache = jax.tree.map(
                 lambda a: ctx.constrain(a, None, "batch"),
                 dit_lib.init_dit_lazy_cache(cfg, BB))
         steps = jnp.arange(n_steps, dtype=jnp.int32)
         noise_keys = keys if eta > 0.0 else None
+        tele0 = (obs_telemetry.init_trajectory_telemetry(
+            n_steps, cfg.n_layers, N_MODULES) if telemetry else None)
 
         def body(carry, xs):
-            z, lzc, pstate, nkeys, n_skipped = carry
+            z, lzc, pstate, nkeys, n_skipped, tele = carry
             t, t_prev, step, row = xs
             first = step == 0
             z, new_lzc, scores, nkeys = ddim.trajectory_step(
@@ -191,13 +219,19 @@ def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,
                 n_skipped = n_skipped + jnp.where(
                     first, 0.0, jnp.sum(row.astype(jnp.float32)))
             pstate = pol.update_traced_state(pstate, scores=sc, plan_row=row)
-            return (z, new_lzc, pstate, nkeys, n_skipped), None
+            tele = obs_telemetry.trajectory_step_update(
+                tele, step, first=first, mode=mode, threshold=threshold,
+                row=row, scores=scores, old_cache=lzc, new_cache=new_lzc)
+            return (z, new_lzc, pstate, nkeys, n_skipped, tele), None
 
         carry0 = (z, lazy_cache, state0, noise_keys,
-                  jnp.zeros((), jnp.float32))
-        (z, _, pstate, _, n_skipped), _ = jax.lax.scan(
+                  jnp.zeros((), jnp.float32), tele0)
+        (z, _, pstate, _, n_skipped, tele), _ = jax.lax.scan(
             body, carry0, (ts, ts_prev, steps, plan))
-        return z, {"policy_state": pstate, "n_skipped": n_skipped}
+        aux = {"policy_state": pstate, "n_skipped": n_skipped}
+        if tele is not None:
+            aux["telemetry"] = tele
+        return z, aux
 
     if mesh is not None:
         if batch is None:
@@ -246,7 +280,8 @@ def sample_trajectory(params: dict, cfg: ModelConfig,
                       eta: float = 0.0,
                       lazy_mode: str = "off",
                       plan: Optional[np.ndarray] = None,
-                      policy=None) -> Tuple[Array, Dict]:
+                      policy=None,
+                      telemetry: bool = False) -> Tuple[Array, Dict]:
     """Fused DDIM sampling: the whole trajectory in one compiled scan.
 
     Same contract as sampling/ddim.ddim_sample (which routes here unless
@@ -262,14 +297,21 @@ def sample_trajectory(params: dict, cfg: ModelConfig,
       aux["realized_skip_ratio"] — skipped gated-module calls / total
                                    (plan rows for static policies, probe
                                    thresholding for lazy_gate).
+      aux["telemetry"]           — only with ``telemetry=True``: the
+                                   drained (numpy) per-(step, layer,
+                                   module) counter pytree (repro.obs).
     """
     pol = cache_policy.resolve(policy, lazy_mode=lazy_mode, plan=plan,
                                threshold=cfg.lazy.threshold)
     fn = build_sampler(cfg, pol, int(n_steps), float(cfg_scale),
-                       float(eta), batch=int(labels.shape[0]))
+                       float(eta), batch=int(labels.shape[0]),
+                       telemetry=telemetry)
     args = prepare_inputs(cfg, sched, pol, key=key, labels=labels,
                           n_steps=n_steps, eta=eta)
     z, aux = fn(params, *args)
     gated = max(n_steps * cfg.n_layers * N_MODULES, 1)
-    return z, {"policy_state": aux["policy_state"],
-               "realized_skip_ratio": float(aux["n_skipped"]) / gated}
+    out = {"policy_state": aux["policy_state"],
+           "realized_skip_ratio": float(aux["n_skipped"]) / gated}
+    if "telemetry" in aux:
+        out["telemetry"] = obs_telemetry.drain(aux["telemetry"])
+    return z, out

@@ -41,6 +41,8 @@ from repro.configs.base import ModelConfig
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import RequestSpec
 from repro.models import transformer as tf
+from repro.obs import telemetry as obs_telemetry
+from repro.obs import trace as obs_trace
 from repro.serving import metrics as metrics_lib
 from repro.serving.scheduler import Scheduler
 from repro.serving.slots import SlotPool
@@ -232,6 +234,14 @@ class ContinuousBatchingEngine:
     bench_serving compares against with otherwise identical machinery.
     ``cost_budget`` caps the scheduler's lazy-aware step-cost estimate
     (virtual seconds per decode step); None means slots are the only limit.
+
+    Observability (repro.obs): ``telemetry=True`` makes the jitted step
+    also return per-slot cached-vs-fresh lazy-cache drift
+    (obs.telemetry.slot_cache_drift) — the host masks fresh / inactive
+    slots and records the step means into ServingMetrics, at zero cost
+    and unchanged tokens when off.  ``tracer=`` (an obs.trace.Tracer)
+    lands admission / prefill / step / first-token / completion events on
+    the virtual service-clock track.
     """
 
     def __init__(self, cfg: ModelConfig, params: dict, *,
@@ -241,7 +251,9 @@ class ContinuousBatchingEngine:
                  eos_id: Optional[int] = None,
                  cost_budget: Optional[float] = None,
                  batch_synchronous: bool = False,
-                 window_override: Optional[int] = None):
+                 window_override: Optional[int] = None,
+                 telemetry: bool = False,
+                 tracer=None):
         self.policy = _resolve_serving_policy(policy, lazy_mode, plan, cfg)
         self.lazy_mode = mode = self.policy.exec_mode
         self.cfg = cfg
@@ -252,6 +264,8 @@ class ContinuousBatchingEngine:
         self.cost_budget = cost_budget
         self.batch_synchronous = batch_synchronous
         self.window_override = window_override
+        self.telemetry = telemetry
+        self.tracer = tracer
         self._attn_like = metrics_lib.attn_like_mask(
             cfg, window_override=window_override)
         self.modules_per_slot = metrics_lib.gated_module_calls(
@@ -298,12 +312,15 @@ class ContinuousBatchingEngine:
             serve all-False rows, and every slot's traced state advances
             via the policy's pure pytree transform (vmapped over the slot
             axis) — the whole per-step decision path is inside this one
-            compiled program."""
+            compiled program.  With telemetry on the step additionally
+            reduces per-slot lazy-cache drift (repro.obs); off, the drift
+            output is None (zero pytree leaves, program unchanged)."""
             rows = None
             if plan is not None:
                 rows = plan[slot_state["step"] % horizon]      # (B, L, 2)
                 if fresh is not None:
                     rows = jnp.where(fresh[:, None, None], False, rows)
+            old_lazy_cache = lazy_cache
             logits, cache, lazy_cache, scores = tf.decode_step_mixed(
                 params, cfg, tok, index, cache, lazy_cache=lazy_cache,
                 lazy_mode=mode, fresh=fresh, plan_rows=rows,
@@ -315,7 +332,12 @@ class ContinuousBatchingEngine:
             else:
                 new_state = jax.vmap(
                     lambda s: pol.update_traced_state(s))(slot_state)
-            return logits, cache, lazy_cache, scores, new_state, rows
+            drift = None
+            if telemetry and lazy_cache is not None \
+                    and old_lazy_cache is not None:
+                drift = obs_telemetry.slot_cache_drift(lazy_cache,
+                                                       old_lazy_cache)
+            return logits, cache, lazy_cache, scores, new_state, rows, drift
 
         self._prefill = _prefill
         self._step = _step
@@ -362,8 +384,11 @@ class ContinuousBatchingEngine:
             except ValueError as e:
                 raise ValueError(f"request rid={req.rid}: {e}") from e
         sched = Scheduler(self.n_slots, cost_budget=self.cost_budget,
-                          batch_synchronous=self.batch_synchronous)
+                          batch_synchronous=self.batch_synchronous,
+                          tracer=self.tracer)
         sched.submit(requests)
+        tracer = self.tracer
+        svc_us = obs_trace.Tracer.service_us
         pool = SlotPool(self.cfg, self.n_slots, self.max_len, lazy=lazy,
                         window_override=self.window_override)
         # slot-stacked traced policy state, placed like the slot caches
@@ -395,7 +420,14 @@ class ContinuousBatchingEngine:
                     window_override=self.window_override)
                 tok0, cache1 = self._prefill(
                     self.params, jnp.asarray(prompt, jnp.int32), cache1)
+                t_prefill = now
                 now += metrics_lib.prefill_cost(prompt.shape[1], self.n_slots)
+                if tracer is not None:
+                    tracer.complete(
+                        "prefill", svc_us(t_prefill), svc_us(now - t_prefill),
+                        pid=obs_trace.PID_SERVICE, cat="serve",
+                        args={"rid": req.rid,
+                              "prompt_len": int(prompt.shape[1])})
                 i = free.pop(0)
                 pool.admit(i, req, cache1, int(tok0[0]))
                 # reset-then-join: the new occupant starts from the
@@ -418,7 +450,8 @@ class ContinuousBatchingEngine:
                 continue
 
             fresh = pool.fresh_vector() if lazy else None
-            logits, cache, lazy_cache, scores, slot_state, rows = self._step(
+            (logits, cache, lazy_cache, scores, slot_state, rows,
+             drift) = self._step(
                 self.params, pool.token_vector(), pool.index_vector(),
                 pool.cache, pool.lazy_cache, fresh, slot_state,
                 self._device_plan)
@@ -428,17 +461,49 @@ class ContinuousBatchingEngine:
                 pool.lazy_cache = lazy_cache
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
 
+            # per-slot drift means over ESTABLISHED active slots: a fresh
+            # slot's cache was just primed (its "old" entries are the reset
+            # values), an inactive slot's holds a stale occupant — neither
+            # measures cached-vs-fresh drift
+            drift_rel = drift_cos = None
+            if drift is not None:
+                fresh_np = np.asarray(fresh, bool)
+                established = [i for i in active if not fresh_np[i]]
+                if established:
+                    cos_np, rel_np = (np.asarray(d, np.float64)
+                                      for d in drift)
+                    drift_cos = float(cos_np[established].mean())
+                    drift_rel = float(rel_np[established].mean())
+
+            t_step = now
             executed, skipped = self._step_accounting(pool, scores, rows)
             now += metrics_lib.step_cost(executed, self.n_slots,
                                          self.modules_per_slot)
             met.record_step(now, len(active), sched.queue_depth(),
-                            executed, skipped, len(active))
+                            executed, skipped, len(active),
+                            drift_rel=drift_rel, drift_cos=drift_cos)
+            if tracer is not None:
+                args = {"n_active": len(active),
+                        "executed": executed, "skipped": skipped}
+                if drift_rel is not None:
+                    args["drift_rel_l2"] = drift_rel
+                tracer.complete("decode_step", svc_us(t_step),
+                                svc_us(now - t_step),
+                                pid=obs_trace.PID_SERVICE, cat="serve",
+                                args=args)
+                tracer.counter("pool", {"active": len(active),
+                                        "queue_depth": sched.queue_depth()},
+                               ts_us=svc_us(now), pid=obs_trace.PID_SERVICE)
 
             for i in active:
                 pool.advance(i, nxt[i])
                 s = pool.slots[i]
                 if s.produced == 1:
                     met.record_first_token(s.req.rid, now)
+                    if tracer is not None:
+                        tracer.instant("first_token", ts_us=svc_us(now),
+                                       pid=obs_trace.PID_SERVICE,
+                                       cat="serve", args={"rid": s.req.rid})
                 if (pool.should_evict(i)
                         or (self.eos_id is not None
                             and int(nxt[i]) == self.eos_id)):
@@ -446,6 +511,12 @@ class ContinuousBatchingEngine:
                         [np.asarray(s.req.prompt, np.int32),
                          np.asarray(s.tokens, np.int32)])
                     met.record_completion(s.req.rid, now, s.produced)
+                    if tracer is not None:
+                        tracer.instant("completed", ts_us=svc_us(now),
+                                       pid=obs_trace.PID_SERVICE,
+                                       cat="serve",
+                                       args={"rid": s.req.rid,
+                                             "n_out": s.produced})
                     pool.evict(i)
 
         return ServingResult(outputs, met)

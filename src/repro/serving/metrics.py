@@ -29,6 +29,10 @@ from repro.configs.base import ModelConfig
 STEP_OVERHEAD = 0.2     # dispatch / collectives / sampling floor
 MODULE_COST = 0.8       # the gated-module compute the lazy plan can remove
 
+# goodput SLO: a completed request only counts toward goodput if its
+# end-to-end latency stayed within this many virtual seconds
+DEFAULT_SLO_LATENCY_S = 10.0
+
 
 def attn_like_mask(cfg: ModelConfig, *,
                    window_override: Optional[int] = None) -> np.ndarray:
@@ -76,6 +80,8 @@ class ServingMetrics:
         self._skipped = 0.0
         self._tokens_out = 0
         self._t_end = 0.0
+        self._drift_rel: List[float] = []
+        self._drift_cos: List[float] = []
 
     # ------------------------------------------------------------ recording
     def record_admit(self, rid: int, arrival: float, now: float,
@@ -87,7 +93,13 @@ class ServingMetrics:
 
     def record_step(self, now: float, n_active: int, queue_depth: int,
                     executed_calls: float, skipped_calls: float,
-                    tokens_out: int) -> None:
+                    tokens_out: int,
+                    drift_rel: Optional[float] = None,
+                    drift_cos: Optional[float] = None) -> None:
+        """``drift_rel``/``drift_cos`` are the step's mean cached-vs-fresh
+        lazy-cache drift over established active slots (repro.obs
+        slot_cache_drift), recorded only when the engine runs with
+        telemetry on AND the step had any established slot."""
         self.steps.append({"t": now, "n_active": n_active,
                            "queue_depth": queue_depth,
                            "executed": executed_calls,
@@ -97,12 +109,24 @@ class ServingMetrics:
         self._skipped += skipped_calls
         self._tokens_out += tokens_out
         self._t_end = max(self._t_end, now)
+        if drift_rel is not None:
+            self._drift_rel.append(float(drift_rel))
+        if drift_cos is not None:
+            self._drift_cos.append(float(drift_cos))
 
     def record_first_token(self, rid: int, now: float) -> None:
+        if rid not in self.requests:
+            raise KeyError(
+                f"record_first_token: request {rid} was never admitted "
+                "(record_admit must precede first-token recording)")
         if self.requests[rid]["first_token"] is None:
             self.requests[rid]["first_token"] = now
 
     def record_completion(self, rid: int, now: float, n_out: int) -> None:
+        if rid not in self.requests:
+            raise KeyError(
+                f"record_completion: request {rid} was never admitted "
+                "(record_admit must precede completion recording)")
         self.requests[rid]["done"] = now
         self.requests[rid]["n_out"] = n_out
         self._t_end = max(self._t_end, now)
@@ -112,31 +136,47 @@ class ServingMetrics:
         total = self._executed + self._skipped
         return float(self._skipped / total) if total else 0.0
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self, *,
+                slo_latency_s: float = DEFAULT_SLO_LATENCY_S
+                ) -> Dict[str, float]:
+        """Empty distributions report NaN, never a fabricated 0.0: a run
+        with zero completed requests has no latency/TTFT percentiles, and a
+        0.0 placeholder reads as an impossibly perfect run downstream
+        (regression gates compare it as real data).  NaN is the honest
+        missing value — json.dump emits it, and check_regression treats a
+        NaN on either side as "metric absent", not a regression."""
         done = [r for r in self.requests.values() if r["done"] is not None]
         t0 = min((r["arrival"] for r in self.requests.values()), default=0.0)
         span = max(self._t_end - t0, 1e-9)
-        lat = np.array([r["done"] - r["arrival"] for r in done]) \
-            if done else np.zeros(1)
+        lat = np.array([r["done"] - r["arrival"] for r in done])
         ttft = np.array([r["first_token"] - r["arrival"] for r in done
                          if r["first_token"] is not None])
-        if ttft.size == 0:
-            ttft = np.zeros(1)
-        qd = np.array([s["queue_depth"] for s in self.steps]) \
-            if self.steps else np.zeros(1)
-        act = np.array([s["n_active"] for s in self.steps]) \
-            if self.steps else np.zeros(1)
+        qd = np.array([s["queue_depth"] for s in self.steps])
+        act = np.array([s["n_active"] for s in self.steps])
+
+        def pct(a, q):
+            return float(np.percentile(a, q)) if a.size else float("nan")
+
+        def mean(a):
+            return float(a.mean()) if len(a) else float("nan")
+
+        within_slo = sum(1 for r in done
+                         if r["done"] - r["arrival"] <= slo_latency_s)
         return {
             "n_requests": float(len(done)),
             "n_steps": float(len(self.steps)),
             "virtual_time_s": float(span),
             "requests_per_s": float(len(done) / span),
+            "goodput_per_s": float(within_slo / span),
+            "slo_latency_s": float(slo_latency_s),
             "tokens_per_s": float(self._tokens_out / span),
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
-            "ttft_p50_s": float(np.percentile(ttft, 50)),
-            "ttft_p95_s": float(np.percentile(ttft, 95)),
+            "latency_p50_s": pct(lat, 50),
+            "latency_p95_s": pct(lat, 95),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p95_s": pct(ttft, 95),
             "realized_lazy_ratio": self.realized_lazy_ratio(),
-            "mean_queue_depth": float(qd.mean()),
-            "mean_active_slots": float(act.mean()),
+            "mean_queue_depth": mean(qd),
+            "mean_active_slots": mean(act),
+            "drift_rel_l2_mean": mean(np.array(self._drift_rel)),
+            "drift_cos_mean": mean(np.array(self._drift_cos)),
         }

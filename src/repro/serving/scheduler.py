@@ -29,7 +29,8 @@ class Scheduler:
                  cost_budget: Optional[float] = None,
                  batch_synchronous: bool = False,
                  step_overhead: float = metrics_lib.STEP_OVERHEAD,
-                 module_cost: float = metrics_lib.MODULE_COST):
+                 module_cost: float = metrics_lib.MODULE_COST,
+                 tracer=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.n_slots = n_slots
@@ -37,6 +38,9 @@ class Scheduler:
         self.batch_synchronous = batch_synchronous
         self.step_overhead = step_overhead
         self.module_cost = module_cost
+        # optional repro.obs tracer: admission decisions land as instant
+        # events on the virtual service clock track
+        self.tracer = tracer
         self.pending: deque = deque()
 
     # ------------------------------------------------------------ queue ops
@@ -80,7 +84,26 @@ class Scheduler:
             if (self.cost_budget is not None and ratios
                     and self.estimate_step_cost(ratios + [new_skip_ratio])
                     > self.cost_budget + 1e-9):
+                if self.tracer is not None:
+                    from repro.obs import trace as trace_lib
+                    self.tracer.instant(
+                        "admission_deferred",
+                        ts_us=trace_lib.Tracer.service_us(now),
+                        pid=trace_lib.PID_SERVICE, cat="sched",
+                        args={"rid": self.pending[0].rid,
+                              "queue_depth": len(self.pending),
+                              "est_cost": self.estimate_step_cost(
+                                  ratios + [new_skip_ratio]),
+                              "cost_budget": self.cost_budget})
                 break
-            out.append(self.pending.popleft())
+            req = self.pending.popleft()
+            out.append(req)
             ratios.append(new_skip_ratio)
+            if self.tracer is not None:
+                from repro.obs import trace as trace_lib
+                self.tracer.instant(
+                    "admitted", ts_us=trace_lib.Tracer.service_us(now),
+                    pid=trace_lib.PID_SERVICE, cat="sched",
+                    args={"rid": req.rid, "arrival": req.arrival,
+                          "queue_depth": len(self.pending)})
         return out

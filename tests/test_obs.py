@@ -1,0 +1,457 @@
+"""repro.obs observability layer: telemetry bit-exactness for every
+policy, the telemetry-off single-compile contract, Chrome-trace schema
+validation, ServingMetrics NaN/goodput semantics, engine-side drift, and
+the launch/obs.py report assembled in-process."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import cache as cache_lib
+from repro.cache import calibrate as calibrate_lib
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.core import lazy as lazy_lib
+from repro.data.synthetic import LatentImageDataset, request_trace
+from repro.launch import obs as obs_cli
+from repro.models import dit as dit_lib
+from repro.models import transformer as tf
+from repro.obs import report as report_lib
+from repro.obs import telemetry as telemetry_lib
+from repro.obs import trace as trace_lib
+from repro.sampling import ddim, trajectory
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import ServingMetrics
+from repro.train import optim, trainer
+
+T, L, M = 5, 3, 2       # sampling steps / layers / plan columns
+
+
+@pytest.fixture(scope="module")
+def setup():
+    """Briefly pretrained tiny DiT (same shape as test_trajectory's): on
+    an untrained adaLN-zero model module outputs never reach the sample,
+    so every skip/drift telemetry check would be vacuous."""
+    cfg = ModelConfig(name="dit_obs", family="dit", n_layers=L, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, dit_patch=2,
+                      dit_input_size=8, dit_in_channels=4, dit_n_classes=10,
+                      rope_type="none", dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    sched = ddim.linear_schedule(100)
+    it = LatentImageDataset(cfg, seed=0).batches(8, seed=1)
+    opt = optim.adamw_init(params)
+    key = jax.random.PRNGKey(42)
+    for _ in range(12):
+        x0, y = next(it)
+        key, k = jax.random.split(key)
+        params, opt, _ = trainer.diffusion_train_step(
+            params, opt, cfg, sched, jnp.asarray(x0), jnp.asarray(y), k,
+            lr=2e-3)
+    return cfg, params, sched
+
+
+def synth_dit_artifact(n_steps=T, n_layers=L, seed=0):
+    rng = np.random.default_rng(seed)
+    rel = rng.uniform(0.01, 1.0, (n_steps, n_layers, M))
+    rel[0] = np.inf
+    return calibrate_lib.CalibrationArtifact(
+        kind="dit", arch="dit_obs", n_steps=n_steps, n_layers=n_layers,
+        modules=("attn", "ffn"), rel_err=rel)
+
+
+def make_policy(name):
+    if name == "none":
+        return cache_lib.get_policy("none")
+    if name == "stride":
+        return cache_lib.get_policy("stride", stride=2)
+    if name == "lazy_gate":
+        return cache_lib.get_policy("lazy_gate", threshold=0.1)
+    if name == "smoothcache":
+        art = synth_dit_artifact()
+        return cache_lib.get_policy(
+            "smoothcache", calibration=art,
+            error_threshold=art.quantile_threshold(0.5))
+    if name == "static_router":
+        return cache_lib.get_policy("static_router", ratio=0.5,
+                                    calibration=synth_dit_artifact(seed=1))
+    if name == "plan":
+        return cache_lib.get_policy(
+            "plan", plan=lazy_lib.uniform_plan(T, L, M, 0.5, seed=0).skip)
+    if name == "delta":
+        return cache_lib.get_policy("delta", ratio=0.5,
+                                    calibration=synth_dit_artifact(seed=2))
+    if name == "learned":
+        rng = np.random.default_rng(3)
+        art = cache_lib.distill_scores(
+            "lazy_gate", "dit_obs", rng.uniform(0, 1, (T, L, M)),
+            target_ratio=0.4)
+        return cache_lib.get_policy("learned", artifact=art)
+    raise ValueError(name)
+
+
+ALL_POLICIES = ("none", "stride", "lazy_gate", "smoothcache",
+                "static_router", "plan", "delta", "learned")
+
+
+def _lm_cfg(n_layers=2, d_model=32):
+    return ModelConfig(
+        name="obs-serve", n_layers=n_layers, d_model=d_model, n_heads=4,
+        n_kv_heads=2, head_dim=d_model // 4, d_ff=2 * d_model, vocab_size=97,
+        dtype="float32", lazy=LazyConfig(enabled=True, mode="plan"))
+
+
+# ---------------------------------------------------------------------------
+# trajectory telemetry: bit-exactness + counter semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_telemetry_is_bit_exact_and_well_formed(setup, name):
+    """Telemetry on vs off: identical output bits, identical realized
+    skip ratio, and a well-formed drained pytree — executed + skipped
+    partition every (step, layer, module) cell, drift is finite, and the
+    counters reproduce the executor's own skip accounting."""
+    cfg, params, sched = setup
+    kw = dict(key=jax.random.PRNGKey(3), labels=jnp.array([0, 1]),
+              n_steps=T, cfg_scale=1.5)
+    off, aux_off = trajectory.sample_trajectory(
+        params, cfg, sched, policy=make_policy(name), **kw)
+    on, aux_on = trajectory.sample_trajectory(
+        params, cfg, sched, policy=make_policy(name), telemetry=True, **kw)
+    assert np.array_equal(np.asarray(off), np.asarray(on)), \
+        f"{name}: telemetry changed the sampled bits"
+    assert "telemetry" not in aux_off
+    tele = aux_on["telemetry"]
+    assert set(tele) == set(telemetry_lib.COUNTER_KEYS)
+    for key in telemetry_lib.COUNTER_KEYS:
+        assert tele[key].shape == (T, L, M), f"{name}/{key}"
+        assert np.all(np.isfinite(tele[key])), f"{name}/{key} not finite"
+    np.testing.assert_allclose(tele["executed"] + tele["skipped"],
+                               np.ones((T, L, M)), atol=1e-6)
+    # the counters must agree with the executor's n_skipped accounting
+    summ = telemetry_lib.summarize(tele)
+    assert summ["realized_skip_ratio"] == \
+        pytest.approx(aux_on["realized_skip_ratio"], abs=1e-6)
+    assert aux_on["realized_skip_ratio"] == \
+        pytest.approx(aux_off["realized_skip_ratio"], abs=1e-9)
+    # step 0 always primes the cache: nothing skipped, drift pinned
+    assert float(tele["skipped"][0].sum()) == 0.0
+    np.testing.assert_allclose(tele["drift_cos"][0], 1.0, atol=0)
+    np.testing.assert_allclose(tele["drift_rel_l2"][0], 0.0, atol=0)
+
+
+def test_plan_policy_telemetry_matches_device_plan(setup):
+    """For a schedule policy the skipped counter IS the plan: device_plan
+    rows with the first step zeroed (it primes the cache)."""
+    cfg, params, sched = setup
+    pol = make_policy("static_router")
+    _, aux = trajectory.sample_trajectory(
+        params, cfg, sched, key=jax.random.PRNGKey(3),
+        labels=jnp.array([0, 1]), n_steps=T, cfg_scale=1.5, policy=pol,
+        telemetry=True)
+    expect = np.asarray(pol.device_plan(T, L, M), np.float32)
+    expect[0] = 0.0
+    np.testing.assert_array_equal(aux["telemetry"]["skipped"], expect)
+
+
+def test_none_policy_drift_is_measurable_and_nonzero(setup):
+    """The `none` baseline skips nothing but still reports consecutive-
+    step drift (the cache is threaded write-only) — the reference curve
+    the lazy policies are judged against."""
+    cfg, params, sched = setup
+    _, aux = trajectory.sample_trajectory(
+        params, cfg, sched, key=jax.random.PRNGKey(3),
+        labels=jnp.array([0, 1]), n_steps=T, cfg_scale=1.5,
+        policy=make_policy("none"), telemetry=True)
+    tele = aux["telemetry"]
+    assert float(tele["skipped"].sum()) == 0.0
+    rel_after_first = np.asarray(tele["drift_rel_l2"][1:])
+    assert np.all(np.isfinite(rel_after_first))
+    assert float(rel_after_first.mean()) > 0.0, \
+        "none-policy drift is identically zero: the cache is not advancing"
+
+
+def test_telemetry_off_is_the_default_sampler_and_compiles_nothing(setup):
+    """The single-compile contract with telemetry off: the default build
+    IS the telemetry=False build (same cached executable), a warm sample
+    triggers zero new backend compiles, and the telemetry=True build is a
+    distinct executable that never evicts it."""
+    from benchmarks.bench_trajectory import compile_counter
+    cfg, params, sched = setup
+    pol = make_policy("stride")
+    trajectory.build_sampler.cache_clear()
+    default = trajectory.build_sampler(cfg, pol, T, 1.5)
+    assert trajectory.build_sampler(cfg, pol, T, 1.5,
+                                    telemetry=False) is default
+    assert trajectory.build_sampler(cfg, pol, T, 1.5,
+                                    telemetry=True) is not default
+
+    kw = dict(key=jax.random.PRNGKey(1), labels=jnp.array([0, 1]),
+              n_steps=T, cfg_scale=1.5, policy=pol)
+    trajectory.sample_trajectory(params, cfg, sched, **kw)          # warm
+    with compile_counter() as c:
+        trajectory.sample_trajectory(params, cfg, sched, **kw)
+    assert c["n"] == 0, \
+        f"warm telemetry-off sample compiled {c['n']} more times"
+    # toggling telemetry on and back off reuses both executables
+    trajectory.sample_trajectory(params, cfg, sched, telemetry=True, **kw)
+    with compile_counter() as c:
+        trajectory.sample_trajectory(params, cfg, sched, **kw)
+        trajectory.sample_trajectory(params, cfg, sched, telemetry=True,
+                                     **kw)
+    assert c["n"] == 0, "toggling telemetry retraced a cached sampler"
+
+
+def test_telemetry_off_trace_carries_no_telemetry_ops(setup):
+    """The HLO contract, checked at the jaxpr level: the telemetry-off
+    trace contains none of telemetry's machinery (no drift barrier, a
+    strictly smaller program) — the None carry entry contributes zero
+    pytree leaves, so the off-build traces exactly as if the telemetry
+    code path did not exist."""
+    cfg, params, sched = setup
+    pol = make_policy("static_router")
+
+    def jaxpr_of(telemetry):
+        fn = trajectory.build_sampler(cfg, pol, T, 1.5, telemetry=telemetry)
+        args = trajectory.prepare_inputs(
+            cfg, sched, pol, key=jax.random.PRNGKey(0),
+            labels=jnp.array([0, 1]), n_steps=T)
+        return str(jax.make_jaxpr(fn)(params, *args))
+
+    off = jaxpr_of(False)
+    on = jaxpr_of(True)
+    # remat emits barriers of its own, so compare counts: only the ON
+    # build adds the telemetry drift barrier on top of the baseline's
+    assert on.count("optimization_barrier") > off.count(
+        "optimization_barrier"), "telemetry added no drift barrier"
+    tele_shape = f"f32[{T},{L},{M}]"
+    assert tele_shape not in off, \
+        f"telemetry-off trace carries a {tele_shape} counter buffer"
+    assert tele_shape in on
+    assert len(on) > len(off)
+
+
+# ---------------------------------------------------------------------------
+# structured tracing
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_chrome_schema_and_roundtrip(tmp_path):
+    tr = trace_lib.Tracer()
+    with tr.span("outer", cat="test", args={"k": 1}):
+        tr.instant("hit", args={"rid": 7})
+    tr.counter("pool", {"active": 2.0, "queued": 1.0})
+    tr.complete("svc", trace_lib.Tracer.service_us(1.5),
+                trace_lib.Tracer.service_us(0.25),
+                pid=trace_lib.PID_SERVICE, cat="serve")
+    events = tr.sorted_events()
+    trace_lib.validate_chrome_trace(events)        # must not raise
+    # process-name metadata for all three fixed tracks
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {e["pid"] for e in meta} == {trace_lib.PID_HOST,
+                                        trace_lib.PID_JAX,
+                                        trace_lib.PID_SERVICE}
+    # the service-clock event landed on the service track at 1.5e6 µs
+    svc = next(e for e in events if e["name"] == "svc")
+    assert svc["pid"] == trace_lib.PID_SERVICE and svc["ts"] == 1.5e6
+
+    chrome = tr.to_chrome(str(tmp_path / "t.json"))
+    with open(chrome) as f:
+        payload = json.load(f)
+    assert payload["traceEvents"] == events
+    jsonl = tr.to_jsonl(str(tmp_path / "t.jsonl"))
+    with open(jsonl) as f:
+        lines = [json.loads(ln) for ln in f]
+    assert lines == events
+
+
+def test_tracer_captures_jax_compile_events():
+    tr = trace_lib.Tracer()
+    with tr.capture_compile_events():
+        jax.jit(lambda x: x * 2.0 + 1.0)(jnp.arange(3.0))
+    names = {e["name"] for e in tr.compile_events()}
+    assert any(n.startswith(trace_lib.COMPILE_EVENT_PREFIXES)
+               for n in names), f"no compile events captured: {names}"
+    trace_lib.validate_chrome_trace(tr.sorted_events())
+    # the listener is unregistered on exit: a fresh compile adds nothing
+    before = len(tr.compile_events())
+    jax.jit(lambda x: x - 3.0)(jnp.arange(4.0))
+    assert len(tr.compile_events()) == before
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ({"ph": "X", "pid": 1, "tid": 0, "ts": 0.0, "dur": 1.0}, "name"),
+    ({"ph": "Q", "name": "x", "pid": 1, "tid": 0, "ts": 0.0}, "phase"),
+    ({"ph": "i", "name": "x", "pid": 1, "tid": 0, "ts": -5.0}, "ts"),
+    ({"ph": "X", "name": "x", "pid": 1, "tid": 0, "ts": 0.0, "dur": -1.0},
+     "dur"),
+], ids=["missing-name", "unknown-phase", "negative-ts", "negative-dur"])
+def test_validate_chrome_trace_rejects(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        trace_lib.validate_chrome_trace([bad])
+
+
+def test_validate_chrome_trace_rejects_backwards_track():
+    events = [{"ph": "i", "name": "a", "pid": 1, "tid": 0, "ts": 10.0},
+              {"ph": "i", "name": "b", "pid": 1, "tid": 0, "ts": 5.0}]
+    with pytest.raises(ValueError, match="backwards"):
+        trace_lib.validate_chrome_trace(events)
+    # same timestamps on DIFFERENT tracks are fine
+    events[1]["pid"] = 2
+    trace_lib.validate_chrome_trace(events)
+
+
+# ---------------------------------------------------------------------------
+# serving metrics: NaN semantics, rid guards, goodput, drift
+# ---------------------------------------------------------------------------
+
+
+def test_empty_summary_reports_nan_not_zero():
+    s = ServingMetrics(n_slots=2, modules_per_slot=4).summary()
+    for key in ("latency_p50_s", "latency_p95_s", "ttft_p50_s",
+                "ttft_p95_s", "mean_queue_depth", "mean_active_slots",
+                "drift_rel_l2_mean", "drift_cos_mean"):
+        assert math.isnan(s[key]), f"{key} fabricated {s[key]} for no data"
+    assert s["n_requests"] == 0.0 and s["requests_per_s"] == 0.0
+
+
+def test_record_guards_reject_unadmitted_rids():
+    met = ServingMetrics(n_slots=2, modules_per_slot=4)
+    with pytest.raises(KeyError, match="never admitted"):
+        met.record_first_token(99, 1.0)
+    with pytest.raises(KeyError, match="never admitted"):
+        met.record_completion(99, 1.0, 3)
+    met.record_admit(99, arrival=0.0, now=0.5, prompt_len=4)
+    met.record_first_token(99, 1.0)              # now fine
+    met.record_completion(99, 2.0, 3)
+
+
+def test_goodput_counts_only_within_slo():
+    met = ServingMetrics(n_slots=2, modules_per_slot=4)
+    for rid, (arrival, done) in enumerate([(0.0, 2.0), (0.0, 9.0)]):
+        met.record_admit(rid, arrival=arrival, now=arrival, prompt_len=4)
+        met.record_first_token(rid, arrival + 1.0)
+        met.record_completion(rid, done, 2)
+    s = met.summary(slo_latency_s=5.0)
+    span = s["virtual_time_s"]
+    assert s["requests_per_s"] == pytest.approx(2 / span)
+    assert s["goodput_per_s"] == pytest.approx(1 / span)   # rid 1 misses SLO
+    assert s["slo_latency_s"] == 5.0
+    # within a loose SLO both complete in time: goodput == throughput
+    loose = met.summary(slo_latency_s=100.0)
+    assert loose["goodput_per_s"] == loose["requests_per_s"]
+
+
+def test_step_drift_recording_feeds_summary_means():
+    met = ServingMetrics(n_slots=2, modules_per_slot=4)
+    met.record_step(1.0, 2, 0, 8.0, 0.0, 2)                # no drift data
+    met.record_step(2.0, 2, 0, 8.0, 0.0, 2, drift_rel=0.4, drift_cos=0.9)
+    met.record_step(3.0, 2, 0, 8.0, 0.0, 2, drift_rel=0.2, drift_cos=0.7)
+    s = met.summary()
+    assert s["drift_rel_l2_mean"] == pytest.approx(0.3)
+    assert s["drift_cos_mean"] == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# serving engine: telemetry parity + drift + service-clock trace
+# ---------------------------------------------------------------------------
+
+
+def test_engine_telemetry_preserves_tokens_and_measures_drift():
+    cfg = _lm_cfg()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    trace = request_trace(6, cfg.vocab_size, seed=0, mean_interarrival=0.3,
+                          short_prompt=(4, 4), long_prompt=(10, 10),
+                          short_output=(3, 6), long_output=(8, 14))
+    max_len = max(len(r.prompt) + r.max_new for r in trace) + 4
+    plan = lazy_lib.uniform_plan(16, cfg.n_layers, 2, 0.4, seed=1)
+
+    def run(telemetry, tracer=None):
+        eng = ContinuousBatchingEngine(
+            cfg, params, n_slots=2, max_len=max_len, lazy_mode="plan",
+            plan=plan, telemetry=telemetry, tracer=tracer)
+        return eng.run(trace)
+
+    off = run(False)
+    tracer = trace_lib.Tracer()
+    on = run(True, tracer)
+    assert set(off.outputs) == set(on.outputs)
+    for rid in off.outputs:
+        np.testing.assert_array_equal(
+            off.outputs[rid], on.outputs[rid],
+            err_msg=f"telemetry changed served tokens for rid={rid}")
+    s_on, s_off = on.metrics.summary(), off.metrics.summary()
+    assert math.isnan(s_off["drift_rel_l2_mean"])
+    assert math.isfinite(s_on["drift_rel_l2_mean"])
+    assert s_on["drift_rel_l2_mean"] > 0.0
+    assert math.isfinite(s_on["drift_cos_mean"])
+    # the engine narrated the run on the service clock
+    names = {e["name"] for e in tracer.events}
+    assert {"prefill", "decode_step", "first_token", "completed"} <= names
+    trace_lib.validate_chrome_trace(tracer.sorted_events())
+
+
+# ---------------------------------------------------------------------------
+# the assembled report (launch/obs.py in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_run_report_covers_required_policies(setup, tmp_path):
+    """The acceptance run: one report covering none / smoothcache /
+    static_router / learned with heatmaps, drift curves and a compile
+    timeline, artifacts written and schema-valid."""
+    cfg, params, sched = setup
+    policies = ("none", "smoothcache", "static_router", "learned")
+    report, tracer, paths = obs_cli.run_report(
+        policies=policies, n_steps=T, batch=2, seed=0, lazy_ratio=0.4,
+        serve=True, serve_requests=4, n_slots=2,
+        cfg=cfg, params=params,
+        serve_cfg=_lm_cfg(),
+        serve_params=tf.init_lm(jax.random.PRNGKey(1), _lm_cfg()),
+        out_dir=str(tmp_path))
+
+    assert report["schema"] == report_lib.SCHEMA
+    metrics = report["metrics"]
+    for name in policies:
+        heat = metrics["skip_heatmap"][name]
+        assert np.asarray(heat["heatmap"]).shape == (T, L)
+        drift = metrics["drift_by_step"][name]
+        assert len(drift["rel_l2"]) == T
+        assert all(math.isfinite(v) for v in drift["rel_l2"])
+        assert all(math.isfinite(v) for v in drift["cosine"])
+    # the lazy policies actually skipped; the baseline did not
+    assert metrics["skip_heatmap"]["none"]["realized_skip_ratio"] == 0.0
+    assert metrics["skip_heatmap"]["static_router"]["realized_skip_ratio"] \
+        > 0.1
+    assert metrics["compile_timeline"], "no compile events in the timeline"
+    assert metrics["service_percentiles"]["n_steps"] > 0
+    assert math.isfinite(
+        metrics["service_percentiles"]["drift_rel_l2_mean"])
+    assert set(metrics["policies"]) == set(policies)
+
+    # the written artifacts parse and the trace validates standalone
+    with open(paths["report"]) as f:
+        on_disk = json.load(f)
+    assert on_disk["schema"] == report_lib.SCHEMA
+    with open(paths["trace"]) as f:
+        trace_lib.validate_chrome_trace(json.load(f)["traceEvents"])
+    with open(paths["events"]) as f:
+        assert len(f.readlines()) == len(tracer.sorted_events())
+
+
+def test_report_registry_is_complete():
+    assert {"skip_heatmap", "drift_by_step", "gate_scores", "policies",
+            "compile_timeline", "service_percentiles"} \
+        <= set(report_lib.available_metrics())
+
+
+def test_verify_report_rejects_nonfinite_drift():
+    bad = {"metrics": {"skip_heatmap": {}, "drift_by_step": {
+        "p": {"rel_l2": [0.1, float("nan")], "cosine": [1.0, 1.0]}}}}
+    with pytest.raises(ValueError, match="non-finite drift"):
+        obs_cli.verify_report(bad)
+    with pytest.raises(ValueError, match="missing metric"):
+        obs_cli.verify_report({"metrics": {}})
