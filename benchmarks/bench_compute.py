@@ -52,7 +52,7 @@ def run() -> list:
         jitted = jax.jit(step)
         compiled = jitted.lower(x, cache).compile()
         mod = hlo_lib.analyze_module(compiled.as_text())
-        us = time_fn(lambda a, b: jitted(a, b)[0], x, cache)
+        us, _, _ = time_fn(lambda a, b: jitted(a, b)[0], x, cache)
         rows.append((f"plan_ratio{int(ratio*100)}",
                      f"us_per_call={us:.0f}",
                      f"hlo_gflops={mod['flops']/1e9:.3f}",

@@ -26,8 +26,8 @@ def run() -> list:
     got = lazy_gate_pooled(x, sc, sh, w)
     want = lazy_gate_pooled_ref(x, sc, sh, w)
     err = float(jnp.max(jnp.abs(got - want)))
-    us = time_fn(lambda a: lazy_gate_pooled(a, sc, sh, w), x)
-    us_ref = time_fn(lambda a: lazy_gate_pooled_ref(a, sc, sh, w), x)
+    us, _, _ = time_fn(lambda a: lazy_gate_pooled(a, sc, sh, w), x)
+    us_ref, _, _ = time_fn(lambda a: lazy_gate_pooled_ref(a, sc, sh, w), x)
     rows.append(("lazy_gate", f"us_per_call={us:.0f}",
                  f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))
 
@@ -39,8 +39,8 @@ def run() -> list:
     got = flash_attention(q, k, v, block_q=128, block_k=128)
     want = attention_ref(q, k, v, causal=True, window=0, softcap=0.0)
     err = float(jnp.max(jnp.abs(got - want)))
-    us = time_fn(lambda a: flash_attention(a, k, v), q)
-    us_ref = time_fn(lambda a: attention_ref(a, k, v, causal=True, window=0,
+    us, _, _ = time_fn(lambda a: flash_attention(a, k, v), q)
+    us_ref, _, _ = time_fn(lambda a: attention_ref(a, k, v, causal=True, window=0,
                                              softcap=0.0), q)
     rows.append(("flash_attention", f"us_per_call={us:.0f}",
                  f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))
@@ -55,8 +55,8 @@ def run() -> list:
     got = ssd(x2, dt, A, Bm, Cm, chunk=64, use_pallas=True)
     want = ssd_naive_ref(x2, dt, A, Bm, Cm)
     err = float(jnp.max(jnp.abs(got - want)))
-    us = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64), x2)
-    us_ref = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64,
+    us, _, _ = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64), x2)
+    us_ref, _, _ = time_fn(lambda a: ssd(a, dt, A, Bm, Cm, chunk=64,
                                    use_pallas=False), x2)
     rows.append(("ssm_scan", f"us_per_call={us:.0f}",
                  f"ref_us={us_ref:.0f}", f"max_err={err:.2e}"))

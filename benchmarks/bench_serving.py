@@ -114,11 +114,22 @@ def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
             "realized_lazy_ratio": s["realized_lazy_ratio"],
             "drift_rel_l2_mean": s["drift_rel_l2_mean"],
             "drift_cos_mean": s["drift_cos_mean"],
+            # phase decomposition: queue + prefill + decode == latency
+            # per request (ServingMetrics.record_admit)
+            "queue_p50_s": s["queue_p50_s"],
+            "queue_p95_s": s["queue_p95_s"],
+            "prefill_p50_s": s["prefill_p50_s"],
+            "prefill_p95_s": s["prefill_p95_s"],
+            "decode_p50_s": s["decode_p50_s"],
+            "decode_p95_s": s["decode_p95_s"],
         }
         rows.append(("serving", "policy", name,
                      f"goodput={s['goodput_per_s']:.3f}/s",
                      f"drift_rel_l2={s['drift_rel_l2_mean']:.4f}",
-                     f"realized_lazy={s['realized_lazy_ratio']:.2f}"))
+                     f"realized_lazy={s['realized_lazy_ratio']:.2f}",
+                     f"queue_p50={s['queue_p50_s']:.2f}",
+                     f"prefill_p50={s['prefill_p50_s']:.2f}",
+                     f"decode_p50={s['decode_p50_s']:.2f}"))
 
     payload = {
         "schema": SCHEMA,

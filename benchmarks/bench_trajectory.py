@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from contextlib import contextmanager
 
 import jax
@@ -37,12 +38,14 @@ from repro import cache as cache_lib
 from repro.cache import calibrate as calibrate_lib
 from repro.dist import ctx as dist_ctx
 from repro.dist import hlo as hlo_lib
+from repro.obs import profile as profile_lib
 from repro.sampling import ddim, trajectory
 
 MESH_SIZES = (1, 8)
 MIN_MODELED_SCALING = 4.0     # acceptance floor for data=1 -> data=8
 
 SCHEMA = "repro.bench.trajectory/v1"
+PERF_SCHEMA = "repro.bench.perf/v1"
 
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 
@@ -65,9 +68,10 @@ def compile_counter():
         _mon._unregister_event_duration_listener_by_callback(_listener)
 
 
-def _median_ms(fn) -> float:
-    """Median wall-clock ms/call via the shared benchmark timer."""
-    return time_fn(fn, iters=3, warmup=1) / 1e3
+def _measure_ms(fn):
+    """(median_ms, mad_ms, iters_kept) via the shared benchmark timer."""
+    us, mad_us, iters = time_fn(fn, iters=3, warmup=1)
+    return us / 1e3, mad_us / 1e3, iters
 
 
 def _policies(cfg, params, sched, labels, n_steps, *, with_smoothcache):
@@ -115,7 +119,7 @@ def _mesh_scaling(cfg, params, sched, n_steps: int) -> dict:
                 dist_ctx.mesh(data=n_data):
             x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
             jax.block_until_ready(x)
-            wall_ms = _median_ms(lambda: jax.block_until_ready(
+            wall_ms, _, _ = _measure_ms(lambda: jax.block_until_ready(
                 trajectory.sample_trajectory(params, cfg, sched, **kw)[0]))
             fn = trajectory.build_sampler(cfg, pol, n_steps, 1.5,
                                           batch=batch)
@@ -179,8 +183,9 @@ def run_bench(*, smoke: bool = False):
             x_host, _ = ddim.ddim_sample_reference(params, cfg, sched,
                                                    policy=pol, **kw)
             jax.block_until_ready(x_host)
-        host_ms = _median_ms(lambda: ddim.ddim_sample_reference(
-            params, cfg, sched, policy=pol, **kw)[0])
+        host_ms, host_mad_ms, host_iters = _measure_ms(
+            lambda: ddim.ddim_sample_reference(
+                params, cfg, sched, policy=pol, **kw)[0])
 
         # ---- fused: cold compile count + trace-cache probe + warm time
         trajectory.build_sampler.cache_clear()
@@ -189,8 +194,9 @@ def run_bench(*, smoke: bool = False):
                                                         policy=pol, **kw)
             jax.block_until_ready(x_fused)
         fn = trajectory.build_sampler(cfg, pol, n_steps, 1.5)
-        fused_ms = _median_ms(lambda: trajectory.sample_trajectory(
-            params, cfg, sched, policy=pol, **kw)[0])
+        fused_ms, fused_mad_ms, fused_iters = _measure_ms(
+            lambda: trajectory.sample_trajectory(
+                params, cfg, sched, policy=pol, **kw)[0])
         # the compile-once contract: warm fused samples compile NOTHING
         # (cold counts include incidental eager-op compiles shared with
         # whatever ran first in the process, so they are reported, not
@@ -213,12 +219,16 @@ def run_bench(*, smoke: bool = False):
             "bit_exact_vs_host": exact,
             "host": {"cold_backend_compiles": host_cold["n"],
                      "per_step_ms": round(host_ms / n_steps, 4),
-                     "total_ms": round(host_ms, 3)},
+                     "total_ms": round(host_ms, 3),
+                     "total_ms_mad": round(host_mad_ms, 3),
+                     "iters": host_iters},
             "fused": {"cold_backend_compiles": fused_cold["n"],
                       "warm_backend_compiles": fused_warm["n"],
                       "trace_cache_size": cache_size,
                       "per_step_ms": round(fused_ms / n_steps, 4),
-                      "total_ms": round(fused_ms, 3)},
+                      "total_ms": round(fused_ms, 3),
+                      "total_ms_mad": round(fused_mad_ms, 3),
+                      "iters": fused_iters},
             "fused_speedup": round(host_ms / max(fused_ms, 1e-9), 3),
         }
 
@@ -247,6 +257,51 @@ def run_bench(*, smoke: bool = False):
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
 
+    # ---- realized-performance artifact: wall medians + MAD noise channel
+    # wall_ms_median is machine-dependent (gated only against catastrophic
+    # regressions); speedup_vs_host is a same-run ratio and therefore the
+    # machine-independent gated signal (benchmarks/check_regression.py).
+    perf_policies = {}
+    for name, r in results.items():
+        f_ms, f_mad = r["fused"]["total_ms"], r["fused"]["total_ms_mad"]
+        h_ms, h_mad = r["host"]["total_ms"], r["host"]["total_ms_mad"]
+        speedup = h_ms / max(f_ms, 1e-9)
+        # first-order error propagation for the ratio of two medians
+        speedup_mad = speedup * (f_mad / max(f_ms, 1e-9)
+                                 + h_mad / max(h_ms, 1e-9))
+        perf_policies[name] = {
+            "wall_ms_median": f_ms,
+            "wall_ms_median_mad": f_mad,
+            "per_step_ms_median": r["fused"]["per_step_ms"],
+            "host_wall_ms_median": h_ms,
+            "host_wall_ms_median_mad": h_mad,
+            "speedup_vs_host": round(speedup, 4),
+            "speedup_vs_host_mad": round(speedup_mad, 4),
+            "iters": r["fused"]["iters"],
+        }
+    perf_payload = {
+        "schema": PERF_SCHEMA,
+        "smoke": smoke,
+        "arch": payload["arch"],
+        "n_steps": n_steps, "batch": batch,
+        "harness": "repro.obs.profile.measure (median + MAD, "
+                   "outlier-rejected, warmup-until-stable)",
+        "memory_watermarks": profile_lib.memory_watermarks(),
+        "policies": perf_policies,
+    }
+    perf_path = os.path.normpath(
+        os.path.join(ARTIFACTS, "PERF_trajectory.json"))
+    with open(perf_path, "w") as f:
+        json.dump(perf_payload, f, indent=1, sort_keys=True)
+    profile_lib.append_trend(
+        os.path.normpath(os.path.join(ARTIFACTS, "PERF_trajectory.jsonl")),
+        {"schema": PERF_SCHEMA, "unix_time": round(time.time(), 1),
+         "smoke": smoke, "n_steps": n_steps,
+         "policies": {n: {"wall_ms_median": p["wall_ms_median"],
+                          "wall_ms_median_mad": p["wall_ms_median_mad"],
+                          "speedup_vs_host": p["speedup_vs_host"]}
+                      for n, p in perf_policies.items()}})
+
     rows = []
     for name, r in sorted(results.items()):
         rows.append(("trajectory", name,
@@ -269,6 +324,7 @@ def run_bench(*, smoke: bool = False):
         rows.append(("trajectory", "mesh_scaling", "SKIPPED",
                      mesh_scaling["why"]))
     rows.append(("trajectory", "json", path))
+    rows.append(("trajectory", "perf_json", perf_path))
     return rows, payload
 
 

@@ -1,11 +1,21 @@
 """Benchmark regression gate (CI `bench-smoke` job).
 
-Compares the freshly produced ``artifacts/BENCH_*.json`` smoke artifacts
-against the committed baselines in ``benchmarks/baselines/`` and fails when a
-gated metric regresses by more than the tolerance.  Gated metrics are the
-machine-independent ones — realized skip ratios and compiled-FLOP savings are
-plan/HLO-derived, so a drop means a real behavior change, never runner noise;
-wall-clock and speedup numbers are deliberately NOT gated.
+Compares the freshly produced ``artifacts/BENCH_*.json`` /
+``artifacts/PERF_*.json`` smoke artifacts against the committed baselines in
+``benchmarks/baselines/`` and fails when a gated metric regresses by more
+than the tolerance.  Most gated metrics are the machine-independent ones —
+realized skip ratios and compiled-FLOP savings are plan/HLO-derived, so a
+drop means a real behavior change, never runner noise.
+
+Wall-clock joins the gate noise-aware (PERF_trajectory.json): each perf
+metric ships its MAD sibling (``<field>_mad``), and the tolerance for perf
+metrics widens by ``PERF_MAD_SIGMAS`` robust sigmas of combined baseline +
+current noise — a same-machine MAD-sized wobble passes, a structural
+slowdown does not.  ``speedup_vs_host`` is a same-run ratio and therefore
+machine-independent (gated at PERF_REL_TOLERANCE); the absolute
+``wall_ms_median`` is machine-DEPENDENT, so its floor is the catastrophic
+WALL_ABS_TOLERANCE — it exists to catch a fused executor silently falling
+back to per-step dispatch (~10x), not a slower runner.
 
 Tolerances live HERE, not in the workflow: CI invokes the script bare, so
 loosening a gate is a reviewed code change.
@@ -34,13 +44,31 @@ RELATIVE_DROP_TOLERANCE = 0.05
 ZERO_FLOOR = 1e-9
 
 # Metric names ending with one of these gate in the LOWER-is-better
-# direction (serving drift: staler served caches are worse).
-LOWER_IS_BETTER_SUFFIXES = ("drift_rel_l2_mean",)
+# direction (serving drift: staler served caches are worse; wall-clock:
+# slower is worse).
+LOWER_IS_BETTER_SUFFIXES = ("drift_rel_l2_mean", "wall_ms_median")
+
+# Perf metrics (repro.bench.perf payloads) use these relative floors
+# instead of RELATIVE_DROP_TOLERANCE, widened by the MAD noise channel.
+# speedup_vs_host is a ratio of two measurements from the SAME run on the
+# SAME machine, so it transfers across runners; wall_ms_median does not,
+# and its floor only catches catastrophic (~2x+) structural slowdowns.
+PERF_REL_TOLERANCE = 0.35
+WALL_ABS_TOLERANCE = 1.00
+
+# Noise widening: a perf metric's tolerance grows by this many robust
+# sigmas of (baseline MAD + current MAD) / baseline.
+PERF_MAD_SIGMAS = 4.0
+
+# Perf payload fields that gate (each also ships a `<field>_mad` sibling
+# feeding collect_noise).
+PERF_GATED_FIELDS = ("wall_ms_median", "speedup_vs_host")
 
 GATED_FILES = (
     "BENCH_trajectory.json",
     "BENCH_cache_policies.json",
     "BENCH_serving.json",
+    "PERF_trajectory.json",
 )
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -50,6 +78,17 @@ DEFAULT_CURRENT_DIR = REPO_ROOT / "artifacts"
 
 def is_lower_better(metric: str) -> bool:
     return metric.endswith(LOWER_IS_BETTER_SUFFIXES)
+
+
+def metric_tolerance(metric: str, default: float) -> float:
+    """Relative floor for one metric before noise widening: perf metrics
+    carry their own floors (see module constants); everything else uses the
+    caller's default."""
+    if metric.startswith("perf/"):
+        if metric.endswith("wall_ms_median"):
+            return WALL_ABS_TOLERANCE
+        return PERF_REL_TOLERANCE
+    return default
 
 
 def collect_metrics(payload: dict) -> dict[str, float]:
@@ -79,21 +118,64 @@ def collect_metrics(payload: dict) -> dict[str, float]:
             ):
                 if field in row:
                     metrics[f"serving/{name}/{field}"] = float(row[field])
+    if schema.startswith("repro.bench.perf"):
+        for name, row in payload.get("policies", {}).items():
+            for field in PERF_GATED_FIELDS:
+                if field in row:
+                    metrics[f"perf/{name}/{field}"] = float(row[field])
     return metrics
+
+
+def collect_noise(payload: dict) -> dict[str, float]:
+    """Flatten one payload's MAD noise channel: for every gated perf metric
+    ``perf/<name>/<field>`` whose ``<field>_mad`` sibling is present, its
+    dispersion in the same units as the metric."""
+    noise: dict[str, float] = {}
+    schema = str(payload.get("schema", ""))
+    if schema.startswith("repro.bench.perf"):
+        for name, row in payload.get("policies", {}).items():
+            for field in PERF_GATED_FIELDS:
+                if f"{field}_mad" in row:
+                    noise[f"perf/{name}/{field}"] = float(row[f"{field}_mad"])
+    return noise
+
+
+def effective_tolerance(
+    metric: str,
+    base: float,
+    tolerance: float,
+    baseline_noise: dict[str, float] | None,
+    current_noise: dict[str, float] | None,
+) -> float:
+    """Per-metric relative tolerance: the metric's floor widened by
+    PERF_MAD_SIGMAS robust sigmas of combined measurement noise relative to
+    the baseline value.  Metrics without a noise channel keep their floor."""
+    tol = metric_tolerance(metric, tolerance)
+    mad = (baseline_noise or {}).get(metric, 0.0) + (current_noise or {}).get(
+        metric, 0.0
+    )
+    if mad > 0.0 and base > ZERO_FLOOR:
+        tol += PERF_MAD_SIGMAS * mad / base
+    return tol
 
 
 def compare(
     baseline: dict[str, float],
     current: dict[str, float],
     tolerance: float = RELATIVE_DROP_TOLERANCE,
+    *,
+    baseline_noise: dict[str, float] | None = None,
+    current_noise: dict[str, float] | None = None,
 ) -> list[str]:
-    """Failure messages for every gated metric that regressed past the
-    tolerance or vanished; metrics with no baseline are informational only.
+    """Failure messages for every gated metric that regressed past its
+    effective tolerance or vanished; metrics with no baseline are
+    informational only.
 
     NaN on either side means "no data for this metric in that run" (e.g.
     drift of a policy serving no lazy cache, percentiles of a run with no
     completions) — such metrics are skipped, never treated as zero or as
-    a regression."""
+    a regression.  The noise dicts (collect_noise/load_noise) carry each
+    metric's MAD; see effective_tolerance for how they widen the gate."""
     failures = []
     for metric in sorted(baseline):
         base = baseline[metric]
@@ -108,19 +190,21 @@ def compare(
                 "from the current artifacts"
             )
             continue
+        tol = effective_tolerance(
+            metric, base, tolerance, baseline_noise, current_noise
+        )
         if is_lower_better(metric):
-            if cur > base * (1.0 + tolerance):
+            if cur > base * (1.0 + tol):
                 rise = cur / base - 1.0
                 failures.append(
                     f"{metric}: {base:.4f} -> {cur:.4f} ({rise:.1%} rise "
-                    f"exceeds the {tolerance:.0%} tolerance; lower is "
-                    "better)"
+                    f"exceeds the {tol:.0%} tolerance; lower is better)"
                 )
-        elif cur < base * (1.0 - tolerance):
+        elif cur < base * (1.0 - tol):
             drop = 1.0 - cur / base
             failures.append(
                 f"{metric}: {base:.4f} -> {cur:.4f} ({drop:.1%} drop "
-                f"exceeds the {tolerance:.0%} tolerance)"
+                f"exceeds the {tol:.0%} tolerance)"
             )
     return failures
 
@@ -136,6 +220,17 @@ def load_metrics(directory: Path) -> dict[str, float]:
     return metrics
 
 
+def load_noise(directory: Path) -> dict[str, float]:
+    noise: dict[str, float] = {}
+    for name in GATED_FILES:
+        path = directory / name
+        if not path.is_file():
+            continue
+        with open(path) as f:
+            noise.update(collect_noise(json.load(f)))
+    return noise
+
+
 def update_baselines(current_dir: Path, baseline_dir: Path) -> list[str]:
     baseline_dir.mkdir(parents=True, exist_ok=True)
     copied = []
@@ -147,12 +242,65 @@ def update_baselines(current_dir: Path, baseline_dir: Path) -> list[str]:
     return copied
 
 
+def biting_baseline(
+    metric: str, value: float, noise: dict[str, float]
+) -> float | None:
+    """A synthetic baseline guaranteed to trip the gate against ``value``
+    under the metric's own effective tolerance (floor + noise widening), or
+    None when measurement noise swamps the floor — the gate deliberately
+    cannot bite there, so the metric is excluded from the perturbation."""
+    if math.isnan(value) or value <= ZERO_FLOOR:
+        return None
+    tol = metric_tolerance(metric, RELATIVE_DROP_TOLERANCE)
+    # both sides of the self-test comparison reuse the same noise map
+    slack = PERF_MAD_SIGMAS * 2.0 * noise.get(metric, 0.0)
+    if is_lower_better(metric):
+        base = (value - slack) * 0.99 / (1.0 + tol)
+        return base if base > ZERO_FLOOR else None
+    return (value + slack) * 1.01 / (1.0 - tol)
+
+
+def noise_demo() -> list[str]:
+    """Synthetic proof that the wall gate is noise-AWARE, not noise-blind:
+    a structural slowdown on quiet measurements is flagged, the same drop
+    under MAD-scale dispersion is tolerated, and a wall-clock wobble under
+    the catastrophic floor passes.  Returns problem descriptions (empty ==
+    the demo holds)."""
+    problems = []
+    speedup = "perf/demo/speedup_vs_host"
+    wall = "perf/demo/wall_ms_median"
+    quiet = compare({speedup: 10.0, wall: 100.0}, {speedup: 6.0, wall: 250.0})
+    if len(quiet) != 2:
+        problems.append(
+            "quiet structural slowdown (speedup 10->6, wall 100->250) "
+            f"flagged {len(quiet)}/2 metrics"
+        )
+    noisy = compare(
+        {speedup: 10.0},
+        {speedup: 6.0},
+        baseline_noise={speedup: 1.0},
+        current_noise={speedup: 1.0},
+    )
+    if noisy:
+        problems.append(
+            "MAD-scale noise (speedup 10->6 with mad 1.0 both sides) was "
+            "flagged instead of tolerated"
+        )
+    wobble = compare({wall: 100.0}, {wall: 180.0})
+    if wobble:
+        problems.append(
+            "wall 100->180ms (under the catastrophic floor) was flagged"
+        )
+    return problems
+
+
 def self_test(current_dir: Path) -> int:
-    """Prove the gate bites: a synthetic baseline perturbed >5% against
-    every gated metric's better-direction MUST fail (inflated for
-    higher-is-better metrics, deflated for lower-is-better ones), and the
-    artifacts compared against themselves MUST pass.  NaN metrics carry
-    no data and are excluded from the perturbation."""
+    """Prove the gate bites: a synthetic baseline shifted just past every
+    gated metric's effective tolerance MUST fail (deflated for
+    higher-is-better metrics, inflated-above for lower-is-better ones), the
+    artifacts compared against themselves MUST pass, and the synthetic
+    noise demo MUST hold.  NaN metrics carry no data and metrics whose
+    noise swamps their floor are excluded from the perturbation."""
     current = load_metrics(current_dir)
     if not current:
         print(
@@ -160,22 +308,31 @@ def self_test(current_dir: Path) -> int:
             "(run `python -m benchmarks.run --smoke` first)"
         )
         return 1
-    perturbed = {
-        k: (v * 0.75 if is_lower_better(k) else v * 1.25)
-        for k, v in current.items()
-        if v > ZERO_FLOOR and not math.isnan(v)
-    }
+    noise = load_noise(current_dir)
+    perturbed = {}
+    for k, v in current.items():
+        base = biting_baseline(k, v, noise)
+        if base is not None:
+            perturbed[k] = base
     if not perturbed:
         print("self-test: every gated metric is zero; nothing to perturb")
         return 1
-    injected = compare(perturbed, current)
-    clean = compare(current, current)
+    injected = compare(
+        perturbed, current, baseline_noise=noise, current_noise=noise
+    )
+    clean = compare(
+        current, current, baseline_noise=noise, current_noise=noise
+    )
+    demo = noise_demo()
     print(
         f"self-test: {len(current)} gated metrics; injected regression "
         f"flagged {len(injected)}/{len(perturbed)} perturbed baselines; "
-        f"clean comparison flagged {len(clean)}"
+        f"clean comparison flagged {len(clean)}; noise demo problems: "
+        f"{len(demo)}"
     )
-    if len(injected) != len(perturbed) or clean:
+    for line in demo:
+        print(f"  noise demo: {line}")
+    if len(injected) != len(perturbed) or clean or demo:
         print("self-test FAILED: the gate does not bite")
         return 1
     print("self-test OK")
@@ -194,7 +351,8 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--self-test",
         action="store_true",
-        help="verify the gate fails on an injected >5%% regression",
+        help="verify the gate bites past each metric's effective "
+        "tolerance and tolerates MAD-scale noise",
     )
     args = ap.parse_args(argv)
 
@@ -216,7 +374,12 @@ def main(argv=None) -> int:
         )
         return 1
     current = load_metrics(args.current_dir)
-    failures = compare(baseline, current)
+    failures = compare(
+        baseline,
+        current,
+        baseline_noise=load_noise(args.baseline_dir),
+        current_noise=load_noise(args.current_dir),
+    )
     gated = sum(1 for v in baseline.values() if v > ZERO_FLOOR)
     if failures:
         print(
@@ -227,9 +390,10 @@ def main(argv=None) -> int:
             print(f"  {line}")
         return 1
     print(
-        f"benchmark gate OK: {gated} gated metrics within "
-        f"{RELATIVE_DROP_TOLERANCE:.0%} of baseline "
-        f"({len(baseline)} tracked)"
+        f"benchmark gate OK: {gated} gated metrics within their "
+        f"tolerances (default {RELATIVE_DROP_TOLERANCE:.0%}, perf "
+        f"floors {PERF_REL_TOLERANCE:.0%}/{WALL_ABS_TOLERANCE:.0%} + "
+        f"MAD widening; {len(baseline)} tracked)"
     )
     return 0
 

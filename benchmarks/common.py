@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -14,23 +13,21 @@ import jax.numpy as jnp
 from repro.configs.base import LazyConfig, ModelConfig
 from repro.data.synthetic import LatentImageDataset
 from repro.models import dit as dit_lib
+from repro.obs import profile as profile_lib
 from repro.sampling import ddim
 from repro.train import optim, trainer
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall us/call (post-jit)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    """Steady-state (median_us, mad_us, iters_kept) per call (post-jit).
+
+    Delegates to the shared ``repro.obs.profile.measure`` harness so every
+    benchmark reports the same robust statistic (median + MAD over
+    outlier-rejected samples) instead of a hand-rolled loop."""
+    m = profile_lib.measure(fn, *args, iters=iters, warmup=warmup)
+    return m.median_us, m.mad_us, m.iters
 
 
 @functools.lru_cache(maxsize=1)

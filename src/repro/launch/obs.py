@@ -30,6 +30,7 @@ import argparse
 import json
 import math
 import os
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -41,8 +42,11 @@ from repro.cache import calibrate as calibrate_lib
 from repro.configs.registry import get_config
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import request_trace
+from repro.dist import hlo as hlo_lib
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.models import dit as dit_lib
 from repro.models import transformer as tf
+from repro.obs import profile as profile_lib
 from repro.obs import report as report_lib
 from repro.obs import trace as trace_lib
 from repro.sampling import ddim, trajectory
@@ -152,6 +156,110 @@ def collect_serving(cfg, params, *, n_requests: int, n_slots: int,
     return res.metrics.summary(slo_latency_s=slo)
 
 
+def collect_perf(cfg, params, sched, policy_names, *, n_steps: int,
+                 batch: int, seed: int, lazy_ratio: float,
+                 tracer: trace_lib.Tracer, iters: int = 3,
+                 cfg_scale: float = 1.5) -> Dict:
+    """The realized-vs-modeled join: per policy, AOT lower/compile timed
+    apart from first execution, steady-state wall as median + MAD
+    (repro.obs.profile.measure), the dist/hlo modeled FLOPs/bytes of the
+    SAME compiled executable, and the achieved roofline fractions their
+    ratio implies.  The first execution runs inside a jax.profiler
+    device-trace capture merged onto the tracer's PID_DEVICE track."""
+    labels = jnp.arange(batch) % cfg.dit_n_classes
+    key = jax.random.PRNGKey(seed)
+    calibration = None
+    if any(n in CALIBRATED for n in policy_names):
+        with tracer.span("perf:calibrate_dit", cat="perf"):
+            calibration = calibrate_lib.calibrate_dit(
+                params, cfg, sched, key=jax.random.PRNGKey(seed + 1),
+                labels=labels[:2], n_steps=n_steps)
+    legs: Dict[str, Dict] = {}
+    for name in policy_names:
+        pol = build_obs_policy(name, cfg, n_steps, calibration,
+                               lazy_ratio=lazy_ratio, seed=seed)
+        fn = trajectory.build_sampler(cfg, pol, n_steps, cfg_scale,
+                                      batch=batch)
+        sample_args = trajectory.prepare_inputs(
+            cfg, sched, pol, key=key, labels=labels, n_steps=n_steps)
+        with tracer.span(f"perf:aot:{name}", cat="perf"):
+            compiled, aot = profile_lib.aot_compile(fn, params,
+                                                    *sample_args)
+        mod = hlo_lib.sharded_totals(compiled.as_text())
+        try:
+            mem = compiled.memory_analysis()
+            mem_row = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            mem_row = None
+        with profile_lib.device_trace(tracer, label=f"device:{name}"):
+            t0 = time.perf_counter()
+            x, aux = compiled(params, *sample_args)
+            jax.block_until_ready(x)
+            first_exec_s = time.perf_counter() - t0
+        with tracer.span(f"perf:steady:{name}", cat="perf"):
+            m = profile_lib.measure(
+                lambda: compiled(params, *sample_args)[0],
+                iters=iters, warmup=0)
+        gated = max(n_steps * cfg.n_layers * trajectory.N_MODULES, 1)
+        wall_s = m.median_s
+        legs[name] = {
+            "wall_ms_median": wall_s * 1e3,
+            "wall_ms_mad": m.mad_s * 1e3,
+            "iters": m.iters,
+            "rejected": m.rejected,
+            "lower_s": aot["lower_s"],
+            "compile_s": aot["compile_s"],
+            "first_execute_ms": first_exec_s * 1e3,
+            "realized_skip_ratio": float(aux["n_skipped"]) / gated,
+            "modeled": {
+                "flops_per_device": float(mod["flops"]),
+                "bytes_per_device": float(mod["bytes"]),
+                "flops_global": float(mod["flops_global"]),
+                "bytes_global": float(mod["bytes_global"]),
+                "partitions": mod["partitions"],
+            },
+            "memory_analysis": mem_row,
+            "achieved": {
+                "flops_per_s": float(mod["flops_global"]) / max(wall_s,
+                                                                1e-12),
+                "bytes_per_s": float(mod["bytes_global"]) / max(wall_s,
+                                                                1e-12),
+                # fractions of the reference accelerator roofline
+                # (launch/mesh constants) — honest context for a CPU
+                # container, a real utilization number on hardware
+                "flops_fraction_of_peak": float(mod["flops_global"])
+                / max(wall_s, 1e-12) / PEAK_FLOPS_BF16,
+                "bytes_fraction_of_hbm": float(mod["bytes_global"])
+                / max(wall_s, 1e-12) / HBM_BW,
+            },
+        }
+    none_leg = legs.get("none")
+    for name, leg in legs.items():
+        if none_leg is None or name == "none":
+            continue
+        leg["measured_speedup_vs_none"] = (
+            none_leg["wall_ms_median"] / max(leg["wall_ms_median"], 1e-9))
+        leg["modeled_flop_saving_vs_none"] = 1.0 - (
+            leg["modeled"]["flops_global"]
+            / max(none_leg["modeled"]["flops_global"], 1.0))
+    return {
+        "policies": legs,
+        "memory_watermarks": profile_lib.memory_watermarks(),
+        "roofline_peaks": {"peak_flops_bf16": PEAK_FLOPS_BF16,
+                           "hbm_bytes_per_s": HBM_BW},
+        "harness": {"iters": iters,
+                    "method": "repro.obs.profile.measure "
+                              "(median + MAD, outlier-rejected)"},
+        "arch": cfg.name, "n_steps": n_steps, "batch": batch,
+    }
+
+
 def verify_report(report: Dict) -> None:
     """Raise if the report misses its core metrics or any policy's drift
     telemetry came back non-finite — run-time validation of the artifact
@@ -166,6 +274,13 @@ def verify_report(report: Dict) -> None:
             if not all(math.isfinite(v) for v in vals):
                 raise ValueError(
                     f"non-finite drift in policy {pol!r} ({key}): {vals}")
+    if "perf" in metrics:
+        for pol, leg in metrics["perf"].get("policies", {}).items():
+            for key in ("wall_ms_median", "compile_s", "first_execute_ms"):
+                v = leg.get(key)
+                if v is None or not math.isfinite(v) or v < 0:
+                    raise ValueError(
+                        f"perf leg {pol!r} has invalid {key}: {v!r}")
 
 
 def _jsonify(obj):
@@ -200,6 +315,9 @@ def run_report(*, arch: str = "dit_xl2_256",
                out_dir: str = ARTIFACTS,
                cfg=None, params=None,
                serve_cfg=None, serve_params=None,
+               perf: bool = False,
+               perf_policies=("none", "static_router"),
+               perf_iters: int = 3,
                write: bool = True):
     """The whole instrumented run: sampling legs (+ optional serving leg)
     under one tracer with jax.monitoring compile capture, assembled into
@@ -235,12 +353,20 @@ def run_report(*, arch: str = "dit_xl2_256",
                                       n_slots=n_slots, seed=seed,
                                       lazy_ratio=lazy_ratio, slo=slo,
                                       tracer=tracer)
+        perf_section = None
+        if perf:
+            perf_section = collect_perf(cfg, params, sched,
+                                        tuple(perf_policies),
+                                        n_steps=n_steps, batch=batch,
+                                        seed=seed, lazy_ratio=lazy_ratio,
+                                        tracer=tracer, iters=perf_iters)
 
     ctx = {"config": {"arch": cfg.name, "policies": list(policies),
                       "n_steps": n_steps, "batch": batch, "seed": seed,
                       "lazy_ratio": lazy_ratio, "serve": bool(serve),
                       "n_slots": n_slots if serve else None},
-           "sampling": legs, "serving": serving, "tracer": tracer}
+           "sampling": legs, "serving": serving, "perf": perf_section,
+           "tracer": tracer}
     report = report_lib.build_report(ctx)
     verify_report(report)
     paths = write_artifacts(report, tracer, out_dir) if write else {}
@@ -270,11 +396,23 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--slo", type=float,
                     default=serving_metrics.DEFAULT_SLO_LATENCY_S,
                     help="goodput latency SLO (virtual seconds)")
+    ap.add_argument("--perf", action="store_true",
+                    help="add the realized-vs-modeled perf section: AOT "
+                         "compile timing, steady-state wall median + MAD, "
+                         "device memory watermarks, achieved-throughput "
+                         "fractions vs the dist/hlo model")
+    ap.add_argument("--perf-policies", default="none,static_router",
+                    help="comma-separated policies for the --perf legs")
+    ap.add_argument("--perf-iters", type=int, default=3,
+                    help="steady-state samples per --perf leg")
     ap.add_argument("--out-dir", default=ARTIFACTS)
     args = ap.parse_args(argv)
 
     names = tuple(n.strip() for n in args.policies.split(",") if n.strip())
-    unknown = [n for n in names if n not in cache_lib.available_policies()]
+    perf_names = tuple(n.strip() for n in args.perf_policies.split(",")
+                       if n.strip())
+    unknown = [n for n in names + (perf_names if args.perf else ())
+               if n not in cache_lib.available_policies()]
     if unknown:
         ap.error(f"unknown policies {unknown}; "
                  f"available: {sorted(cache_lib.available_policies())}")
@@ -284,7 +422,8 @@ def main(argv: Optional[List[str]] = None) -> None:
         batch=args.batch, seed=args.seed, lazy_ratio=args.lazy_ratio,
         serve=args.serve, serve_arch=args.serve_arch,
         serve_requests=args.serve_requests, n_slots=args.n_slots,
-        slo=args.slo, out_dir=args.out_dir)
+        slo=args.slo, perf=args.perf, perf_policies=perf_names,
+        perf_iters=args.perf_iters, out_dir=args.out_dir)
 
     drift = report["metrics"]["drift_by_step"]
     heat = report["metrics"]["skip_heatmap"]
@@ -302,6 +441,26 @@ def main(argv: Optional[List[str]] = None) -> None:
         print(f"  serving: {s['requests_per_s']:.3f} req/s  "
               f"goodput {s['goodput_per_s']:.3f}/s (SLO {s['slo_latency_s']}s)"
               f"  drift_rel_l2={s['drift_rel_l2_mean']:.5f}")
+        print(f"  phases (p50): queue {s['queue_p50_s']:.2f}s  "
+              f"prefill {s['prefill_p50_s']:.2f}s  "
+              f"decode {s['decode_p50_s']:.2f}s")
+    if report["metrics"].get("perf"):
+        p = report["metrics"]["perf"]
+        mw = p["memory_watermarks"]
+        print(f"  perf ({p['harness']['iters']} iters/leg, "
+              f"{mw['total_bytes'] / 2**20:.1f} MiB live via "
+              f"{mw['source']}):")
+        for name, leg in p["policies"].items():
+            extra = ""
+            if "measured_speedup_vs_none" in leg:
+                extra = (f"  speedup_vs_none="
+                         f"{leg['measured_speedup_vs_none']:.2f}x "
+                         f"(modeled flop saving "
+                         f"{leg['modeled_flop_saving_vs_none']:.1%})")
+            print(f"    {name:14s} wall={leg['wall_ms_median']:.1f}ms "
+                  f"± {leg['wall_ms_mad']:.1f} MAD  "
+                  f"compile={leg['compile_s']:.2f}s  "
+                  f"first={leg['first_execute_ms']:.1f}ms{extra}")
     for kind, path in paths.items():
         print(f"  {kind:7s} -> {path}")
 

@@ -150,8 +150,16 @@ def serve_dit(args, cfg, tracer=None):
     step-count, guidance, eta, mesh), policy plan rows scanned as traced
     selects.  Under ``--mesh data=N`` the batch shards along the data
     axis; the printed per-example sha256 digests are bit-identical across
-    mesh sizes (the parity contract, tests/test_trajectory_sharded.py)."""
+    mesh sizes (the parity contract, tests/test_trajectory_sharded.py).
+
+    Timing is AOT-separated (repro.obs.profile): ``.lower()`` /
+    ``.compile()`` wall apart from the first execution — the old
+    first-call number lumped trace + compile + run into one misleading
+    "compile" figure — and steady state is the profile harness's
+    outlier-rejected median ± MAD, not a single sample."""
+    from repro.cache import policy as cache_policy_lib
     from repro.models import dit as dit_lib
+    from repro.obs import profile as profile_lib
     from repro.sampling import ddim, trajectory
 
     params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
@@ -166,21 +174,27 @@ def serve_dit(args, cfg, tracer=None):
               .integers(0, cfg.dit_n_classes, (args.batch,)).astype(np.int32))
     labels = jax.numpy.asarray(labels)
 
-    kw = dict(key=jax.random.PRNGKey(args.seed), labels=labels,
-              n_steps=n_steps, eta=args.eta, policy=policy,
-              lazy_mode=args.lazy, plan=plan)
+    pol = cache_policy_lib.resolve(policy, lazy_mode=args.lazy, plan=plan,
+                                   threshold=cfg.lazy.threshold)
+    fn = trajectory.build_sampler(cfg, pol, n_steps, 1.5, float(args.eta),
+                                  batch=int(labels.shape[0]))
+    sample_args = trajectory.prepare_inputs(
+        cfg, sched, pol, key=jax.random.PRNGKey(args.seed), labels=labels,
+        n_steps=n_steps, eta=args.eta)
     span = (tracer.span if tracer is not None
             else (lambda *a, **k: contextlib.nullcontext()))
+    with span("sample:aot_compile", cat="serve"):
+        compiled, aot = profile_lib.aot_compile(fn, params, *sample_args)
     t0 = time.perf_counter()
-    with span("sample:compile+run", cat="serve"):
-        x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
+    with span("sample:first_execute", cat="serve"):
+        x, aux = compiled(params, *sample_args)
         jax.block_until_ready(x)
-    compile_wall = time.perf_counter() - t0
-    t0 = time.perf_counter()
+    first_exec = time.perf_counter() - t0
     with span("sample:steady", cat="serve"):
-        x, aux = trajectory.sample_trajectory(params, cfg, sched, **kw)
-        jax.block_until_ready(x)
-    wall = time.perf_counter() - t0
+        m = profile_lib.measure(
+            lambda: compiled(params, *sample_args)[0], iters=3, warmup=0)
+    ratio = float(aux["n_skipped"]) / max(
+        n_steps * cfg.n_layers * trajectory.N_MODULES, 1)
     policy_label = args.policy or f"lazy:{args.lazy}"
     mesh = dist_ctx.current_mesh()
     mesh_label = ("x".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
@@ -188,10 +202,17 @@ def serve_dit(args, cfg, tracer=None):
     print(f"arch={cfg.name} policy={policy_label} sampler=fused-trajectory "
           f"steps={n_steps} batch={args.batch} eta={args.eta} "
           f"mesh={mesh_label} shape={tuple(x.shape)}")
-    print(f"  first call (compile+run): {compile_wall:.2f}s; "
-          f"steady state: {wall:.3f}s "
-          f"({wall / n_steps * 1e3:.1f} ms/step, one compiled scan)")
-    print(f"  realized skip ratio: {aux['realized_skip_ratio']:.1%}")
+    print(f"  AOT: lower {aot['lower_s']:.2f}s, compile "
+          f"{aot['compile_s']:.2f}s; first execute {first_exec:.3f}s")
+    print(f"  steady state: {m.median_s:.3f}s ± {m.mad_s * 1e3:.1f}ms MAD "
+          f"over {m.iters} kept iters "
+          f"({m.median_s / n_steps * 1e3:.1f} ms/step, one compiled scan)")
+    mw = profile_lib.memory_watermarks()
+    peak = mw.get("peak_bytes")
+    print(f"  device memory: {mw['total_bytes'] / 2**20:.1f} MiB live"
+          + (f", {peak / 2**20:.1f} MiB peak" if peak else "")
+          + f" ({mw['source']})")
+    print(f"  realized skip ratio: {ratio:.1%}")
     if mesh is not None:
         print(f"  latent sharding: {x.sharding.spec} over "
               f"{len(np.asarray(mesh.devices).flat)} devices")
@@ -325,6 +346,12 @@ def _serve(args, tracer=None):
             t0 = time.perf_counter()
             res = eng.run(trace)
             wall = time.perf_counter() - t0
+            # engines are re-entrant (pool/scheduler rebuilt per call), so
+            # the steady-state number comes from the shared harness, not
+            # the compile-polluted first run
+            from repro.obs import profile as profile_lib
+            m = profile_lib.measure(lambda: eng.run(trace), iters=2,
+                                    warmup=0)
         s = res.metrics.summary()
         n_tok = sum(len(res.outputs[r.rid]) - len(r.prompt) for r in trace)
         print(f"arch={cfg.name} policy={policy_label} batching=continuous "
@@ -334,11 +361,16 @@ def _serve(args, tracer=None):
         print(f"  latency       : p50={s['latency_p50_s']:.2f}s "
               f"p95={s['latency_p95_s']:.2f}s  "
               f"ttft p50={s['ttft_p50_s']:.2f}s p95={s['ttft_p95_s']:.2f}s")
+        print(f"  phases (p50/p95): queue {s['queue_p50_s']:.2f}/"
+              f"{s['queue_p95_s']:.2f}s  prefill {s['prefill_p50_s']:.2f}/"
+              f"{s['prefill_p95_s']:.2f}s  decode {s['decode_p50_s']:.2f}/"
+              f"{s['decode_p95_s']:.2f}s")
         print(f"  realized lazy ratio: {s['realized_lazy_ratio']:.1%}  "
               f"mean active slots: {s['mean_active_slots']:.2f}  "
               f"mean queue depth: {s['mean_queue_depth']:.2f}")
-        print(f"  host wall-clock: {wall:.2f}s "
-              f"({n_tok / max(wall, 1e-9):.1f} tok/s)")
+        print(f"  host wall-clock: first run {wall:.2f}s (incl. compile); "
+              f"steady {m.median_s:.2f}s ± {m.mad_s:.2f}s MAD "
+              f"({n_tok / max(m.median_s, 1e-9):.1f} tok/s)")
         return
 
     policy = build_policy(args, cfg, params, n_steps=args.n_new)
@@ -352,11 +384,16 @@ def _serve(args, tracer=None):
         t0 = time.perf_counter()
         res = eng.generate(prompt, n_new=args.n_new)
         wall = time.perf_counter() - t0
+        from repro.obs import profile as profile_lib
+        m = profile_lib.measure(
+            lambda: eng.generate(prompt, n_new=args.n_new), iters=2,
+            warmup=0)
     print(f"arch={cfg.name} policy={policy_label}")
     for row in res.tokens:
         print("  ", row.tolist())
-    print(f"tokens/sec: {args.batch * args.n_new / max(wall, 1e-9):.1f} "
-          f"(wall {wall:.2f}s)  realized lazy ratio: "
+    print(f"tokens/sec: {args.batch * args.n_new / max(m.median_s, 1e-9):.1f} "
+          f"steady (first run incl. compile {wall:.2f}s; steady "
+          f"{m.median_s:.2f}s ± {m.mad_s:.2f}s MAD)  realized lazy ratio: "
           f"{res.realized_lazy_ratio:.1%}")
 
 

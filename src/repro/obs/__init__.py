@@ -10,9 +10,15 @@ Three layers (DESIGN.md §Obs):
   * ``obs.trace`` — structured tracer: spans/events as JSONL + Chrome
     trace-event JSON (Perfetto-viewable), jax.monitoring compile events,
     serving decisions on the virtual service clock.
+  * ``obs.profile`` — realized-performance measurement: the steady-state
+    median+MAD timing harness every benchmark/launcher timing loop uses,
+    AOT lower/compile timing, device memory watermarks, and jax.profiler
+    device-trace capture merged onto the tracer's device track.
   * ``obs.report`` — metrics registry + report assembly; the CLI lives in
     ``repro.launch.obs`` and writes ``artifacts/OBS_*.json``.
 """
+from repro.obs.profile import (Measurement, aot_compile,  # noqa: F401
+                               device_trace, measure, memory_watermarks)
 from repro.obs.report import (available_metrics, build_report,  # noqa: F401
                               register_metric)
 from repro.obs.telemetry import (drain, init_trajectory_telemetry,  # noqa: F401

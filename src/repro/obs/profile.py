@@ -1,0 +1,340 @@
+"""Realized-performance profiling: steady-state timing, memory
+watermarks, AOT compile timing and device-trace capture (repro.obs).
+
+Every wall-clock number this repo reports flows through ONE harness so
+the methodology is uniform and auditable (DESIGN.md §Obs §Perf):
+
+  * ``measure`` — steady-state wall time of a callable: warmup until two
+    consecutive calls agree (never fewer than the requested warmup
+    calls), then a timed sample set reduced to **median + MAD** (median
+    absolute deviation).  The median ignores the slow tail entirely and
+    the MAD is the dispersion estimate the regression gate scales its
+    tolerance by (benchmarks/check_regression.py) — mean/stddev would
+    let one GC pause or scheduler preemption poison the statistic.
+    Samples beyond an explicit outlier cutoff are dropped and COUNTED
+    (``Measurement.rejected``) — never silently.
+  * ``aot_compile`` — ``fn.lower(*args).compile()`` with the lower and
+    compile phases timed separately, so callers report compile cost
+    apart from first execution instead of conflating trace + compile +
+    run into one "first call" number (the launch/serve.py bug this
+    module fixes).
+  * ``memory_watermarks`` — per-device bytes in use.  Accelerator
+    backends expose ``device.memory_stats()``; the CPU container returns
+    None there, so the fallback sums ``jax.live_arrays()`` shard bytes
+    per device (no peak watermark — recorded as None, not 0).
+  * ``device_trace`` — a ``jax.profiler`` capture merged onto the
+    host/service Chrome tracer (obs/trace.py) as the ``PID_DEVICE``
+    track: one timeline for host phases, compile events, service-clock
+    serving decisions AND on-device op execution, still
+    ``validate_chrome_trace``-clean.
+
+Profiling OFF is the default and costs nothing: ``measure`` only calls
+the function it is given (no wrapping, no retracing — the zero-overhead
+pins in tests/test_profile.py), and ``device_trace`` failures degrade to
+an annotation on the tracer, never a failed run.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+import os
+import shutil
+import tempfile
+import time
+from contextlib import contextmanager
+from pathlib import Path
+from typing import Callable, Dict, List, NamedTuple
+
+import jax
+
+from repro.obs import trace as trace_lib
+
+# outlier cutoff for timed samples: median + max(OUTLIER_MADS * 1.4826 *
+# MAD, OUTLIER_REL_FLOOR * median).  The 1.4826 factor makes the MAD
+# comparable to a Gaussian sigma; the relative floor keeps the cutoff
+# meaningful when the MAD degenerates to 0 at perf_counter resolution.
+OUTLIER_MADS = 5.0
+OUTLIER_REL_FLOOR = 1.0
+
+# warmup-until-stable: consecutive warmup calls within this relative
+# band mean the jit caches / allocator have settled
+STABLE_REL = 0.25
+
+
+class Measurement(NamedTuple):
+    """Steady-state timing result (all times in µs per call)."""
+    median_us: float
+    mad_us: float           # raw median absolute deviation (unscaled)
+    iters: int              # samples kept after outlier rejection
+    n_samples: int          # timed samples taken
+    warmup_iters: int       # warmup calls until the stability criterion
+    rejected: int           # outlier samples dropped (counted, not hidden)
+
+    @property
+    def median_s(self) -> float:
+        return self.median_us / 1e6
+
+    @property
+    def mad_s(self) -> float:
+        return self.mad_us / 1e6
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    mid = n // 2
+    return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def measure(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+            max_warmup: int = 8, stable_rel: float = STABLE_REL,
+            block: bool = True) -> Measurement:
+    """Steady-state wall time of ``fn(*args)``: median + MAD over
+    ``iters`` samples after warmup-until-stable.
+
+    Warmup runs at least ``warmup`` calls and keeps going (up to
+    ``max_warmup``) until two consecutive calls agree within
+    ``stable_rel`` — so a cold jit cache or allocator ramp never leaks
+    into the samples.  ``warmup=0`` skips warmup entirely (the caller
+    already warmed the function, e.g. by timing its first execution).
+    Samples past the outlier cutoff (see module docstring) are dropped
+    and reported in ``Measurement.rejected``.
+    """
+    sync = jax.block_until_ready if block else (lambda x: x)
+
+    n_warm = 0
+    if warmup > 0:
+        prev = None
+        for _ in range(max(max_warmup, warmup)):
+            t0 = time.perf_counter()
+            sync(fn(*args))
+            dt = time.perf_counter() - t0
+            n_warm += 1
+            if (n_warm >= warmup and prev is not None
+                    and abs(dt - prev) <= stable_rel * max(prev, 1e-12)):
+                break
+            prev = dt
+
+    samples = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        sync(fn(*args))
+        samples.append(time.perf_counter() - t0)
+
+    med = _median(samples)
+    mad = _median([abs(s - med) for s in samples])
+    cutoff = med + max(OUTLIER_MADS * 1.4826 * mad,
+                       OUTLIER_REL_FLOOR * med)
+    kept = [s for s in samples if s <= cutoff]
+    med = _median(kept)
+    mad = _median([abs(s - med) for s in kept])
+    return Measurement(median_us=med * 1e6, mad_us=mad * 1e6,
+                       iters=len(kept), n_samples=len(samples),
+                       warmup_iters=n_warm,
+                       rejected=len(samples) - len(kept))
+
+
+# ---------------------------------------------------------------------------
+# AOT compile timing
+# ---------------------------------------------------------------------------
+
+
+def aot_compile(fn, *args):
+    """``fn.lower(*args).compile()`` with lower / compile timed apart.
+
+    Returns ``(compiled, {"lower_s", "compile_s"})``.  The compiled
+    executable runs without retracing (``compiled(*args)``), so callers
+    can time *first execution* as execution only — compile cost is no
+    longer conflated with the first call the way a cold jit call
+    conflates trace + compile + run.
+    """
+    t0 = time.perf_counter()
+    lowered = fn.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    return compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+# ---------------------------------------------------------------------------
+# memory watermarks
+# ---------------------------------------------------------------------------
+
+
+def memory_watermarks() -> Dict:
+    """Per-device memory in use, with the honest source labelled.
+
+    Accelerator backends report allocator stats via
+    ``device.memory_stats()`` (including a peak watermark); the CPU
+    backend returns None there, so the fallback sums the shard bytes of
+    every live ``jax.Array`` per device.  The fallback has NO peak
+    watermark — ``peak_bytes`` is None then, never a fabricated 0.
+    """
+    devices = jax.devices()
+    per_device: Dict[str, Dict] = {}
+    source = "device.memory_stats"
+    for d in devices:
+        try:
+            stats = d.memory_stats()
+        except Exception:
+            stats = None
+        if stats:
+            in_use = int(stats.get("bytes_in_use", 0))
+            per_device[str(d)] = {
+                "bytes_in_use": in_use,
+                "peak_bytes_in_use": int(
+                    stats.get("peak_bytes_in_use", in_use)),
+            }
+    if len(per_device) != len(devices):
+        source = "jax.live_arrays"
+        per_device = {}
+        for arr in jax.live_arrays():
+            try:
+                shards = [(str(s.device), int(s.data.nbytes))
+                          for s in arr.addressable_shards]
+            except Exception:
+                shards = [(str(next(iter(arr.devices()))), int(arr.nbytes))]
+            for dev, nbytes in shards:
+                slot = per_device.setdefault(
+                    dev, {"bytes_in_use": 0, "peak_bytes_in_use": None})
+                slot["bytes_in_use"] += nbytes
+    total = sum(v["bytes_in_use"] for v in per_device.values())
+    peaks = [v["peak_bytes_in_use"] for v in per_device.values()]
+    peak = (sum(peaks) if peaks and all(p is not None for p in peaks)
+            else None)
+    return {"source": source, "per_device": per_device,
+            "total_bytes": int(total), "peak_bytes": peak}
+
+
+# ---------------------------------------------------------------------------
+# device-trace capture + merge (jax.profiler -> the Chrome tracer)
+# ---------------------------------------------------------------------------
+
+
+def _load_profiler_events(log_dir: str) -> List[Dict]:
+    """traceEvents of the newest profiler session under ``log_dir``.
+
+    jax.profiler.trace writes ``plugins/profile/<ts>/<host>.trace.json.gz``
+    in Chrome trace-event format (µs timestamps)."""
+    paths = sorted(Path(log_dir).glob("plugins/profile/*/*.trace.json.gz"))
+    if not paths:
+        return []
+    with gzip.open(paths[-1], "rt") as f:
+        return json.load(f).get("traceEvents", []) or []
+
+
+def merge_device_trace(tracer: trace_lib.Tracer, log_dir: str, *,
+                       offset_us: float = 0.0) -> int:
+    """Merge one jax.profiler capture onto the tracer's device track.
+
+    Keeps the complete ("X") spans with well-formed pid/tid/ts/dur —
+    profiler output also carries metadata rows without tid/ts and a
+    trailing phase-less event, which would break the Chrome schema the
+    repo validates — remaps the profiler's (pid, tid) pairs onto small
+    sequential tids under ``PID_DEVICE``, and rebases timestamps so the
+    capture window starts at ``offset_us`` on the tracer's clock (pass
+    ``tracer.now_us()`` from capture start).  Thread names from the
+    profiler's metadata are preserved as ``thread_name`` metadata on the
+    remapped tids.  Returns the number of spans merged.
+    """
+    raw = _load_profiler_events(log_dir)
+    thread_names: Dict[tuple, str] = {}
+    spans = []
+    for ev in raw:
+        pid, tid, ts = ev.get("pid"), ev.get("tid"), ev.get("ts")
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name" \
+                and pid is not None and tid is not None:
+            thread_names[(pid, tid)] = str(
+                (ev.get("args") or {}).get("name", tid))
+        if ev.get("ph") != "X" or pid is None or tid is None:
+            continue
+        dur = ev.get("dur")
+        if not isinstance(ts, (int, float)) or \
+                not isinstance(dur, (int, float)) or dur < 0:
+            continue
+        spans.append(ev)
+    if not spans:
+        return 0
+
+    t_min = min(e["ts"] for e in spans)
+    tracks = sorted({(e["pid"], e["tid"]) for e in spans})
+    tid_map = {track: i for i, track in enumerate(tracks)}
+
+    # one process_name for the device track (idempotent across captures)
+    if not any(e.get("pid") == trace_lib.PID_DEVICE and e.get("ph") == "M"
+               and e.get("name") == "process_name" for e in tracer.events):
+        tracer.events.append(
+            {"ph": "M", "name": "process_name",
+             "pid": trace_lib.PID_DEVICE, "tid": 0, "ts": 0.0,
+             "args": {"name": trace_lib.DEVICE_PROCESS_NAME}})
+    for track, tid in tid_map.items():
+        name = thread_names.get(track, f"pid{track[0]}.tid{track[1]}")
+        ev = {"ph": "M", "name": "thread_name",
+              "pid": trace_lib.PID_DEVICE, "tid": tid, "ts": 0.0,
+              "args": {"name": name}}
+        if ev not in tracer.events:
+            tracer.events.append(ev)
+
+    for e in spans:
+        tracer.complete(
+            str(e.get("name", "op")),
+            max(offset_us + (e["ts"] - t_min), 0.0), float(e["dur"]),
+            pid=trace_lib.PID_DEVICE, tid=tid_map[(e["pid"], e["tid"])],
+            cat="device", args=dict(e.get("args") or {}))
+    return len(spans)
+
+
+@contextmanager
+def device_trace(tracer: trace_lib.Tracer, *, label: str = "device_trace"):
+    """Capture a ``jax.profiler`` device trace around a block and merge
+    it onto ``tracer``'s ``PID_DEVICE`` track.
+
+    Profiling must never fail the profiled run: if the profiler is
+    unavailable or produces nothing, the block still executes and the
+    tracer gets an instant event recording what happened
+    (``<label>_merged`` with ``n_events``, or ``<label>_failed``).
+    """
+    tmp = tempfile.mkdtemp(prefix="repro-devtrace-")
+    t_start = tracer.now_us()
+    session = None
+    try:
+        session = jax.profiler.trace(tmp)
+        session.__enter__()
+    except Exception as e:
+        session = None
+        tracer.instant(f"{label}_failed", cat="profile",
+                       args={"error": str(e)})
+    try:
+        yield tracer
+    finally:
+        n = 0
+        if session is not None:
+            try:
+                session.__exit__(None, None, None)
+                n = merge_device_trace(tracer, tmp, offset_us=t_start)
+                tracer.instant(f"{label}_merged", cat="profile",
+                               args={"n_events": n})
+            except Exception as e:
+                tracer.instant(f"{label}_failed", cat="profile",
+                               args={"error": str(e)})
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# perf trend file
+# ---------------------------------------------------------------------------
+
+
+def append_trend(path: str, row: Dict) -> str:
+    """Append one JSON row to a PERF_*.jsonl trend file (one object per
+    line, stream-appendable — every bench run adds a row so wall-clock
+    history survives artifact overwrites)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+    return path
+
+
+__all__ = ["Measurement", "measure", "aot_compile", "memory_watermarks",
+           "merge_device_trace", "device_trace", "append_trend",
+           "OUTLIER_MADS", "STABLE_REL"]

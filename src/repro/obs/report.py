@@ -120,5 +120,16 @@ def _compile_timeline(ctx) -> Optional[list]:
 @register_metric("service_percentiles")
 def _service_percentiles(ctx) -> Optional[Dict]:
     """The serving leg's service-clock summary (requests/s, latency and
-    TTFT percentiles, goodput-under-SLO, per-policy drift means)."""
+    TTFT percentiles with queue/prefill/decode phase breakdowns,
+    goodput-under-SLO, per-policy drift means)."""
     return ctx.get("serving") or None
+
+
+@register_metric("perf")
+def _perf(ctx) -> Optional[Dict]:
+    """The realized-vs-modeled performance join (launch/obs.py --perf):
+    per-policy steady-state wall medians + MAD, AOT lower/compile times,
+    first-execute latency, device memory watermarks, and the dist/hlo
+    modeled FLOPs/bytes the measured numbers are divided by — achieved
+    roofline fractions and measured-vs-modeled speedups per policy."""
+    return ctx.get("perf") or None

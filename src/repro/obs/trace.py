@@ -18,10 +18,12 @@ Event model (the Chrome trace-event phases actually used):
   ph "C"  counter sample  (queue depth, active slots, ...)
   ph "M"  metadata        (process names for the fixed pids below)
 
-Processes separate the three clocks so Perfetto lays them out as tracks:
+Processes separate the clocks so Perfetto lays them out as tracks:
 pid HOST (wall clock, µs since the tracer started), pid JAX (compile /
 trace-cache events, wall clock), pid SERVICE (the virtual service clock,
-1 virtual second = 1e6 "µs").  Exports sort events by (pid, tid, ts), so
+1 virtual second = 1e6 "µs"), and — when ``obs/profile.device_trace``
+merged a ``jax.profiler`` capture — pid DEVICE (on-device op spans,
+rebased onto the host clock).  Exports sort events by (pid, tid, ts), so
 timestamps are monotonically non-decreasing per track no matter the
 append order — ``validate_chrome_trace`` checks exactly the invariants
 the tests pin (required fields, known phases, per-track monotonic ts,
@@ -39,9 +41,14 @@ from typing import Dict, Iterable, List, Optional
 PID_HOST = 1
 PID_JAX = 2
 PID_SERVICE = 3
+# device-side ops from a jax.profiler capture (obs/profile.py merges
+# them in); its process_name metadata is emitted at merge time, so
+# traces without a device capture carry exactly the three tracks above
+PID_DEVICE = 4
 
 _PROCESS_NAMES = {PID_HOST: "repro.host", PID_JAX: "repro.jax",
                   PID_SERVICE: "repro.service-clock"}
+DEVICE_PROCESS_NAME = "repro.device (jax.profiler)"
 
 KNOWN_PHASES = ("X", "i", "C", "M")
 

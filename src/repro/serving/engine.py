@@ -436,7 +436,8 @@ class ContinuousBatchingEngine:
                 # counter or reuse-run lengths)
                 slot_state = lazy_lib.slot_cache_scatter(
                     slot_state, i, self._init_state)
-                met.record_admit(req.rid, req.arrival, now, prompt.shape[1])
+                met.record_admit(req.rid, req.arrival, now, prompt.shape[1],
+                                 prefill_s=now - t_prefill)
                 # empty output budget, or the model's very first greedy
                 # token is EOS (a naturally empty response): complete now
                 if req.max_new <= 0 or (self.eos_id is not None

@@ -85,9 +85,19 @@ class ServingMetrics:
 
     # ------------------------------------------------------------ recording
     def record_admit(self, rid: int, arrival: float, now: float,
-                     prompt_len: int) -> None:
+                     prompt_len: int, *, prefill_s: float = 0.0) -> None:
+        """``now`` is the admit time AFTER prefill (the engine's
+        convention); ``prefill_s`` is how much of it the prefill took, so
+        the request's latency decomposes exactly into
+
+            queue   = (admit - prefill_s) - arrival
+            prefill = prefill_s
+            decode  = done - admit
+
+        and queue + prefill + decode == done - arrival per request."""
         self.requests[rid] = {"arrival": arrival, "admit": now,
                               "prompt_len": prompt_len,
+                              "prefill_s": float(prefill_s),
                               "first_token": None, "done": None, "n_out": 0}
         self._t_end = max(self._t_end, now)
 
@@ -151,6 +161,12 @@ class ServingMetrics:
         lat = np.array([r["done"] - r["arrival"] for r in done])
         ttft = np.array([r["first_token"] - r["arrival"] for r in done
                          if r["first_token"] is not None])
+        # phase decomposition (see record_admit): per request the three
+        # phases sum exactly to end-to-end latency
+        queue = np.array([r["admit"] - r.get("prefill_s", 0.0) - r["arrival"]
+                          for r in done])
+        prefill = np.array([r.get("prefill_s", 0.0) for r in done])
+        decode = np.array([r["done"] - r["admit"] for r in done])
         qd = np.array([s["queue_depth"] for s in self.steps])
         act = np.array([s["n_active"] for s in self.steps])
 
@@ -174,6 +190,12 @@ class ServingMetrics:
             "latency_p95_s": pct(lat, 95),
             "ttft_p50_s": pct(ttft, 50),
             "ttft_p95_s": pct(ttft, 95),
+            "queue_p50_s": pct(queue, 50),
+            "queue_p95_s": pct(queue, 95),
+            "prefill_p50_s": pct(prefill, 50),
+            "prefill_p95_s": pct(prefill, 95),
+            "decode_p50_s": pct(decode, 50),
+            "decode_p95_s": pct(decode, 95),
             "realized_lazy_ratio": self.realized_lazy_ratio(),
             "mean_queue_depth": mean(qd),
             "mean_active_slots": mean(act),

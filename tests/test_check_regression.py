@@ -32,6 +32,18 @@ def cache_payload(saving):
     }
 
 
+def perf_payload(policies):
+    """policies: {name: (wall_ms, wall_mad, speedup, speedup_mad)}"""
+    return {
+        "schema": "repro.bench.perf/v1",
+        "policies": {
+            name: {"wall_ms_median": w, "wall_ms_median_mad": wm,
+                   "speedup_vs_host": s, "speedup_vs_host_mad": sm}
+            for name, (w, wm, s, sm) in policies.items()
+        },
+    }
+
+
 def write(directory, name, payload):
     directory.mkdir(parents=True, exist_ok=True)
     (directory / name).write_text(json.dumps(payload))
@@ -106,6 +118,72 @@ def test_self_test_bites(tmp_path):
     # no artifacts at all: the self-test must refuse to vacuously pass
     assert cr.main(["--current-dir", str(tmp_path / "empty"),
                     "--self-test"]) == 1
+
+
+def test_collect_perf_metrics_and_noise():
+    p = perf_payload({"none": (100.0, 2.0, 1.0, 0.05)})
+    assert cr.collect_metrics(p) == {
+        "perf/none/wall_ms_median": 100.0,
+        "perf/none/speedup_vs_host": 1.0,
+    }
+    assert cr.collect_noise(p) == {
+        "perf/none/wall_ms_median": 2.0,
+        "perf/none/speedup_vs_host": 0.05,
+    }
+    # non-perf schemas carry no noise channel
+    assert cr.collect_noise(traj_payload({"stride": 0.4})) == {}
+
+
+def test_wall_gate_bites_catastrophic_and_tolerates_noise():
+    wall = "perf/x/wall_ms_median"
+    base = {wall: 100.0}
+    # wall is lower-is-better with a catastrophic (100%) floor: a runner
+    # that is merely slower passes, a fused executor falling back to
+    # per-step dispatch (~10x) does not
+    assert cr.compare(base, {wall: 180.0}) == []
+    assert len(cr.compare(base, {wall: 1000.0})) == 1
+    # MAD widening: the same overrun under huge measurement noise passes
+    assert cr.compare(
+        base, {wall: 250.0},
+        baseline_noise={wall: 10.0}, current_noise={wall: 10.0}) == []
+    assert len(cr.compare(base, {wall: 250.0})) == 1
+
+
+def test_speedup_gate_is_noise_aware():
+    sp = "perf/x/speedup_vs_host"
+    base = {sp: 10.0}
+    # 40% drop > the 35% perf floor on a quiet measurement: flagged
+    assert len(cr.compare(base, {sp: 6.0})) == 1
+    # the same drop with MAD-scale dispersion on both sides: tolerated
+    assert cr.compare(
+        base, {sp: 6.0},
+        baseline_noise={sp: 1.0}, current_noise={sp: 1.0}) == []
+
+
+def test_self_test_covers_perf_artifacts(tmp_path):
+    current = tmp_path / "cur"
+    write(current, "BENCH_trajectory.json",
+          traj_payload({"stride": 0.44, "none": 0.0}))
+    write(current, "PERF_trajectory.json",
+          perf_payload({"none": (100.0, 2.0, 1.0, 0.02),
+                        "static_router": (60.0, 1.5, 1.6, 0.06)}))
+    assert cr.main(["--current-dir", str(current), "--self-test"]) == 0
+
+
+def test_perf_gate_end_to_end(tmp_path):
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    write(baseline, "PERF_trajectory.json",
+          perf_payload({"none": (100.0, 1.0, 1.0, 0.01)}))
+    # same-machine wobble: passes
+    write(current, "PERF_trajectory.json",
+          perf_payload({"none": (110.0, 1.0, 0.95, 0.01)}))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 0
+    # structural collapse: wall 10x, speedup halved -> gate fails
+    write(current, "PERF_trajectory.json",
+          perf_payload({"none": (1000.0, 1.0, 0.45, 0.01)}))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 1
 
 
 def test_committed_baselines_cover_the_gated_files():

@@ -1,0 +1,231 @@
+"""repro.obs.profile: the steady-state measurement harness, AOT compile
+timing, memory watermarks, device-trace merge, and the zero-overhead
+contract (profiling off must not change outputs, compiles, or the traced
+program), plus the serving queue/prefill/decode phase decomposition."""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.bench_trajectory import compile_counter
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.data.synthetic import request_trace
+from repro.models import transformer as tf
+from repro.obs import profile as profile_lib
+from repro.obs import trace as trace_lib
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import ServingMetrics
+
+
+# ---------------------------------------------------------------- measure
+
+
+def test_measure_robust_stats_and_call_count():
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        return jnp.zeros(())
+
+    m = profile_lib.measure(fn, iters=5, warmup=2)
+    assert calls["n"] >= 7            # >= warmup + iters
+    assert m.n_samples == 5
+    assert 1 <= m.iters <= 5
+    assert m.median_us >= 0 and m.mad_us >= 0
+    assert m.warmup_iters >= 2
+    assert m.rejected == m.n_samples - m.iters
+    assert m.median_s == pytest.approx(m.median_us / 1e6)
+
+
+def test_measure_warmup_zero_skips_warmup():
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        return np.zeros(())
+
+    m = profile_lib.measure(fn, iters=3, warmup=0)
+    assert calls["n"] == 3
+    assert m.warmup_iters == 0
+
+
+def test_measure_rejects_the_slow_tail():
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        # one sample sleeps ~50ms against a ~0ms baseline: far past the
+        # median + max(5 scaled MADs, 1x median) cutoff
+        if calls["n"] == 9:
+            time.sleep(0.05)
+        return np.zeros(())
+
+    m = profile_lib.measure(fn, iters=7, warmup=2)
+    assert m.rejected >= 1
+    assert m.median_us < 25_000       # the sleep did not poison the median
+
+
+# ------------------------------------------------------------ aot_compile
+
+
+def test_aot_compile_times_lower_and_compile_separately():
+    fn = jax.jit(lambda a: a * 2.0 + 1.0)
+    x = jnp.arange(8.0)
+    compiled, t = profile_lib.aot_compile(fn, x)
+    assert t["lower_s"] >= 0 and t["compile_s"] >= 0
+    np.testing.assert_array_equal(np.asarray(compiled(x)),
+                                  np.asarray(fn(x)))
+
+
+# ------------------------------------------------------- memory watermarks
+
+
+def test_memory_watermarks_sees_live_arrays():
+    keep = jnp.ones((256, 256), jnp.float32)   # 256KiB held live
+    mw = profile_lib.memory_watermarks()
+    assert mw["source"] in ("device.memory_stats", "jax.live_arrays")
+    assert mw["total_bytes"] >= keep.nbytes
+    assert mw["per_device"]
+    # the fallback has no peak watermark: None, never a fabricated 0
+    if mw["source"] == "jax.live_arrays":
+        assert mw["peak_bytes"] is None
+    del keep
+
+
+# ------------------------------------------- zero-overhead contract (pins)
+
+
+def _tiny_fn():
+    return jax.jit(lambda a: jnp.sin(a) @ a), jnp.eye(4)
+
+
+def test_measure_off_the_record_compiles_nothing_warm():
+    fn, x = _tiny_fn()
+    jax.block_until_ready(fn(x))      # warm the jit cache
+    with compile_counter() as counts:
+        profile_lib.measure(fn, x, iters=3, warmup=1)
+    assert counts["n"] == 0
+
+
+def test_device_trace_outputs_bit_identical_and_same_jaxpr():
+    fn, x = _tiny_fn()
+    baseline = np.asarray(jax.block_until_ready(fn(x)))
+    jaxpr_outside = str(jax.make_jaxpr(lambda a: jnp.sin(a) @ a)(x))
+    tracer = trace_lib.Tracer()
+    with profile_lib.device_trace(tracer):
+        inside = np.asarray(jax.block_until_ready(fn(x)))
+        jaxpr_inside = str(jax.make_jaxpr(lambda a: jnp.sin(a) @ a)(x))
+    np.testing.assert_array_equal(baseline, inside)
+    assert jaxpr_inside == jaxpr_outside
+
+
+# --------------------------------------------------- device-trace merging
+
+
+def test_device_trace_merges_a_valid_chrome_timeline():
+    tracer = trace_lib.Tracer()
+    fn, x = _tiny_fn()
+    with tracer.span("host_phase", cat="test"):
+        with profile_lib.device_trace(tracer):
+            jax.block_until_ready(fn(x))
+    trace_lib.validate_chrome_trace(tracer.sorted_events())
+    merged = [e for e in tracer.events
+              if e["name"] == "device_trace_merged"]
+    failed = [e for e in tracer.events
+              if e["name"] == "device_trace_failed"]
+    assert merged or failed           # the capture always annotates
+    if failed or merged[0]["args"]["n_events"] == 0:
+        pytest.skip("jax.profiler produced no device events here")
+    dev = [e for e in tracer.events if e["pid"] == trace_lib.PID_DEVICE]
+    assert any(e["ph"] == "X" for e in dev)
+    names = [e for e in dev
+             if e["ph"] == "M" and e["name"] == "process_name"]
+    assert len(names) == 1
+    assert names[0]["args"]["name"] == trace_lib.DEVICE_PROCESS_NAME
+    # merged spans are rebased onto the tracer clock: non-negative ts,
+    # and the export stays schema-valid (validated above)
+    assert all(e["ts"] >= 0.0 for e in dev)
+
+
+def test_merge_device_trace_empty_dir_is_a_noop(tmp_path):
+    tracer = trace_lib.Tracer()
+    n_before = len(tracer.events)
+    assert profile_lib.merge_device_trace(tracer, str(tmp_path)) == 0
+    assert len(tracer.events) == n_before
+
+
+# ------------------------------------------------------------- trend file
+
+
+def test_append_trend_appends_jsonl_rows(tmp_path):
+    path = str(tmp_path / "PERF_x.jsonl")
+    profile_lib.append_trend(path, {"a": 1})
+    profile_lib.append_trend(path, {"a": 2})
+    rows = [json.loads(line) for line in open(path)]
+    assert rows == [{"a": 1}, {"a": 2}]
+
+
+# ------------------------------------- serving phase decomposition (p50s)
+
+
+def test_phase_decomposition_sums_to_latency_exactly():
+    met = ServingMetrics(n_slots=2, modules_per_slot=4)
+    # request 0: queued 1.0s, prefilled 0.5s, decoded 2.5s
+    met.record_admit(0, arrival=0.0, now=1.5, prompt_len=4, prefill_s=0.5)
+    met.record_completion(0, now=4.0, n_out=3)
+    # request 1: admitted instantly
+    met.record_admit(1, arrival=2.0, now=2.25, prompt_len=4,
+                     prefill_s=0.25)
+    met.record_completion(1, now=5.0, n_out=3)
+    s = met.summary()
+    for r in met.requests.values():
+        queue = r["admit"] - r["prefill_s"] - r["arrival"]
+        assert queue >= 0 and r["prefill_s"] >= 0
+        assert queue + r["prefill_s"] + (r["done"] - r["admit"]) == \
+            pytest.approx(r["done"] - r["arrival"])
+    assert s["queue_p50_s"] == pytest.approx(0.5)   # median of 1.0, 0.0
+    assert s["prefill_p50_s"] == pytest.approx(0.375)
+    assert s["decode_p50_s"] == pytest.approx(2.625)
+    # pointwise domination: every phase percentile <= the same latency
+    # percentile (phases are nonneg parts of each request's latency)
+    for q in (50, 95):
+        for phase in ("queue", "prefill", "decode"):
+            assert s[f"{phase}_p{q}_s"] <= s[f"latency_p{q}_s"] + 1e-9
+
+
+def test_phase_percentiles_nan_when_no_completions():
+    met = ServingMetrics(n_slots=2, modules_per_slot=4)
+    s = met.summary()
+    for k in ("queue_p50_s", "prefill_p50_s", "decode_p50_s",
+              "queue_p95_s", "prefill_p95_s", "decode_p95_s"):
+        assert np.isnan(s[k])
+
+
+def test_engine_run_attributes_phases():
+    cfg = ModelConfig(
+        name="phase-test", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        head_dim=8, d_ff=64, vocab_size=97, dtype="float32",
+        lazy=LazyConfig(enabled=True, mode="plan"))
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    trace = request_trace(6, cfg.vocab_size, seed=0, mean_interarrival=0.3,
+                          short_prompt=(4, 4), long_prompt=(8, 8),
+                          short_output=(2, 4), long_output=(4, 6))
+    max_len = max(len(r.prompt) + r.max_new for r in trace) + 4
+    eng = ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=max_len)
+    res = eng.run(trace)
+    s = res.metrics.summary()
+    assert s["n_requests"] > 0
+    for r in res.metrics.requests.values():
+        assert r["prefill_s"] > 0                       # prefill is charged
+        queue = r["admit"] - r["prefill_s"] - r["arrival"]
+        assert queue >= -1e-9
+        if r["done"] is not None:
+            total = queue + r["prefill_s"] + (r["done"] - r["admit"])
+            assert total == pytest.approx(r["done"] - r["arrival"])
+    for phase in ("queue", "prefill", "decode"):
+        assert np.isfinite(s[f"{phase}_p50_s"])
+        assert s[f"{phase}_p50_s"] <= s["latency_p50_s"] + 1e-9
