@@ -17,6 +17,12 @@ machine-independent (gated at PERF_REL_TOLERANCE); the absolute
 WALL_ABS_TOLERANCE — it exists to catch a fused executor silently falling
 back to per-step dispatch (~10x), not a slower runner.
 
+The kernel bench (BENCH_kernels.json) gates the same way: its wall ratios
+(skip-on vs where-select speedups) ride the perf floors + MAD widening via
+the ``perf/`` prefix, while bytes-saving fraction, plan skip ratio, and
+the bit-exactness/parity flags are machine-independent and use the
+default tolerance.
+
 Tolerances live HERE, not in the workflow: CI invokes the script bare, so
 loosening a gate is a reviewed code change.
 
@@ -64,10 +70,16 @@ PERF_MAD_SIGMAS = 4.0
 # feeding collect_noise).
 PERF_GATED_FIELDS = ("wall_ms_median", "speedup_vs_host")
 
+# Kernel-bench wall ratios that gate with the perf floors + MAD widening
+# (each ships a `<field>_mad` sibling): both are same-run ratios on the
+# same machine, so they transfer across runners like speedup_vs_host.
+KERNEL_PERF_FIELDS = ("skip_speedup_vs_select", "blended_speedup_at_plan")
+
 GATED_FILES = (
     "BENCH_trajectory.json",
     "BENCH_cache_policies.json",
     "BENCH_serving.json",
+    "BENCH_kernels.json",
     "PERF_trajectory.json",
 )
 
@@ -118,6 +130,23 @@ def collect_metrics(payload: dict) -> dict[str, float]:
             ):
                 if field in row:
                     metrics[f"serving/{name}/{field}"] = float(row[field])
+    if schema.startswith("repro.bench.kernels"):
+        la = payload.get("lazy_attention", {})
+        for field in KERNEL_PERF_FIELDS:
+            if field in la:
+                # "perf/" prefix opts into the perf floors + MAD widening
+                metrics[f"perf/kernels_lazy_attention/{field}"] = float(la[field])
+        for field in ("bytes_saving_frac", "plan_skip_ratio"):
+            if field in la:
+                metrics[f"kernels/lazy_attention/{field}"] = float(la[field])
+        if "cached_serve_bitexact" in la:
+            metrics["kernels/lazy_attention/cached_serve_bitexact"] = float(
+                bool(la["cached_serve_bitexact"])
+            )
+        for section in ("gate_select", "ddim_update"):
+            row = payload.get(section, {})
+            if "parity_ok" in row:
+                metrics[f"kernels/{section}/parity_ok"] = float(bool(row["parity_ok"]))
     if schema.startswith("repro.bench.perf"):
         for name, row in payload.get("policies", {}).items():
             for field in PERF_GATED_FIELDS:
@@ -132,6 +161,13 @@ def collect_noise(payload: dict) -> dict[str, float]:
     dispersion in the same units as the metric."""
     noise: dict[str, float] = {}
     schema = str(payload.get("schema", ""))
+    if schema.startswith("repro.bench.kernels"):
+        la = payload.get("lazy_attention", {})
+        for field in KERNEL_PERF_FIELDS:
+            if f"{field}_mad" in la:
+                noise[f"perf/kernels_lazy_attention/{field}"] = float(
+                    la[f"{field}_mad"]
+                )
     if schema.startswith("repro.bench.perf"):
         for name, row in payload.get("policies", {}).items():
             for field in PERF_GATED_FIELDS:

@@ -89,6 +89,11 @@ def smoke() -> list:
     # emits artifacts/BENCH_trajectory.json
     import benchmarks.bench_trajectory as b_traj
     rows.extend(b_traj.run_smoke())
+
+    # skip-aware kernels: plan-bit wall/bytes acceptance + oracle parity;
+    # emits artifacts/BENCH_kernels.json (gated by check_regression)
+    import benchmarks.bench_kernels as b_kern
+    rows.extend(b_kern.run_smoke())
     return rows
 
 

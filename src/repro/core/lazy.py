@@ -32,6 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend as kernel_backend
+from repro.kernels.lazy_gate import ops as lazy_gate_ops
+
 Array = jax.Array
 
 # ---------------------------------------------------------------------------
@@ -158,20 +161,50 @@ def lazy_execute(fn: Callable[[Array], Array], z: Array, *,
     # works (and its accounted savings are real) even with no probe params
     if mode == "plan":
         if isinstance(plan_skip, jax.Array):
-            y = fn(z)
             if cache_y is None:
+                y = fn(z)
                 return LazyOut(y, y, None)
             if jnp.issubdtype(plan_skip.dtype, jnp.floating):
                 # relaxed plan entry (learned-router training): mix
                 # instead of select so gradients reach the router logits
-                y = mix_cached(plan_skip, y, cache_y, fresh)
-            else:
-                y = select_cached(plan_skip, y, cache_y, fresh)
+                y = mix_cached(plan_skip, fn(z), cache_y, fresh)
+                return LazyOut(y, y, None)
+            if (kernel_backend.get_backend() == "pallas"
+                    and plan_skip.ndim == 0
+                    and (fresh is None or getattr(fresh, "ndim", 0) == 0)):
+                # pallas backend, whole-batch plan bit (the fused/host DiT
+                # executors — plan rows are per layer, not per example):
+                # hoist the skip to a runtime ``lax.cond`` so a skipped
+                # module costs one cache read instead of both select
+                # branches.  Under a per-slot vmap (batched predicate) XLA
+                # lowers the cond back to the select — identical semantics,
+                # so the serving path is unaffected.
+                serve = plan_skip
+                if fresh is not None:
+                    serve = jnp.logical_and(serve, jnp.logical_not(fresh))
+                y = jax.lax.cond(serve, lambda: cache_y, lambda: fn(z))
+                return LazyOut(y, y, None)
+            y = select_cached(plan_skip, fn(z), cache_y, fresh)
             return LazyOut(y, y, None)
         if plan_skip and cache_y is not None:
             return LazyOut(cache_y, cache_y, None)   # module absent from HLO
         y = fn(z)
         return LazyOut(y, y, None)
+
+    if (mode == "masked" and cache_y is not None
+            and kernel_backend.get_backend() == "pallas"
+            and z.ndim == 3 and cache_y.ndim == 3
+            and cache_y.shape[:2] == z.shape[:2]):
+        # fused gate+select (DESIGN.md §Kernels): probe score, threshold
+        # and fresh-or-cached tile write in one pass.  On interpret hosts
+        # the op dispatches to a jnp reference that is op-for-op the
+        # gate_score + select_cached math below — bit-exact with the XLA
+        # baseline — so this path only changes the HLO on compiled-Pallas
+        # targets.
+        y, s = lazy_gate_ops.lazy_gate_select(
+            z, gate["w"], gate["b"], fn(z), cache_y, fresh,
+            threshold=float(threshold))
+        return LazyOut(y, y, s)
 
     s = gate_score(gate, z)                                        # (B,)
     if cache_y is None:

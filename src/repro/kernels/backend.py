@@ -1,0 +1,95 @@
+"""Kernel-backend switch: ``xla`` (the bit-exactness baseline) vs ``pallas``
+(skip-aware kernels — laziness realized at the memory level).
+
+One process-wide selector, mirrored by the ``--kernels pallas|xla`` CLI flag
+(launch/serve.py, launch/obs.py) and the ``REPRO_KERNELS`` env var.  The
+default is ``xla``: every executor keeps the where-select semantics that the
+bit-exactness contracts (fused-vs-host parity, mesh parity, serve digests)
+were pinned against.  Selecting ``pallas`` routes the hot paths through the
+skip-aware kernels (DESIGN.md §Kernels):
+
+  * plan-mode module skips early-exit via ``lax.cond`` / the plan-aware
+    flash-attention kernel instead of computing both select branches;
+  * masked mode fuses gate-score + threshold + select into one pass;
+  * the DDIM update (eps -> x_{t-1} + eta-noise) runs as one fused
+    read-modify-write.
+
+The two backends are numerically equivalent but NOT bit-identical to each
+other (different fusion boundaries); each backend is internally bit-exact
+between the fused and host-loop executors, because both trace the same
+``trajectory_step`` graph.  The sampler trace cache keys on the backend
+(sampling/trajectory._sampler_cache_key), so flipping it never serves a
+stale executable.
+
+``resolve_interpret`` is the one place interpret-mode defaulting lives:
+Pallas kernels interpret on hosts with no Mosaic lowering (CPU) and compile
+everywhere else, with ``REPRO_PALLAS_INTERPRET=0|1`` as the override for
+tests and TPU-sim debugging.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+BACKENDS = ("xla", "pallas")
+
+_state = {"backend": None}          # lazily seeded from the env
+
+
+def _from_env() -> str:
+    name = os.environ.get("REPRO_KERNELS", "xla").strip().lower() or "xla"
+    if name not in BACKENDS:
+        raise ValueError(
+            f"REPRO_KERNELS={name!r}: unknown kernel backend; "
+            f"expected one of {BACKENDS}")
+    return name
+
+
+def get_backend() -> str:
+    """The active kernel backend: 'xla' (default) or 'pallas'."""
+    if _state["backend"] is None:
+        _state["backend"] = _from_env()
+    return _state["backend"]
+
+
+def set_backend(name: str) -> str:
+    """Select the kernel backend process-wide.  Returns the previous one."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"expected one of {BACKENDS}")
+    prev = get_backend()
+    _state["backend"] = name
+    return prev
+
+
+@contextmanager
+def use_backend(name: str):
+    """Scoped backend selection (tests, benches):
+
+        with backend.use_backend("pallas"):
+            ...
+    """
+    prev = set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Interpret-mode default for Pallas kernels.
+
+    ``None`` (the production default) auto-detects: interpret on backends
+    with no Mosaic lowering (``jax.default_backend() == 'cpu'``), compiled
+    Mosaic on TPU/GPU.  ``REPRO_PALLAS_INTERPRET=0|1`` overrides the
+    auto-detection (tests that must pin one mode); an explicit bool arg
+    beats both."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"

@@ -1,0 +1,3 @@
+# Fused DDIM update: epsilon -> x_{t-1} (+ eta-noise) in one
+# read-modify-write over the latent, replacing the 6+ elementwise HLO ops
+# sampling/ddim.ddim_step otherwise emits (DESIGN.md §Kernels).

@@ -1,0 +1,104 @@
+"""Fused DDIM-update kernel (TPU Pallas).
+
+One grid step reads a latent tile, its epsilon tile (and, at eta > 0, a
+noise tile) plus the two per-example alpha-bar scalars, and writes the
+x_{t-1} tile — the whole Song et al. Eq. 16 update in a single
+read-modify-write:
+
+    x0    = (z - sqrt(1-a_t) eps) / sqrt(a_t)
+    sigma = eta sqrt((1-a_p)/(1-a_t)) sqrt(1 - a_t/a_p)
+    z'    = sqrt(a_p) x0 + sqrt(1-a_p - sigma^2) eps + sigma noise
+
+The XLA path materializes each intermediate (x0, the scaled eps, the
+sigma term) as its own HBM-bound elementwise op unless fusion wins; here
+the tile never leaves VMEM between ops.  ``eta`` is STATIC, matching
+``ddim_step``'s contract: at eta = 0 the deterministic update is emitted
+with no dead noise ops.
+
+Grid: (B, M // BLOCK_M) over the flattened latent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+
+BLOCK_M = 512
+
+
+def _ddim_update_kernel(z_ref, e_ref, at_ref, ap_ref, o_ref, *, eta: float):
+    z = z_ref[0].astype(jnp.float32)                 # (block_m,)
+    e = e_ref[0].astype(jnp.float32)
+    a_t = at_ref[0, 0]
+    a_p = ap_ref[0, 0]
+    x0 = (z - jnp.sqrt(1.0 - a_t) * e) / jnp.sqrt(a_t)
+    out = jnp.sqrt(a_p) * x0 + jnp.sqrt(1.0 - a_p) * e
+    del eta
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _ddim_update_noise_kernel(z_ref, e_ref, at_ref, ap_ref, n_ref, o_ref, *,
+                              eta: float):
+    z = z_ref[0].astype(jnp.float32)
+    e = e_ref[0].astype(jnp.float32)
+    n = n_ref[0].astype(jnp.float32)
+    a_t = at_ref[0, 0]
+    a_p = ap_ref[0, 0]
+    x0 = (z - jnp.sqrt(1.0 - a_t) * e) / jnp.sqrt(a_t)
+    sigma = (eta * jnp.sqrt((1.0 - a_p) / (1.0 - a_t))
+             * jnp.sqrt(1.0 - a_t / a_p))
+    dir_eps = jnp.sqrt(jnp.maximum(1.0 - a_p - sigma ** 2, 0.0))
+    out = jnp.sqrt(a_p) * x0 + dir_eps * e + sigma * n
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "interpret", "block_m"))
+def ddim_update(z, eps, a_t, a_p, noise=None, *, eta: float = 0.0,
+                interpret: Optional[bool] = None, block_m: int = BLOCK_M):
+    """z/eps[/noise]: (B, ...) latents; a_t/a_p: (B,) alpha-bars (a_p
+    already 1.0 on the final step — gathered by the caller, see
+    sampling/ddim.ddim_step).  Returns x_{t-1} with z's shape/dtype."""
+    interpret = resolve_interpret(interpret)
+    B = z.shape[0]
+    orig_shape = z.shape
+    M = 1
+    for s in z.shape[1:]:
+        M *= s
+    zf = z.reshape(B, M)
+    ef = eps.reshape(B, M)
+    pad = (-M) % block_m
+    if pad:
+        zf = jnp.pad(zf, ((0, 0), (0, pad)))
+        ef = jnp.pad(ef, ((0, 0), (0, pad)))
+    nM = (M + pad) // block_m
+    at2 = jnp.broadcast_to(a_t.astype(jnp.float32).reshape(-1, 1), (B, 1))
+    ap2 = jnp.broadcast_to(a_p.astype(jnp.float32).reshape(-1, 1), (B, 1))
+
+    tile = pl.BlockSpec((1, block_m), lambda bI, m: (bI, m))
+    scal = pl.BlockSpec((1, 1), lambda bI, m: (bI, 0))
+    use_noise = eta > 0.0 and noise is not None
+    if use_noise:
+        nf = noise.reshape(B, M)
+        if pad:
+            nf = jnp.pad(nf, ((0, 0), (0, pad)))
+        kern = functools.partial(_ddim_update_noise_kernel, eta=eta)
+        in_specs = [tile, tile, scal, scal, tile]
+        operands = (zf, ef, at2, ap2, nf)
+    else:
+        kern = functools.partial(_ddim_update_kernel, eta=eta)
+        in_specs = [tile, tile, scal, scal]
+        operands = (zf, ef, at2, ap2)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, nM),
+        in_specs=in_specs,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((B, nM * block_m), z.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :M].reshape(orig_shape)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the fused DDIM update.
+
+Compiled-Pallas targets (TPU) run the fused kernel; interpret hosts (CPU)
+run the jnp reference — the identical expression tree ``ddim_step``'s XLA
+path emits, so flipping the kernel backend on CPU does not move a bit on
+this op.  ``use_pallas=False`` forces the reference (HLO dry-runs)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.ddim_update.kernel import ddim_update as _ddim_kernel
+from repro.kernels.ddim_update.ref import ddim_update_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "use_pallas",
+                                             "interpret"))
+def ddim_update(z_t, eps, a_t, a_p, noise=None, *, eta: float = 0.0,
+                use_pallas: bool = True, interpret=None):
+    """Fused x_{t-1} update (see kernel.ddim_update for shapes)."""
+    interp = resolve_interpret(interpret)
+    if use_pallas and not interp:
+        return _ddim_kernel(z_t, eps, a_t, a_p, noise, eta=eta,
+                            interpret=interpret)
+    return ddim_update_ref(z_t, eps, a_t, a_p, noise, eta=eta)

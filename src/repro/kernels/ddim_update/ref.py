@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused DDIM update.
+
+Op-for-op the math ``sampling/ddim.ddim_step`` emits after gathering the
+alpha-bars, so the CPU dispatch of the pallas backend stays bit-exact
+with the XLA baseline on this path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddim_update_ref(z_t, eps, a_t, a_p, noise=None, *, eta: float = 0.0):
+    """z_t/eps[/noise]: (B, ...); a_t/a_p: (B,).  Song et al. Eq. 16 with
+    a_p pre-gathered (1.0 on the final step)."""
+    shape = (-1,) + (1,) * (z_t.ndim - 1)
+    a_t, a_p = a_t.reshape(shape), a_p.reshape(shape)
+    x0 = (z_t - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    if eta == 0.0 or noise is None:
+        return jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+    sigma = (eta * jnp.sqrt((1 - a_p) / (1 - a_t))
+             * jnp.sqrt(1 - a_t / a_p))
+    dir_eps = jnp.sqrt(jnp.maximum(1 - a_p - sigma ** 2, 0.0))
+    return jnp.sqrt(a_p) * x0 + dir_eps * eps + sigma * noise

@@ -8,33 +8,62 @@ online-softmax running stats (m, l, acc) live in VMEM scratch that persists
 across the sequential trailing grid dimension (k-blocks).
 
 Grid: (B·H, nQ, nK) — nK iterates innermost/sequentially per (bh, q).
+
+Two kernels live here:
+
+* ``flash_attention`` — the dense kernel.  Fully-masked k-blocks under
+  ``causal``/``window`` are pruned: the accumulate body runs under
+  ``pl.when(valid)`` where ``valid`` is the block-level mask-coverage
+  predicate, so a causal lower-triangle visit costs ~half the blocks and a
+  sliding window costs O(window) blocks per q-row instead of O(Sk).
+  Init (ki == 0) and finish (ki == n_k - 1) stay unconditional so
+  fully-masked q-rows still produce the zeros the oracle produces.
+
+* ``flash_attention_lazy`` — the plan-aware kernel (DESIGN.md §Kernels).
+  A scalar-prefetched skip row (one int32 per batch example) gates the
+  whole grid body: when the example's plan bit says reuse, every q/k/v
+  index map collapses to block (0, 0, 0) (nothing new is streamed in) and
+  the only work is a single copy-through of the cached output tile at the
+  last k-step — a skipped layer costs O(1) tiles instead of O(Sq·Sk).
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 BLOCK_Q = 128
 BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  causal: bool, window: int, softcap: float, sm_scale: float,
-                  block_q: int, block_k: int, n_k: int, seq_k: int):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
+def _block_valid(qi, ki, *, causal: bool, window: int, block_q: int,
+                 block_k: int):
+    """Block-level mask coverage: False iff every (qpos, kpos) pair in the
+    (qi, ki) tile is masked out, in which case the tile contributes exactly
+    nothing to the online softmax and can be skipped whole.  Returns a
+    traced bool, or the static True when no mask prunes anything."""
+    valid = True
+    if causal:
+        # any kpos <= qpos  <=>  first kpos <= last qpos
+        valid = ki * block_k <= qi * block_q + block_q - 1
+    if window:
+        # any kpos > qpos - window  <=>  last kpos > first qpos - window
+        w_ok = ki * block_k + block_k - 1 > qi * block_q - window
+        valid = w_ok if valid is True else valid & w_ok
+    return valid
 
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
 
+def _accumulate(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *, qi, ki,
+                causal: bool, window: int, softcap: float, sm_scale: float,
+                block_q: int, block_k: int, seq_k: int):
+    """One online-softmax step over the (qi, ki) tile."""
     q = q_ref[0].astype(jnp.float32) * sm_scale          # (bq, d)
     k = k_ref[0].astype(jnp.float32)                     # (bk, d)
     v = v_ref[0].astype(jnp.float32)                     # (bk, d)
@@ -62,6 +91,32 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     m_scr[...] = m_new
     l_scr[...] = l_new
 
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, softcap: float, sm_scale: float,
+                  block_q: int, block_k: int, n_k: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        _accumulate(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, qi=qi, ki=ki,
+                    causal=causal, window=window, softcap=softcap,
+                    sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+                    seq_k=seq_k)
+
+    valid = _block_valid(qi, ki, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k)
+    if valid is True:
+        _body()
+    else:
+        pl.when(valid)(_body)
+
     @pl.when(ki == n_k - 1)
     def _finish():
         l = jnp.maximum(l_scr[...], 1e-30)
@@ -71,10 +126,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "interpret", "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    softcap: float = 0.0, interpret: bool = True,
+                    softcap: float = 0.0, interpret: Optional[bool] = None,
                     block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
     """q: (B, H, Sq, d); k/v: (B, H, Sk, d) (kv heads pre-repeated for GQA).
-    Returns (B, H, Sq, d)."""
+    Returns (B, H, Sq, d).  ``interpret=None`` auto-detects the backend
+    (interpret on CPU, compiled Mosaic on TPU — ``backend.resolve_interpret``)."""
+    interpret = resolve_interpret(interpret)
     B, H, Sq, d = q.shape
     Sk = k.shape[2]
     pq = (-Sq) % block_q
@@ -111,4 +168,126 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(qf, kf, vf)
+    return out.reshape(B, H, nq * block_q, d)[:, :, :Sq]
+
+
+def _flash_lazy_kernel(skip_ref, q_ref, k_ref, v_ref, c_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, causal: bool, window: int,
+                       softcap: float, sm_scale: float, block_q: int,
+                       block_k: int, n_k: int, seq_k: int, n_heads: int):
+    """Plan-aware flash body.  ``skip_ref`` is the scalar-prefetched (B,)
+    int32 plan row: nonzero means this example's layer output is served from
+    cache.  The contract with the index maps below: when skip is set, the
+    q/k/v maps all collapse to block (0, 0, 0) and the cached map points at
+    the real tile, so the ONLY memory this grid step touches is one cached
+    output tile, copied through at the final k-step."""
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    skip = skip_ref[bh // n_heads] != 0
+    compute = jnp.logical_not(skip)
+
+    @pl.when(compute & (ki == 0))
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = _block_valid(qi, ki, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k)
+    run = compute if valid is True else compute & valid
+
+    @pl.when(run)
+    def _body():
+        _accumulate(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, qi=qi, ki=ki,
+                    causal=causal, window=window, softcap=softcap,
+                    sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+                    seq_k=seq_k)
+
+    @pl.when(compute & (ki == n_k - 1))
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+    @pl.when(skip & (ki == n_k - 1))
+    def _serve():
+        o_ref[0] = c_ref[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret", "block_q", "block_k"))
+def flash_attention_lazy(q, k, v, cached, skip, *, causal: bool = False,
+                         window: int = 0, softcap: float = 0.0,
+                         interpret: Optional[bool] = None,
+                         block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """Plan-aware flash attention.
+
+    q: (B, H, Sq, d); k/v: (B, H, Sk, d); cached: (B, H, Sq, d) — the
+    layer's cached attention output from the previous diffusion step;
+    skip: (B,) bool/int — the plan bit per batch example.  Where skip is
+    set the cached tile is served bit-exactly; elsewhere fresh attention
+    is computed.  Returns (B, H, Sq, d)."""
+    interpret = resolve_interpret(interpret)
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        cached = jnp.pad(cached, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // block_q
+    nk = (Sk + pk) // block_k
+    qf = q.reshape(B * H, nq * block_q, d)
+    kf = k.reshape(B * H, nk * block_k, d)
+    vf = v.reshape(B * H, nk * block_k, d)
+    cf = cached.reshape(B * H, nq * block_q, d)
+    skip_i32 = skip.astype(jnp.int32).reshape(B)
+
+    def _bit(s_ref, bh):
+        return s_ref[bh // H] != 0
+
+    # Index-map contract: skipped examples stream in nothing but the cached
+    # tile; fresh examples never touch the cache operand.
+    def qmap(bh, qi, ki, s_ref):
+        s = _bit(s_ref, bh)
+        return (jnp.where(s, 0, bh), jnp.where(s, 0, qi), 0)
+
+    def kvmap(bh, qi, ki, s_ref):
+        s = _bit(s_ref, bh)
+        return (jnp.where(s, 0, bh), jnp.where(s, 0, ki), 0)
+
+    def cmap(bh, qi, ki, s_ref):
+        s = _bit(s_ref, bh)
+        return (jnp.where(s, bh, 0), jnp.where(s, qi, 0), 0)
+
+    kern = functools.partial(
+        _flash_lazy_kernel, causal=causal, window=window, softcap=softcap,
+        sm_scale=d ** -0.5, block_q=block_q, block_k=block_k, n_k=nk,
+        seq_k=Sk, n_heads=H)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), qmap),
+            pl.BlockSpec((1, block_k, d), kvmap),
+            pl.BlockSpec((1, block_k, d), kvmap),
+            pl.BlockSpec((1, block_q, d), cmap),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, ki, s_ref: (bh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, nq * block_q, d), q.dtype),
+        interpret=interpret,
+    )(skip_i32, qf, kf, vf, cf)
     return out.reshape(B, H, nq * block_q, d)[:, :, :Sq]

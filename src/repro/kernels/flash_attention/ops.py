@@ -1,4 +1,15 @@
-"""Public wrapper: GQA-aware flash attention with jnp fallback."""
+"""Public wrapper: GQA-aware flash attention with jnp fallback, plus the
+plan-aware (skip-bit) entry point.
+
+Dispatch policy for the lazy path (DESIGN.md §Kernels): on a compiled
+Pallas target (TPU — ``resolve_interpret() == False``) the skip bit rides
+the scalar-prefetch operand of ``flash_attention_lazy`` and gates whole
+grid steps inside the kernel.  On hosts where Pallas only interprets (CPU)
+the grid loop would pay full cost regardless of ``pl.when``, so the same
+semantics are realized one level up: ``lax.cond`` on the all-skip
+predicate short-circuits the entire attention computation at runtime —
+the branch XLA takes when every plan bit says reuse touches nothing but
+the cached tiles.  Both realizations serve the cache bit-exactly."""
 from __future__ import annotations
 
 import functools
@@ -6,14 +17,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.flash_attention.kernel import (flash_attention,
+                                                 flash_attention_lazy)
+from repro.kernels.flash_attention.ref import attention_lazy_ref, attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
                                              "use_pallas", "interpret"))
 def gqa_flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
-                        use_pallas=True, interpret=True):
+                        use_pallas=True, interpret=None):
     """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — layout of models/layers.sdpa.
     Repeats kv heads to H, dispatches to the Pallas kernel or the oracle."""
     B, Sq, H, hd = q.shape
@@ -29,3 +42,48 @@ def gqa_flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         out = attention_ref(qt, kt, vt, causal=causal, window=window,
                             softcap=softcap)
     return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "use_pallas", "interpret"))
+def lazy_gqa_flash_attention(q, k, v, cached, skip, *, causal=False,
+                             window=0, softcap=0.0, use_pallas=True,
+                             interpret=None):
+    """Plan-aware attention in the models/layers.sdpa layout.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd); cached: (B, Sq, H, hd) — the
+    previous step's attention output; skip: (B,) bool/int plan bits.
+    Examples with skip set get their cached tile bit-exactly; the rest get
+    fresh attention.  Compiled-Pallas targets run the skip-gated kernel;
+    interpret-mode hosts hoist the skip to a runtime ``lax.cond`` so an
+    all-skip step costs O(1) instead of O(Sq·Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    ct = cached.transpose(0, 2, 1, 3)
+    skip = (skip != 0).reshape(B)
+
+    interp = resolve_interpret(interpret)
+    if use_pallas and not interp:
+        out = flash_attention_lazy(qt, kt, vt, ct, skip, causal=causal,
+                                   window=window, softcap=softcap,
+                                   interpret=interpret)
+    else:
+        def _serve_all():
+            return ct
+
+        def _mixed():
+            fresh = attention_ref(qt, kt, vt, causal=causal, window=window,
+                                  softcap=softcap)
+            return jnp.where(skip.reshape(-1, 1, 1, 1), ct, fresh)
+
+        out = jax.lax.cond(jnp.all(skip), _serve_all, _mixed)
+    return out.transpose(0, 2, 1, 3)
+
+
+__all__ = ["gqa_flash_attention", "lazy_gqa_flash_attention",
+           "flash_attention", "flash_attention_lazy", "attention_ref",
+           "attention_lazy_ref"]

@@ -22,3 +22,15 @@ def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.any(mask, -1)[None, None, :, None], p, 0.0)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_lazy_ref(q, k, v, cached, skip, *, causal=False, window=0,
+                       softcap=0.0):
+    """Oracle for the plan-aware kernel: where the per-example skip bit is
+    set the cached tile is served verbatim (bit-exact — no arithmetic
+    touches it), elsewhere fresh attention.  q/k/v/cached: (B, H, S, d);
+    skip: (B,) bool/int."""
+    fresh = attention_ref(q, k, v, causal=causal, window=window,
+                          softcap=softcap)
+    keep = (skip != 0).reshape(-1, 1, 1, 1)
+    return jnp.where(keep, cached, fresh)

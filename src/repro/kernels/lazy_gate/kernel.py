@@ -16,10 +16,14 @@ read-modify-write on out_ref is safe).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
 
 BLOCK_N = 128
 
@@ -41,10 +45,11 @@ def _lazy_gate_kernel(x_ref, scale_ref, shift_ref, w_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
-def lazy_gate_pooled(x, scale, shift, w, *, interpret: bool = True,
+def lazy_gate_pooled(x, scale, shift, w, *, interpret: Optional[bool] = None,
                      block_n: int = BLOCK_N):
     """x: (B, N, D); scale/shift: (B, D); w: (D, 1) -> pooled (B,) f32
     (pre-bias, pre-sigmoid; SUM over tokens — divide by N outside)."""
+    interpret = resolve_interpret(interpret)
     B, N, D = x.shape
     pad = (-N) % block_n
     if pad:
@@ -74,3 +79,96 @@ def lazy_gate_pooled(x, scale, shift, w, *, interpret: bool = True,
                       @ w.astype(jnp.float32))[:, 0]
         pooled = pooled - corr
     return pooled
+
+
+def _gate_select_kernel(z_ref, w_ref, b_ref, y_ref, c_ref, f_ref,
+                        o_ref, s_ref, acc_scr, *, threshold: float,
+                        n_tok: int):
+    """Fused probe + threshold + select (DESIGN.md §Kernels).
+
+    Grid (B, 2, nN), two sequential phases per example: phase 0 sweeps the
+    token tiles of the MODULATED probe input z accumulating sum_n(z @ w)
+    into scratch; phase 1 re-sweeps the tiles and writes either the fresh
+    or the cached output tile — the cached tile is copied through verbatim
+    (bit-exact), the skip decision never leaves VMEM, and the (B, N, D)
+    where-select intermediate the XLA path materializes is gone."""
+    ph = pl.program_id(1)
+    nj = pl.program_id(2)
+
+    @pl.when((ph == 0) & (nj == 0))
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ph == 0)
+    def _accum():
+        z = z_ref[0].astype(jnp.float32)              # (BLOCK_N, D)
+        w = w_ref[...].astype(jnp.float32)            # (D, 1)
+        # zero-padded tokens contribute 0 @ w = 0 — no pad correction
+        acc_scr[0, 0] += jnp.sum(z @ w)
+
+    @pl.when(ph == 1)
+    def _select():
+        score = jax.nn.sigmoid(acc_scr[0, 0] / n_tok
+                               + b_ref[0].astype(jnp.float32))
+        skip = (score > threshold) & (f_ref[0, 0] == 0)
+        o_ref[0] = jnp.where(skip, c_ref[0], y_ref[0])
+
+    @pl.when((ph == 1) & (nj == 0))
+    def _emit_score():
+        s_ref[0, 0] = jax.nn.sigmoid(acc_scr[0, 0] / n_tok
+                                     + b_ref[0].astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "interpret",
+                                             "block_n"))
+def lazy_gate_select(z, w, b, y_new, cache_y, fresh=None, *,
+                     threshold: float = 0.5,
+                     interpret: Optional[bool] = None,
+                     block_n: int = BLOCK_N):
+    """Fused masked-mode gating: probe score + threshold + fresh-or-cached
+    tile write in ONE pass.
+
+    z: (B, N, D) modulated probe input; w: (D, 1); b: (1,); y_new /
+    cache_y: (B, N, D) fresh module output and previous-step cache;
+    fresh: optional (B,)-broadcastable bool — set entries never serve
+    their (just-reset) cache.  Returns (y (B, N, D), score (B,) f32),
+    matching core.lazy masked-mode semantics (skip iff score > threshold)."""
+    interpret = resolve_interpret(interpret)
+    B, N, D = z.shape
+    pad = (-N) % block_n
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        y_new = jnp.pad(y_new, ((0, 0), (0, pad), (0, 0)))
+        cache_y = jnp.pad(cache_y, ((0, 0), (0, pad), (0, 0)))
+    nN = (N + pad) // block_n
+    if fresh is None:
+        f = jnp.zeros((B, 1), jnp.int32)
+    else:
+        f = jnp.broadcast_to(jnp.reshape(fresh, (-1, 1)),
+                             (B, 1)).astype(jnp.int32)
+
+    kern = functools.partial(_gate_select_kernel, threshold=threshold,
+                             n_tok=N)
+    y, score = pl.pallas_call(
+        kern,
+        grid=(B, 2, nN),
+        in_specs=[
+            pl.BlockSpec((1, block_n, D), lambda bI, p, n: (bI, n, 0)),
+            pl.BlockSpec((D, 1), lambda bI, p, n: (0, 0)),
+            pl.BlockSpec((1,), lambda bI, p, n: (0,)),
+            pl.BlockSpec((1, block_n, D), lambda bI, p, n: (bI, n, 0)),
+            pl.BlockSpec((1, block_n, D), lambda bI, p, n: (bI, n, 0)),
+            pl.BlockSpec((1, 1), lambda bI, p, n: (bI, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n, D), lambda bI, p, n: (bI, n, 0)),
+            pl.BlockSpec((1, 1), lambda bI, p, n: (bI, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nN * block_n, D), y_new.dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(z, w, b, y_new, cache_y, f)
+    return y[:, :N], score[:, 0]

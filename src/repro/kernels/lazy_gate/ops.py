@@ -1,9 +1,16 @@
-"""Jit'd public wrapper for the fused lazy-gate probe.
+"""Jit'd public wrappers for the fused lazy-gate kernels.
 
-On CPU (this container) the kernel body runs under interpret=True; on TPU
-pass interpret=False for the compiled Mosaic kernel.  ``use_pallas=False``
-falls back to the jnp oracle (used for HLO-level dry-runs where a Pallas
-call would not lower on the host platform).
+``lazy_gate_score`` is the probe alone (modulate + matvec + pool +
+sigmoid).  ``lazy_gate_select`` is the masked-mode fusion (DESIGN.md
+§Kernels): probe score + threshold + fresh-or-cached tile write in one
+pass, so masked mode stops materializing both select branches in HBM.
+
+Dispatch: compiled-Pallas targets (TPU) run the fused kernel; interpret
+hosts (CPU) run the jnp reference — which is op-for-op the same math
+``core.lazy`` masked mode emits today (``gate_score`` +
+``select_cached``), so the CPU pallas backend stays bit-exact with the
+XLA baseline on this path.  ``use_pallas=False`` forces the reference
+(HLO-level dry-runs where a Pallas call would not lower).
 """
 from __future__ import annotations
 
@@ -12,16 +19,35 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.lazy_gate.kernel import lazy_gate_pooled
-from repro.kernels.lazy_gate.ref import lazy_gate_pooled_ref
+from repro.kernels.lazy_gate.kernel import lazy_gate_select as _select_kernel
+from repro.kernels.lazy_gate.ref import (lazy_gate_pooled_ref,
+                                         lazy_gate_select_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def lazy_gate_score(x, scale, shift, w, b, *, use_pallas: bool = True,
-                    interpret: bool = True):
+                    interpret=None):
     """Fused modulate+probe+pool+sigmoid: (B,N,D)->(B,) in (0,1)."""
     if use_pallas:
         pooled = lazy_gate_pooled(x, scale, shift, w, interpret=interpret)
     else:
         pooled = lazy_gate_pooled_ref(x, scale, shift, w)
     return jax.nn.sigmoid(pooled / x.shape[1] + b.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "use_pallas",
+                                             "interpret"))
+def lazy_gate_select(z, w, b, y_new, cache_y, fresh=None, *,
+                     threshold: float = 0.5, use_pallas: bool = True,
+                     interpret=None):
+    """Fused masked-mode gating: (y, score) — serve the cached tile where
+    sigmoid(mean_n(z @ w) + b) > threshold (and the cache is not fresh),
+    the fresh tile elsewhere.  See kernel.lazy_gate_select for shapes."""
+    interp = resolve_interpret(interpret)
+    if use_pallas and not interp:
+        return _select_kernel(z, w, b, y_new, cache_y, fresh,
+                              threshold=threshold, interpret=interpret)
+    return lazy_gate_select_ref(z, w, b, y_new, cache_y, fresh,
+                                threshold=threshold)

@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the fused lazy-gate probe."""
+"""Pure-jnp oracles for the fused lazy-gate kernels."""
+import jax
 import jax.numpy as jnp
 
 
@@ -13,6 +14,22 @@ def lazy_gate_pooled_ref(x, scale, shift, w):
 def lazy_gate_score_ref(x, scale, shift, w, b):
     """Full probe: sigmoid(mean_n(probe) + b) — matches core.lazy.gate_score
     on modulated input."""
-    import jax
     pooled = lazy_gate_pooled_ref(x, scale, shift, w) / x.shape[1]
     return jax.nn.sigmoid(pooled + b)
+
+
+def lazy_gate_select_ref(z, w, b, y_new, cache_y, fresh=None, *,
+                         threshold: float = 0.5):
+    """Oracle for the fused gate+select kernel: op-for-op the math
+    ``core.lazy`` masked mode emits (``gate_score`` then ``select_cached``)
+    so the CPU dispatch of the pallas backend is bit-exact with the XLA
+    baseline.  Returns (y (B,N,D), score (B,) f32)."""
+    zp = z.astype(jnp.float32) @ w.astype(jnp.float32)         # (B, N, 1)
+    pooled = jnp.mean(zp[..., 0], axis=-1) + b.astype(jnp.float32)[0]
+    score = jax.nn.sigmoid(pooled)                             # (B,)
+    skip = jnp.reshape(score > threshold, (-1,) + (1,) * (y_new.ndim - 1))
+    if fresh is not None:
+        not_fresh = jnp.logical_not(
+            jnp.reshape(fresh, (-1,) + (1,) * (y_new.ndim - 1)))
+        skip = jnp.logical_and(skip, not_fresh)
+    return jnp.where(skip, cache_y, y_new), score

@@ -43,6 +43,7 @@ from repro.configs.registry import get_config
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import request_trace
 from repro.dist import hlo as hlo_lib
+from repro.kernels import backend as kernel_backend
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.models import dit as dit_lib
 from repro.models import transformer as tf
@@ -405,8 +406,15 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="comma-separated policies for the --perf legs")
     ap.add_argument("--perf-iters", type=int, default=3,
                     help="steady-state samples per --perf leg")
+    ap.add_argument("--kernels", default="", choices=["", "xla", "pallas"],
+                    help="kernel backend for every leg "
+                         "(repro.kernels.backend): 'pallas' routes skips "
+                         "through the skip-aware kernels (DESIGN.md "
+                         "§Kernels); default keeps the XLA baseline")
     ap.add_argument("--out-dir", default=ARTIFACTS)
     args = ap.parse_args(argv)
+    if args.kernels:
+        kernel_backend.set_backend(args.kernels)
 
     names = tuple(n.strip() for n in args.policies.split(",") if n.strip())
     perf_names = tuple(n.strip() for n in args.perf_policies.split(",")

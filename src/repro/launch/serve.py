@@ -73,6 +73,7 @@ from repro.configs.registry import get_config
 from repro.core import lazy as lazy_lib
 from repro.data.synthetic import request_trace
 from repro.dist import ctx as dist_ctx
+from repro.kernels import backend as kernel_backend
 from repro.models import transformer as tf
 from repro.serving.engine import ContinuousBatchingEngine, Engine
 
@@ -281,7 +282,17 @@ def main():
                     help="write a Chrome trace-event JSON of this run "
                          "(repro.obs: compile events, serving decisions "
                          "on the service clock) to this path")
+    ap.add_argument("--kernels", default="", choices=["", "xla", "pallas"],
+                    help="kernel backend (repro.kernels.backend): 'xla' "
+                         "(default) keeps the where-select bit-exactness "
+                         "baseline; 'pallas' routes skips through the "
+                         "skip-aware kernels — cond-hoisted plan skips, "
+                         "fused gate+select, fused DDIM update, and the "
+                         "plan-aware flash kernel on compiled-Pallas "
+                         "targets (DESIGN.md §Kernels)")
     args = ap.parse_args()
+    if args.kernels:
+        kernel_backend.set_backend(args.kernels)
 
     with contextlib.ExitStack() as stack:
         tracer = None

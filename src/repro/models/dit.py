@@ -7,6 +7,14 @@ residual connections remain unchanged").
 
 The lazy cache stores the raw module outputs F(Z) (pre-output-gate); the
 sampler threads it across diffusion steps.
+
+Kernel backend (DESIGN.md §Kernels): every skip/reuse select below routes
+through ``core.lazy.lazy_execute``, so selecting ``--kernels pallas``
+transparently rewires this model — traced plan bits become runtime
+``lax.cond`` early-exits (and, on compiled-Pallas targets, the
+scalar-prefetched ``flash_attention_lazy`` kernel behind
+``layers.attention_apply``), and masked-mode probes run the fused
+gate+select kernel.  Nothing in this file branches on the backend.
 """
 from __future__ import annotations
 

@@ -16,6 +16,8 @@ from jax import lax
 
 from repro.configs.base import ModelConfig, MoEConfig, MLAConfig, SSMConfig, XLSTMConfig
 from repro.dist import ctx
+from repro.kernels import backend as kernel_backend
+from repro.kernels.flash_attention import ops as flash_ops
 
 Array = jax.Array
 
@@ -256,8 +258,18 @@ def attention_apply(params: dict, cfg: ModelConfig, x: Array, *,
         k = apply_rope(k, cos, sin)
 
     if cache is None:
-        out = sdpa(q, k, v, causal=causal, window=window,
-                   softcap=cfg.attn_logit_softcap)
+        if (kernel_backend.get_backend() == "pallas"
+                and not kernel_backend.resolve_interpret()):
+            # compiled-Pallas target: the full-sequence hot-spot runs the
+            # blocked flash kernel (masked k-blocks pruned).  Interpret
+            # hosts keep the XLA sdpa — an interpreted grid loop is slower
+            # than the fused einsum and wins nothing.
+            out = flash_ops.gqa_flash_attention(
+                q, k, v, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap)
+        else:
+            out = sdpa(q, k, v, causal=causal, window=window,
+                       softcap=cfg.attn_logit_softcap)
         new_cache = None
     elif S == 1:
         W = cache["k"].shape[1]

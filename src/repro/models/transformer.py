@@ -12,6 +12,15 @@ plus an optional *shared-weight* attention block injected every
 LazyDiT gates (core/lazy.py) attach before each attention / ffn / block
 module; in autoregressive decode the "previous step" is the previous decode
 step (our beyond-paper transfer of the paper's diffusion-step caching).
+
+Kernel backend (DESIGN.md §Kernels): skip/reuse selects route through
+``core.lazy.lazy_execute`` and full-sequence attention through
+``layers.attention_apply``, so ``--kernels pallas`` rewires this model the
+same way it rewires DiT — cond-hoisted plan skips, fused masked-mode
+gate+select, and (on compiled-Pallas targets) the blocked flash kernel
+for prefill.  The per-slot vmapped decode path keeps its where-selects:
+under a batched predicate XLA lowers ``lax.cond`` back to the same
+select, so serving semantics are backend-invariant by construction.
 """
 from __future__ import annotations
 

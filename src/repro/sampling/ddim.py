@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
+from repro.kernels import backend as kernel_backend
+from repro.kernels.ddim_update import ops as ddim_update_ops
 from repro.models import dit as dit_lib
 
 Array = jax.Array
@@ -68,6 +70,12 @@ def ddim_step(sched: DiffusionSchedule, z_t: Array, eps: Array,
     sample is never perturbed."""
     a_t = sched.alphas_cumprod[t]
     a_p = jnp.where(t_prev >= 0, sched.alphas_cumprod[jnp.maximum(t_prev, 0)], 1.0)
+    if kernel_backend.get_backend() == "pallas":
+        # fused update (DESIGN.md §Kernels): one read-modify-write on a
+        # compiled-Pallas target; on interpret hosts the op's reference is
+        # the identical expression tree below, so CPU output is unchanged
+        return ddim_update_ops.ddim_update(
+            z_t, eps, a_t.reshape(-1), a_p.reshape(-1), noise, eta=eta)
     shape = (-1,) + (1,) * (z_t.ndim - 1)
     a_t, a_p = a_t.reshape(shape), a_p.reshape(shape)
     x0 = (z_t - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)

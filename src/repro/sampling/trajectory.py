@@ -63,6 +63,7 @@ from repro.cache import policy as cache_policy
 from repro.configs.base import ModelConfig
 from repro.dist import ctx
 from repro.dist import sharding as sharding_lib
+from repro.kernels import backend as kernel_backend
 from repro.models import dit as dit_lib
 from repro.obs import telemetry as obs_telemetry
 from repro.sampling import ddim
@@ -106,13 +107,16 @@ def _sampler_cache_key(cfg: ModelConfig, pol, n_steps: int,
     batch it was built for.  ``telemetry`` joins it too: the telemetry
     carry (repro.obs) changes the traced program, so on/off each own a
     separate executable and toggling observability never retraces the
-    other's."""
+    other's.  The kernel backend (repro.kernels.backend) joins the key
+    last: 'pallas' traces cond-hoisted skips and fused kernels into the
+    scan body, so flipping ``--kernels`` must never serve the other
+    backend's executable."""
     mesh_key = ctx.mesh_cache_key()
     return (cfg, type(pol), pol.exec_mode,
             float(getattr(pol, "threshold", 0.5)),
             int(n_steps), float(cfg_scale), float(eta),
             mesh_key, int(batch) if mesh_key and batch else None,
-            bool(telemetry))
+            bool(telemetry), kernel_backend.get_backend())
 
 
 def build_sampler(cfg: ModelConfig, policy, n_steps: int, cfg_scale: float,

@@ -44,6 +44,24 @@ def perf_payload(policies):
     }
 
 
+def kernels_payload(skip_speedup=30.0, skip_mad=1.0, blended=1.8,
+                    blended_mad=0.05, saving=0.96, bitexact=True):
+    return {
+        "schema": "repro.bench.kernels/v1",
+        "lazy_attention": {
+            "skip_speedup_vs_select": skip_speedup,
+            "skip_speedup_vs_select_mad": skip_mad,
+            "blended_speedup_at_plan": blended,
+            "blended_speedup_at_plan_mad": blended_mad,
+            "bytes_saving_frac": saving,
+            "plan_skip_ratio": 0.44,
+            "cached_serve_bitexact": bitexact,
+        },
+        "gate_select": {"parity_ok": True},
+        "ddim_update": {"parity_ok": True},
+    }
+
+
 def write(directory, name, payload):
     directory.mkdir(parents=True, exist_ok=True)
     (directory / name).write_text(json.dumps(payload))
@@ -186,6 +204,52 @@ def test_perf_gate_end_to_end(tmp_path):
                     "--current-dir", str(current)]) == 1
 
 
+def test_collect_kernel_metrics_and_noise():
+    p = kernels_payload()
+    m = cr.collect_metrics(p)
+    # wall ratios opt into the perf floors via the perf/ prefix; bytes,
+    # ratio, and the exactness/parity flags gate machine-independently
+    assert m["perf/kernels_lazy_attention/skip_speedup_vs_select"] == 30.0
+    assert m["perf/kernels_lazy_attention/blended_speedup_at_plan"] == 1.8
+    assert m["kernels/lazy_attention/bytes_saving_frac"] == 0.96
+    assert m["kernels/lazy_attention/plan_skip_ratio"] == 0.44
+    assert m["kernels/lazy_attention/cached_serve_bitexact"] == 1.0
+    assert m["kernels/gate_select/parity_ok"] == 1.0
+    assert m["kernels/ddim_update/parity_ok"] == 1.0
+    assert cr.collect_noise(p) == {
+        "perf/kernels_lazy_attention/skip_speedup_vs_select": 1.0,
+        "perf/kernels_lazy_attention/blended_speedup_at_plan": 0.05,
+    }
+
+
+def test_kernels_gate_end_to_end(tmp_path):
+    baseline, current = tmp_path / "base", tmp_path / "cur"
+    write(baseline, "BENCH_kernels.json", kernels_payload())
+    # same-machine wobble on the wall ratio: within the perf floor
+    write(current, "BENCH_kernels.json", kernels_payload(skip_speedup=25.0))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 0
+    # losing cache bit-exactness is a hard regression (1.0 -> 0.0)
+    write(current, "BENCH_kernels.json", kernels_payload(bitexact=False))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 1
+    # a collapsed bytes saving (memory-level laziness lost) is flagged
+    write(current, "BENCH_kernels.json", kernels_payload(saving=0.5))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 1
+    # a structural skip-speedup collapse is flagged past the perf floor
+    write(current, "BENCH_kernels.json",
+          kernels_payload(skip_speedup=3.0, skip_mad=0.1))
+    assert cr.main(["--baseline-dir", str(baseline),
+                    "--current-dir", str(current)]) == 1
+
+
+def test_self_test_covers_kernel_artifacts(tmp_path):
+    current = tmp_path / "cur"
+    write(current, "BENCH_kernels.json", kernels_payload())
+    assert cr.main(["--current-dir", str(current), "--self-test"]) == 0
+
+
 def test_committed_baselines_cover_the_gated_files():
     """The baselines this PR commits must exist and contain gated
     metrics — otherwise the CI gate would be a no-op."""
@@ -195,3 +259,6 @@ def test_committed_baselines_cover_the_gated_files():
         f"expected committed baselines under {cr.DEFAULT_BASELINE_DIR}, "
         f"found gated metrics: {sorted(gated)}"
     )
+    # the kernel bench baseline (this PR) must be among them
+    assert "kernels/lazy_attention/bytes_saving_frac" in gated
+    assert "perf/kernels_lazy_attention/skip_speedup_vs_select" in gated

@@ -68,6 +68,10 @@ def test_lazy_gate_matches_model_probe():
     (128, 384, True, 0, 0.0),        # decode-ish: kv longer than q
     (100, 200, True, 0, 0.0),        # non-multiple shapes (padding path)
     (128, 128, False, 0, 0.0),       # bidirectional (DiT)
+    (100, 200, True, 64, 0.0),       # odd shapes + window: k-block pruning
+    (130, 190, True, 96, 15.0),      # odd shapes + window + softcap
+    (128, 128, True, 512, 0.0),      # window > Sk: nothing pruned by window
+    (256, 256, False, 64, 0.0),      # window without causal
 ])
 def test_flash_matches_ref(Sq, Sk, causal, window, softcap):
     B, H, d = 2, 3, 64

@@ -1,0 +1,347 @@
+"""Skip-aware kernels (ISSUE PR 9): plan-aware flash attention, fused
+gate+select, fused DDIM update — oracle parity across dtypes and
+non-multiple-of-block shapes, BIT-exact cache serving on skip, the kernel
+backend switch (repro.kernels.backend), and end-to-end backend parity of
+the sampler (pallas vs xla on CPU, where both realize the same graph)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import backend as kb
+from repro.kernels.ddim_update.kernel import ddim_update as ddim_update_kernel
+from repro.kernels.ddim_update.ops import ddim_update as ddim_update_op
+from repro.kernels.ddim_update.ref import ddim_update_ref
+from repro.kernels.flash_attention.kernel import flash_attention_lazy
+from repro.kernels.flash_attention.ops import lazy_gqa_flash_attention
+from repro.kernels.flash_attention.ref import attention_lazy_ref
+from repro.kernels.lazy_gate.kernel import lazy_gate_select
+from repro.kernels.lazy_gate.ops import lazy_gate_select as lazy_gate_select_op
+from repro.kernels.lazy_gate.ref import lazy_gate_select_ref
+
+
+def _qkvc(key, B, H, Sq, Sk, d, dtype):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(dtype)
+    q = jax.random.normal(ks[0], (B, H, Sq, d), jnp.float32).astype(dt)
+    k = jax.random.normal(ks[1], (B, H, Sk, d), jnp.float32).astype(dt)
+    v = jax.random.normal(ks[2], (B, H, Sk, d), jnp.float32).astype(dt)
+    c = jax.random.normal(ks[3], (B, H, Sq, d), jnp.float32).astype(dt)
+    return q, k, v, c
+
+
+# ---------------------------------------------------------------------------
+# plan-aware flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("Sq,Sk,causal,window,softcap", [
+    (128, 128, False, 0, 0.0),       # DiT shape: bidirectional, block-exact
+    (100, 200, True, 0, 0.0),        # odd shapes (padding path)
+    (130, 190, False, 0, 0.0),       # odd shapes, bidirectional
+    (128, 128, True, 64, 0.0),       # sliding window (k-block pruning)
+    (128, 128, True, 512, 0.0),      # window > Sk
+    (128, 128, False, 0, 30.0),      # softcap
+])
+def test_flash_lazy_matches_ref(dtype, Sq, Sk, causal, window, softcap):
+    B, H, d = 3, 2, 64
+    q, k, v, c = _qkvc(jax.random.PRNGKey(0), B, H, Sq, Sk, d, dtype)
+    skip = jnp.array([True, False, True])
+    got = flash_attention_lazy(q, k, v, c, skip, causal=causal,
+                               window=window, softcap=softcap,
+                               interpret=True, block_q=64, block_k=64)
+    want = attention_lazy_ref(q, k, v, c, skip, causal=causal,
+                              window=window, softcap=softcap)
+    tol = 3e-2 if dtype == "bfloat16" else 3e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    # the skip-set examples are served BIT-exactly, not approximately
+    assert np.array_equal(np.asarray(got[0]), np.asarray(c[0]))
+    assert np.array_equal(np.asarray(got[2]), np.asarray(c[2]))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_lazy_all_skip_serves_cache_bitexact(dtype):
+    B, H, S, d = 2, 2, 100, 32
+    q, k, v, c = _qkvc(jax.random.PRNGKey(1), B, H, S, S, d, dtype)
+    got = flash_attention_lazy(q, k, v, c, jnp.ones((B,), bool),
+                               interpret=True, block_q=64, block_k=64)
+    assert np.array_equal(np.asarray(got), np.asarray(c))
+    # no-skip degenerates to dense attention
+    got = flash_attention_lazy(q, k, v, c, jnp.zeros((B,), bool),
+                               interpret=True, block_q=64, block_k=64)
+    want = attention_lazy_ref(q, k, v, c, jnp.zeros((B,), bool))
+    tol = 3e-2 if dtype == "bfloat16" else 3e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_lazy_gqa_ops_dispatch_cpu():
+    """The ops wrapper on CPU hoists the skip to lax.cond: all-skip serves
+    the cache bit-exactly, mixed skips match the where-select oracle."""
+    B, S, H, KV, hd = 3, 96, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    c = jax.random.normal(ks[3], (B, S, H, hd))
+    out = lazy_gqa_flash_attention(q, k, v, c, jnp.ones((B,), bool))
+    assert np.array_equal(np.asarray(out), np.asarray(c))
+    skip = jnp.array([True, False, True])
+    out = lazy_gqa_flash_attention(q, k, v, c, skip)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), H // KV, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), H // KV, axis=1)
+    want = attention_lazy_ref(q.transpose(0, 2, 1, 3), kt, vt,
+                              c.transpose(0, 2, 1, 3), skip)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(want.transpose(0, 2, 1, 3)),
+                               atol=3e-5, rtol=3e-5)
+    assert np.array_equal(np.asarray(out[0]), np.asarray(c[0]))
+
+
+# ---------------------------------------------------------------------------
+# fused lazy-gate + select
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("N", [64, 200, 260])
+def test_gate_select_kernel_matches_ref(dtype, N):
+    B, D = 3, 48
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    z = jax.random.normal(ks[0], (B, N, D), jnp.float32).astype(dt)
+    w = jax.random.normal(ks[1], (D, 1), jnp.float32) * 0.2
+    b = jax.random.normal(ks[2], (1,), jnp.float32)
+    y_new = jax.random.normal(ks[3], (B, N, D), jnp.float32).astype(dt)
+    cache_y = jax.random.normal(ks[4], (B, N, D), jnp.float32).astype(dt)
+    got_y, got_s = lazy_gate_select(z, w, b, y_new, cache_y, interpret=True,
+                                    block_n=64)
+    want_y, want_s = lazy_gate_select_ref(z, w, b, y_new, cache_y)
+    tol = 3e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=tol, rtol=tol)
+    # selection is categorical: whichever side is chosen arrives bit-exact
+    skipped = np.asarray(want_s) > 0.5
+    for i in range(B):
+        src = cache_y[i] if skipped[i] else y_new[i]
+        assert np.array_equal(np.asarray(got_y[i]), np.asarray(src)), (
+            f"example {i} (skip={skipped[i]}) was not served bit-exactly")
+
+
+def test_gate_select_fresh_mask_forces_compute():
+    """fresh=1 rows must NOT serve the cache even above threshold."""
+    B, N, D = 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    z = jax.random.normal(ks[0], (B, N, D))
+    w = jnp.ones((D, 1)) * 10.0          # saturate the gate: score ~ 1
+    b = jnp.zeros((1,))
+    y_new = jax.random.normal(ks[1], (B, N, D))
+    cache_y = jax.random.normal(ks[2], (B, N, D))
+    fresh = jnp.array([1, 0], jnp.int32)
+    for impl in (
+        lambda: lazy_gate_select(z, jnp.abs(w), b, y_new, cache_y, fresh,
+                                 interpret=True, block_n=64),
+        lambda: lazy_gate_select_ref(z, jnp.abs(w), b, y_new, cache_y, fresh),
+        lambda: lazy_gate_select_op(z, jnp.abs(w), b, y_new, cache_y, fresh),
+    ):
+        y, s = impl()
+        assert np.array_equal(np.asarray(y[0]), np.asarray(y_new[0]))
+
+
+def test_gate_select_ref_matches_core_lazy():
+    """The fused oracle is op-for-op the core.lazy composition
+    (gate_score -> threshold -> select_cached) — the CPU bit-exactness
+    anchor for the pallas backend's masked mode."""
+    from repro.core.lazy import gate_score, select_cached
+    B, N, D = 3, 80, 40
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    z = jax.random.normal(ks[0], (B, N, D))
+    w = jax.random.normal(ks[1], (D, 1)) * 0.3
+    b = jax.random.normal(ks[2], (1,))
+    y_new = jax.random.normal(ks[3], (B, N, D))
+    cache_y = jax.random.normal(ks[4], (B, N, D))
+    got_y, got_s = lazy_gate_select_ref(z, w, b, y_new, cache_y,
+                                        threshold=0.5)
+    want_s = gate_score({"w": w, "b": b}, z)
+    want_y = select_cached(want_s > 0.5, y_new, cache_y)
+    assert np.array_equal(np.asarray(got_s), np.asarray(want_s))
+    assert np.array_equal(np.asarray(got_y), np.asarray(want_y))
+
+
+# ---------------------------------------------------------------------------
+# fused DDIM update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("eta", [0.0, 0.5])
+@pytest.mark.parametrize("shape", [(2, 10, 10, 3), (3, 16, 16, 4)])
+def test_ddim_update_kernel_matches_ref(dtype, eta, shape):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    z = jax.random.normal(ks[0], shape).astype(dt)
+    eps = jax.random.normal(ks[1], shape).astype(dt)
+    noise = jax.random.normal(ks[2], shape).astype(dt) if eta > 0 else None
+    B = shape[0]
+    a_t = jnp.linspace(0.5, 0.8, B)
+    a_p = jnp.linspace(0.7, 0.95, B)
+    got = ddim_update_kernel(z, eps, a_t, a_p, noise, eta=eta,
+                             interpret=True, block_m=128)
+    # the ref computes in f32 and returns f32; the kernel rounds back to
+    # the latent dtype, so bf16 parity is at bf16 resolution
+    want = ddim_update_ref(z, eps, a_t, a_p, noise, eta=eta)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-6
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_ddim_update_ref_matches_sampler_step():
+    """The oracle IS sampling/ddim.ddim_step's update on gathered alphas."""
+    from repro.sampling import ddim
+    sched = ddim.linear_schedule(50)
+    B, shape = 2, (2, 8, 8, 4)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    z = jax.random.normal(ks[0], shape)
+    eps = jax.random.normal(ks[1], shape)
+    noise = jax.random.normal(ks[2], shape)
+    t = jnp.array([40, 40])
+    t_prev = jnp.array([30, 30])
+    for eta, n in ((0.0, None), (0.5, noise)):
+        want = ddim.ddim_step(sched, z, eps, t, t_prev, eta=eta, noise=n)
+        got = ddim_update_ref(z, eps, sched.alphas_cumprod[t],
+                              sched.alphas_cumprod[t_prev], n, eta=eta)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+    # ops-level dispatch on CPU serves the ref expression tree verbatim
+    # (compare jit-to-jit: the op is jitted, and eager-vs-jit differs at
+    # ulp scale because XLA fuses/reorders the arithmetic)
+    got = ddim_update_op(z, eps, sched.alphas_cumprod[t],
+                         sched.alphas_cumprod[t_prev], noise, eta=0.5)
+    want = jax.jit(lambda *a: ddim_update_ref(*a, eta=0.5))(
+        z, eps, sched.alphas_cumprod[t], sched.alphas_cumprod[t_prev], noise)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# the backend switch
+# ---------------------------------------------------------------------------
+
+
+def test_backend_switch_roundtrip():
+    assert kb.get_backend() in kb.BACKENDS
+    prev = kb.get_backend()
+    with kb.use_backend("pallas"):
+        assert kb.get_backend() == "pallas"
+        with kb.use_backend("xla"):
+            assert kb.get_backend() == "xla"
+        assert kb.get_backend() == "pallas"
+    assert kb.get_backend() == prev
+    with pytest.raises(ValueError):
+        kb.set_backend("triton")
+
+
+def test_resolve_interpret_precedence(monkeypatch):
+    # explicit argument beats everything
+    assert kb.resolve_interpret(True) is True
+    assert kb.resolve_interpret(False) is False
+    # env override beats auto-detection
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert kb.resolve_interpret() is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert kb.resolve_interpret() is True
+    # auto-detect: this suite pins the CPU backend -> interpret
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert kb.resolve_interpret() is True
+
+
+def test_env_seeds_backend(monkeypatch):
+    monkeypatch.setitem(kb._state, "backend", None)
+    monkeypatch.setenv("REPRO_KERNELS", "pallas")
+    assert kb.get_backend() == "pallas"
+    monkeypatch.setitem(kb._state, "backend", None)
+    monkeypatch.setenv("REPRO_KERNELS", "bogus")
+    with pytest.raises(ValueError):
+        kb.get_backend()
+    monkeypatch.setitem(kb._state, "backend", None)
+    monkeypatch.delenv("REPRO_KERNELS", raising=False)
+    assert kb.get_backend() == "xla"
+
+
+def test_sampler_cache_key_includes_backend():
+    """Flipping --kernels must never serve the other backend's executable."""
+    from repro import cache as cache_lib
+    from repro.configs.base import ModelConfig
+    from repro.sampling.trajectory import _sampler_cache_key
+    cfg = ModelConfig(name="k", family="dit", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, dit_patch=2,
+                      dit_input_size=8, dit_in_channels=4, dit_n_classes=4,
+                      rope_type="none", dtype="float32")
+    pol = cache_lib.get_policy("none")
+    with kb.use_backend("xla"):
+        k_xla = _sampler_cache_key(cfg, pol, 4, 1.5, 0.0, None, False)
+    with kb.use_backend("pallas"):
+        k_pl = _sampler_cache_key(cfg, pol, 4, 1.5, 0.0, None, False)
+    assert k_xla != k_pl
+    assert "xla" in k_xla and "pallas" in k_pl
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the pallas backend against the xla baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_dit():
+    from repro.configs.base import LazyConfig, ModelConfig
+    from repro.models import dit as dit_lib
+    from repro.sampling import ddim
+    cfg = ModelConfig(name="dit_kern", family="dit", n_layers=2, d_model=48,
+                      n_heads=2, n_kv_heads=2, d_ff=96, dit_patch=2,
+                      dit_input_size=8, dit_in_channels=4, dit_n_classes=6,
+                      rope_type="none", dtype="float32",
+                      lazy=LazyConfig(enabled=True, mode="masked"))
+    params = dit_lib.init_dit(jax.random.PRNGKey(0), cfg)
+    sched = ddim.linear_schedule(60)
+    return cfg, params, sched
+
+
+@pytest.mark.parametrize("variant", ["static_router", "lazy_gate", "eta"])
+def test_backend_end_to_end_parity(tiny_dit, variant):
+    """On CPU the pallas backend realizes the SAME graph semantics via
+    cond-hoisting / the fused-select oracle, so sampling is bit-exact
+    against the xla baseline for the plan path, the masked gate path, and
+    the stochastic (eta > 0) DDIM update."""
+    from repro import cache as cache_lib
+    from repro.sampling import ddim
+    cfg, params, sched = tiny_dit
+    labels = jnp.arange(2) % cfg.dit_n_classes
+    kw = dict(key=jax.random.PRNGKey(9), labels=labels, n_steps=4,
+              cfg_scale=1.5)
+    if variant == "static_router":
+        kw["policy"] = cache_lib.get_policy("static_router", ratio=0.5)
+    elif variant == "lazy_gate":
+        kw["policy"] = cache_lib.get_policy("lazy_gate", threshold=0.1)
+    else:
+        kw["eta"] = 0.5
+    outs = {}
+    for name in ("xla", "pallas"):
+        with kb.use_backend(name):
+            x, _ = ddim.ddim_sample(params, cfg, sched, **kw)
+            outs[name] = np.asarray(jax.block_until_ready(x))
+    assert np.all(np.isfinite(outs["xla"]))
+    assert np.array_equal(outs["xla"], outs["pallas"]), (
+        f"{variant}: pallas backend diverged from the xla baseline "
+        f"(max abs {np.abs(outs['xla'] - outs['pallas']).max():.3e})")
+
+
+def test_backend_env_flag_matches_cli_contract():
+    """REPRO_KERNELS is the env twin of --kernels (launch/serve, launch/obs):
+    both route through backend.set_backend."""
+    assert os.environ.get("REPRO_KERNELS", "") in ("", "xla", "pallas")
