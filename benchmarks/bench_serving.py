@@ -17,6 +17,20 @@ with obs telemetry on: goodput-under-SLO and the serving-side
 cached-vs-fresh drift means (repro.obs.slot_cache_drift) join the gated
 baselines — drift is the quality-proxy column, so a policy change that
 silently serves staler caches trips the regression gate.
+
+A third table (``overload``) is the front-door sweep: the SLO-class
+Poisson trace (data/synthetic.slo_request_trace) offered at 0.5x / 1x /
+2x / 4x of the pool's estimated capacity, served by three fixed-policy
+engines (none / stride / static_router — one policy pinned for every
+request) and by the SLO-aware server (policy bank + admission control +
+priority preemption, serving/admission.py).  Goodput counts a request
+only if it met its OWN declared deadline AND its assigned skip ratio fit
+its OWN quality budget, so a fixed policy loses one side or the other:
+diligent `none` blows latency-class deadlines under load, a pinned
+high-skip plan fails the quality class's budget outright.  The sweep
+asserts the SLO-aware server's goodput strictly beats every fixed policy
+at >= 2x offered load (the knee), and the per-load goodput/attainment
+cells are regression-gated (benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -24,13 +38,17 @@ import json
 import os
 
 import jax
+import numpy as np
 
 from benchmarks.common import ARTIFACTS
 from repro import cache as cache_lib
 from repro.configs.base import LazyConfig, ModelConfig
 from repro.core import lazy as lazy_lib
-from repro.data.synthetic import request_trace
+from repro.data.synthetic import request_trace, slo_request_trace
 from repro.models import transformer as tf
+from repro.serving import metrics as metrics_lib
+from repro.serving.admission import (AdmissionController,
+                                     default_policy_bank, trace_slo_stats)
 from repro.serving.engine import ContinuousBatchingEngine
 
 SCHEMA = "repro.bench.serving/v1"
@@ -54,6 +72,103 @@ def _cell_policy(name: str, seed: int):
     raise ValueError(name)
 
 
+# overload sweep: offered load as a multiple of the pool's estimated
+# capacity (1.0 == arrivals match what a diligent pool can absorb)
+OVERLOAD_LOADS = (0.5, 1.0, 2.0, 4.0)
+OVERLOAD_FIXED = ("none", "stride", "static_router")
+SLO_AWARE = "slo_aware"
+
+
+def capacity_interarrival(trace, n_slots: int) -> float:
+    """Virtual seconds per request a diligent pool can absorb: the serial
+    prefill charge plus the per-token decode share (a full-pool no-skip
+    step costs 1.0 virtual s and advances every slot one token)."""
+    pre = float(np.mean([metrics_lib.prefill_cost(len(r.prompt), n_slots)
+                         for r in trace]))
+    dec = float(np.mean([r.max_new for r in trace])) / n_slots
+    return pre + dec
+
+
+def _overload_engines(cfg, params, n_slots: int, max_len: int, seed: int):
+    """{server name: engine factory}; a fresh engine per cell so slot
+    caches and jit state never leak across loads."""
+    def fixed(name):
+        return ContinuousBatchingEngine(
+            cfg, params, n_slots=n_slots, max_len=max_len,
+            policy=_cell_policy(name, seed))
+
+    servers = {f"fixed:{n}": (lambda n=n: fixed(n)) for n in OVERLOAD_FIXED}
+    servers[SLO_AWARE] = lambda: ContinuousBatchingEngine(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        policy_bank=default_policy_bank(lazy_ratio=0.5, seed=seed),
+        admission=AdmissionController())
+    return servers
+
+
+def run_overload(cfg, params, *, n_slots: int, n_requests: int = 24,
+                 seed: int = 0, loads=OVERLOAD_LOADS):
+    """The offered-load sweep -> (rows, section dict for the payload).
+
+    Every server sees the SAME SLO-class trace at each load (seeded;
+    changing the interarrival scale rescales arrivals without reshuffling
+    prompts, outputs, or class draws), so the goodput columns differ only
+    by policy selection, shedding, and preemption.  The trace must be
+    long enough for queues to actually build — on a short burst every
+    server drains its backlog before latency-class deadlines bite and
+    shedding only loses requests; 24+ keeps the knee visible."""
+    probe = slo_request_trace(n_requests, cfg.vocab_size, seed=seed,
+                              short_prompt=(4, 4), long_prompt=(10, 10),
+                              short_output=(3, 6), long_output=(8, 14))
+    mi_capacity = capacity_interarrival(probe, n_slots)
+    section = {
+        "mi_capacity": mi_capacity,
+        "class_mix": trace_slo_stats(probe),
+        "loads": {},
+    }
+    rows = []
+    for load in loads:
+        mi = mi_capacity / load
+        trace = slo_request_trace(n_requests, cfg.vocab_size, seed=seed,
+                                  mean_interarrival=mi,
+                                  short_prompt=(4, 4), long_prompt=(10, 10),
+                                  short_output=(3, 6), long_output=(8, 14))
+        max_len = max(len(r.prompt) + r.max_new for r in trace) + 4
+        cells = {}
+        for name, make in _overload_engines(cfg, params, n_slots, max_len,
+                                            seed).items():
+            s = make().run(trace).metrics.summary()
+            cells[name] = {
+                "goodput_per_s": s["goodput_per_s"],
+                "requests_per_s": s["requests_per_s"],
+                "slo_attainment": s["slo_attainment"],
+                "n_shed": s["n_shed"],
+                "n_preemptions": s["n_preemptions"],
+            }
+            rows.append(("serving", "overload", f"load={load}x", name,
+                         f"goodput={s['goodput_per_s']:.3f}/s",
+                         f"slo_att={s['slo_attainment']:.2f}",
+                         f"shed={s['n_shed']}",
+                         f"preempt={s['n_preemptions']}"))
+        section["loads"][f"load_{load}x"] = {
+            "offered_load": load,
+            "mean_interarrival": mi,
+            "servers": cells,
+        }
+        # the acceptance knee: once offered load is at or past 2x
+        # capacity, per-request policy selection must strictly beat every
+        # one-policy-for-all server on goodput-under-SLO
+        if load >= 2.0:
+            best_fixed = max(cells[f"fixed:{n}"]["goodput_per_s"]
+                             for n in OVERLOAD_FIXED)
+            aware = cells[SLO_AWARE]["goodput_per_s"]
+            assert aware > best_fixed, (
+                f"SLO-aware goodput {aware:.3f}/s does not beat the best "
+                f"fixed policy ({best_fixed:.3f}/s) at {load}x load")
+            if load == 2.0:
+                section["advantage_at_2x"] = aware / max(best_fixed, 1e-9)
+    return rows, section
+
+
 def _cfg(n_layers: int, d_model: int) -> ModelConfig:
     return ModelConfig(
         name="serve-bench", n_layers=n_layers, d_model=d_model, n_heads=4,
@@ -62,7 +177,8 @@ def _cfg(n_layers: int, d_model: int) -> ModelConfig:
 
 
 def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
-                n_requests: int = 16, seed: int = 0):
+                n_requests: int = 16, overload_requests: int = 24,
+                seed: int = 0):
     """Returns (csv_rows, payload) and writes BENCH_serving.json."""
     cfg = _cfg(n_layers, d_model)
     params = tf.init_lm(jax.random.PRNGKey(0), cfg)
@@ -131,6 +247,11 @@ def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
                      f"prefill_p50={s['prefill_p50_s']:.2f}",
                      f"decode_p50={s['decode_p50_s']:.2f}"))
 
+    overload_rows, overload = run_overload(
+        cfg, params, n_slots=n_slots, n_requests=overload_requests,
+        seed=seed)
+    rows.extend(overload_rows)
+
     payload = {
         "schema": SCHEMA,
         "model": {"n_layers": n_layers, "d_model": d_model},
@@ -141,6 +262,7 @@ def run_serving(*, n_layers: int = 4, d_model: int = 64, n_slots: int = 4,
                  "executed gated-module calls + fixed step overhead",
         "results": results,
         "per_policy": per_policy,
+        "overload": overload,
     }
     os.makedirs(ARTIFACTS, exist_ok=True)
     path = os.path.normpath(os.path.join(ARTIFACTS, "BENCH_serving.json"))

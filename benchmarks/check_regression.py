@@ -130,6 +130,19 @@ def collect_metrics(payload: dict) -> dict[str, float]:
             ):
                 if field in row:
                     metrics[f"serving/{name}/{field}"] = float(row[field])
+        overload = payload.get("overload", {})
+        for lkey, load_row in overload.get("loads", {}).items():
+            for server, cell in load_row.get("servers", {}).items():
+                for field in ("goodput_per_s", "slo_attainment"):
+                    if field in cell:
+                        key = f"serving_overload/{lkey}/{server}/{field}"
+                        metrics[key] = float(cell[field])
+        if "advantage_at_2x" in overload:
+            # the acceptance knee: SLO-aware goodput over the best fixed
+            # policy at 2x offered load; must stay > 1 and not erode
+            metrics["serving_overload/advantage_at_2x"] = float(
+                overload["advantage_at_2x"]
+            )
     if schema.startswith("repro.bench.kernels"):
         la = payload.get("lazy_attention", {})
         for field in KERNEL_PERF_FIELDS:

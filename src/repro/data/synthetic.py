@@ -81,6 +81,26 @@ class RequestSpec:
     max_new: int              # decode-output budget
 
 
+@dataclass
+class SLORequestSpec(RequestSpec):
+    """A request that declares its latency/quality budget (serving/admission).
+
+    ``slo_latency_s`` is the end-to-end deadline on the virtual service
+    clock; ``max_skip_ratio`` is the quality budget — the largest plan skip
+    ratio the requester accepts (the serving-side quality proxy: the
+    per-policy drift columns in BENCH_serving.json map ratio to measured
+    cached-vs-fresh drift).  ``priority`` orders admission and preemption
+    (higher preempts lower).  ``policy_class`` is FILLED IN by the
+    admission controller — the per-request policy decision, kept on the
+    request so it is observable end-to-end."""
+
+    slo_latency_s: float = float("inf")
+    max_skip_ratio: float = 1.0
+    priority: int = 0
+    slo_class: str = ""       # generator label: latency | quality | batch
+    policy_class: str = ""    # assigned at admission (serving/admission.py)
+
+
 def request_trace(n_requests: int, vocab: int, *, seed: int = 0,
                   mean_interarrival: float = 0.5,
                   short_prompt: Tuple[int, int] = (2, 6),
@@ -105,6 +125,56 @@ def request_trace(n_requests: int, vocab: int, *, seed: int = 0,
                                 prompt=prompt,
                                 max_new=int(rng.integers(olo, ohi + 1))))
     return reqs
+
+
+# SLO-class mixture for slo_request_trace: (label, probability, per-class
+# knobs).  ``slo_scale`` multiplies the request's own decode budget into a
+# deadline (a 12-token answer gets a tighter absolute deadline than a
+# 4-token one), so overload degrades the classes differently instead of
+# tripping one global cliff.
+SLO_CLASS_MIX = (
+    # tight deadline, loose quality budget, preempts everything below.
+    # The deadline is generous enough for a diligent run on an IDLE pool
+    # but not for one behind a queue, so under load admission must
+    # actually choose: shift this class onto the high-skip plans (which
+    # its loose quality budget allows) or shed it — a diligent
+    # fixed-policy server starts missing these deadlines at ~1x load.
+    ("latency", 0.45, dict(slo_scale=1.6, slo_floor=8.0,
+                           max_skip_ratio=0.9, priority=2)),
+    # loose deadline, near-zero quality budget (must run ~diligent)
+    ("quality", 0.35, dict(slo_scale=3.0, slo_floor=12.0,
+                           max_skip_ratio=0.05, priority=1)),
+    # best-effort: loose on both axes, first to be shed or preempted
+    ("batch", 0.20, dict(slo_scale=8.0, slo_floor=30.0,
+                         max_skip_ratio=0.6, priority=0)),
+)
+
+
+def slo_request_trace(n_requests: int, vocab: int, *, seed: int = 0,
+                      mean_interarrival: float = 0.5,
+                      class_mix=SLO_CLASS_MIX,
+                      **trace_kwargs) -> List[SLORequestSpec]:
+    """``request_trace`` with a seeded SLO-class mixture layered on top:
+    same arrivals/prompts/outputs for a given seed (the class draw uses an
+    independent stream, so changing the mix never reshuffles the
+    workload).  Shared by the admission tests and the bench_serving
+    overload sweep."""
+    base = request_trace(n_requests, vocab, seed=seed,
+                         mean_interarrival=mean_interarrival, **trace_kwargs)
+    rng = np.random.default_rng(seed + 104729)        # independent stream
+    probs = np.array([p for _, p, _ in class_mix], np.float64)
+    probs = probs / probs.sum()
+    picks = rng.choice(len(class_mix), size=n_requests, p=probs)
+    out = []
+    for req, k in zip(base, picks):
+        label, _, kw = class_mix[int(k)]
+        out.append(SLORequestSpec(
+            rid=req.rid, arrival=req.arrival, prompt=req.prompt,
+            max_new=req.max_new, slo_class=label,
+            slo_latency_s=max(kw["slo_floor"],
+                              kw["slo_scale"] * req.max_new),
+            max_skip_ratio=kw["max_skip_ratio"], priority=kw["priority"]))
+    return out
 
 
 def frontend_stub_embeddings(rng: np.random.Generator, batch: int, n_frames: int,

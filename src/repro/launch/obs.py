@@ -41,7 +41,7 @@ from repro import cache as cache_lib
 from repro.cache import calibrate as calibrate_lib
 from repro.configs.registry import get_config
 from repro.core import lazy as lazy_lib
-from repro.data.synthetic import request_trace
+from repro.data.synthetic import slo_request_trace
 from repro.dist import hlo as hlo_lib
 from repro.kernels import backend as kernel_backend
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
@@ -51,7 +51,9 @@ from repro.obs import profile as profile_lib
 from repro.obs import report as report_lib
 from repro.obs import trace as trace_lib
 from repro.sampling import ddim, trajectory
+from repro.serving import admission as admission_lib
 from repro.serving import metrics as serving_metrics
+from repro.serving.admission import trace_slo_stats
 from repro.serving.engine import ContinuousBatchingEngine
 
 # same directory benchmarks/common.ARTIFACTS resolves to, without making
@@ -138,23 +140,32 @@ def collect_sampling(cfg, params, sched, policy_names, *, n_steps: int,
 
 def collect_serving(cfg, params, *, n_requests: int, n_slots: int,
                     seed: int, lazy_ratio: float, slo: float,
-                    tracer: trace_lib.Tracer) -> Dict[str, float]:
-    """A short telemetry-on continuous-batching trace -> service-clock
-    summary (latency/TTFT percentiles, goodput-under-SLO, drift means)."""
-    trace = request_trace(n_requests, cfg.vocab_size, seed=seed,
-                          mean_interarrival=0.3,
-                          short_prompt=(4, 4), long_prompt=(10, 10),
-                          short_output=(3, 6), long_output=(8, 14))
+                    tracer: trace_lib.Tracer) -> Dict:
+    """A short telemetry-on SLO-aware serving trace -> service-clock
+    summary (latency/TTFT percentiles, goodput-under-SLO, drift means)
+    plus per-policy-class breakdown.  Runs the full front-door path —
+    policy bank + admission control + priority preemption — so shed,
+    policy_assigned, and preempted events land in OBS_trace.json."""
+    trace = slo_request_trace(n_requests, cfg.vocab_size, seed=seed,
+                              mean_interarrival=0.3,
+                              short_prompt=(4, 4), long_prompt=(10, 10),
+                              short_output=(3, 6), long_output=(8, 14))
     max_len = max(len(r.prompt) + r.max_new for r in trace) + 4
-    plan = lazy_lib.uniform_plan(16, cfg.n_layers, 2, lazy_ratio, seed=seed)
+    bank = admission_lib.default_policy_bank(lazy_ratio=lazy_ratio,
+                                             seed=seed)
+    ctrl = admission_lib.AdmissionController()
     with tracer.span("serve_trace", cat="obs",
-                     args={"n_requests": n_requests, "n_slots": n_slots}):
+                     args={"n_requests": n_requests, "n_slots": n_slots,
+                           "classes": trace_slo_stats(trace)}):
         eng = ContinuousBatchingEngine(cfg, params, n_slots=n_slots,
-                                       max_len=max_len, lazy_mode="plan",
-                                       plan=plan, telemetry=True,
-                                       tracer=tracer)
+                                       max_len=max_len,
+                                       policy_bank=bank, admission=ctrl,
+                                       telemetry=True, tracer=tracer)
         res = eng.run(trace)
-    return res.metrics.summary(slo_latency_s=slo)
+    out = res.metrics.summary(slo_latency_s=slo)
+    out["by_class"] = res.metrics.class_summary()
+    out["admission"] = ctrl.describe()
+    return out
 
 
 def collect_perf(cfg, params, sched, policy_names, *, n_steps: int,

@@ -274,6 +274,26 @@ def main():
     ap.add_argument("--workload", action="store_true",
                     help="serve a synthetic Poisson request trace through "
                          "the continuous-batching engine")
+    # asyncio streaming front door (serving/server.py)
+    ap.add_argument("--listen", action="store_true",
+                    help="start the asyncio streaming front door: NDJSON "
+                         "over TCP, per-request SLO-aware policy selection "
+                         "from a policy bank (quality|balanced|latency), "
+                         "priority preemption and load shedding "
+                         "(serving/server.py, serving/admission.py)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --listen")
+    ap.add_argument("--port", type=int, default=8422,
+                    help="bind port for --listen (0 = ephemeral; the CI "
+                         "smoke uses 0)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="serving context budget (prompt + decode) for "
+                         "--listen")
+    ap.add_argument("--smoke-client", action="store_true",
+                    help="with --listen: stream one request end-to-end "
+                         "over localhost from a client thread, assert the "
+                         "first-chunk latency was recorded, then exit "
+                         "(the CI tripwire for the asyncio path)")
     ap.add_argument("--n-requests", type=int, default=16)
     ap.add_argument("--arrival-rate", type=float, default=2.0,
                     help="mean request arrivals per virtual second")
@@ -323,6 +343,10 @@ def _serve(args, tracer=None):
     mesh_cm = (dist_ctx.mesh(**dist_ctx.parse_mesh_spec(args.mesh))
                if args.mesh else contextlib.nullcontext())
     if cfg.family == "dit":
+        if args.listen:
+            raise SystemExit(
+                "--listen streams token decode; DiT archs serve whole "
+                "sampling trajectories (use the default fused path)")
         # DiT archs sample images: route through the fused single-compile
         # trajectory executor instead of the token-decode engines
         with mesh_cm:
@@ -337,6 +361,11 @@ def _serve(args, tracer=None):
     if args.ckpt:
         params = restore_checkpoint(args.ckpt, params)
     policy_label = args.policy or f"lazy:{args.lazy}"
+
+    if args.listen:
+        with mesh_cm:
+            _listen(args, cfg, params, tracer)
+        return
 
     if args.workload:
         # two prompt-length buckets (like bench_serving) bound the jitted
@@ -387,6 +416,68 @@ def _serve(args, tracer=None):
     policy = build_policy(args, cfg, params, n_steps=args.n_new)
     plan = build_plan(args, cfg, n_steps=args.n_new) \
         if policy is None and args.lazy == "plan" else None
+    _static_batch(args, cfg, params, policy, plan, policy_label, mesh_cm)
+
+
+def _listen(args, cfg, params, tracer=None) -> None:
+    """--listen: run the asyncio streaming front door around an SLO-aware
+    engine (policy bank + admission controller).  --smoke-client streams
+    one request from a client thread and asserts the wall-clock
+    first-chunk latency landed in the server stats, then exits — the CI
+    tripwire for the whole asyncio path."""
+    import asyncio
+
+    from repro.serving import server as server_lib
+    from repro.serving.admission import (AdmissionController,
+                                         default_policy_bank)
+
+    calib = (calibrate_lib.CalibrationArtifact.load(args.calibration)
+             if args.calibration else None)
+    bank = default_policy_bank(lazy_ratio=args.lazy_ratio, seed=args.seed,
+                               calibration=calib)
+    eng = ContinuousBatchingEngine(
+        cfg, params, n_slots=args.n_slots, max_len=args.max_len,
+        policy_bank=bank, admission=AdmissionController(), tracer=tracer)
+    srv = server_lib.StreamingServer(eng, host=args.host, port=args.port)
+
+    async def _amain():
+        await srv.start()
+        ratios = {k: round(v, 3) for k, v in eng.bank_ratios.items()}
+        print(f"listening on {srv.host}:{srv.port} arch={cfg.name} "
+              f"slots={args.n_slots} bank={ratios}", flush=True)
+        if not args.smoke_client:
+            await srv.serve_until_shutdown()
+            return
+        loop = asyncio.get_running_loop()
+
+        def client():
+            prompt = np.random.default_rng(args.seed).integers(
+                0, cfg.vocab_size, args.prompt_len)
+            evs = server_lib.request_once(
+                srv.host, srv.port, prompt, max_new=args.n_new,
+                slo_latency_s=1e4, max_skip_ratio=0.9, priority=1)
+            return evs, server_lib.fetch_stats(srv.host, srv.port)
+
+        events, stats = await loop.run_in_executor(None, client)
+        kinds = [e["event"] for e in events]
+        fc = stats["first_chunk_latency_s"]
+        print(f"smoke: events={kinds}")
+        print(f"smoke: first-chunk latency n={fc['n']} p50={fc['p50']}")
+        assert kinds and kinds[-1] == "done", \
+            f"smoke request did not complete: {kinds}"
+        n_tok = sum(1 for k in kinds if k == "token")
+        assert n_tok == args.n_new, \
+            f"expected {args.n_new} streamed tokens, got {n_tok}"
+        assert fc["n"] >= 1 and fc["p50"] is not None and fc["p50"] > 0, \
+            "first-chunk latency was not recorded"
+        await srv.stop()
+        print("smoke: OK")
+
+    asyncio.run(_amain())
+
+
+def _static_batch(args, cfg, params, policy, plan, policy_label,
+                  mesh_cm) -> None:
     prompt = np.random.default_rng(args.seed).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     with mesh_cm:

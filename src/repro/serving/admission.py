@@ -1,0 +1,197 @@
+"""SLO-aware admission control: per-request cache-policy selection.
+
+Schedule-based caching differentiates per request, not per deployment:
+Learning-to-Cache-style routers (arXiv:2406.01733) and Δ-DiT bands
+(arXiv:2406.01125) trade quality for speed differently from a diligent
+no-skip run, so the front door can pick the right policy for EACH request
+from its declared budget instead of pinning one policy for the whole
+server.  A request (data/synthetic.SLORequestSpec) declares
+
+  * ``slo_latency_s``   — end-to-end deadline on the virtual service clock;
+  * ``max_skip_ratio``  — quality budget: the largest plan skip ratio it
+    accepts (the serving quality proxy; BENCH_serving.json's per-policy
+    drift columns map ratio to measured cached-vs-fresh drift);
+  * ``priority``        — admission/preemption class.
+
+The controller owns the SELECTION rule; the engine owns the policy bank
+(compiled device plans) and execution.  ``bind`` hands the controller the
+bank's realized per-class skip ratios plus the service-clock constants, so
+feasibility estimates and the scheduler's admission estimates agree.
+
+Selection (``decide``) is a pure function of (request, queue-wait
+estimate) — deterministic under a seeded trace by construction:
+
+  1. quality-feasible classes: bank entries whose skip ratio fits the
+     request's quality budget.  None fit -> shed ``unsatisfiable``.
+  2. best quality that still makes the deadline: walk feasible classes
+     from lowest skip ratio up, estimating
+     ``queue_wait + prefill + max_new * step_cost(ratio)``; the first
+     class inside ``slo_latency_s`` wins.  Under light load every class
+     estimate includes ~zero wait, so requests get the best quality their
+     budget allows; as load grows the estimate pushes latency-bound
+     requests onto the high-skip plans.
+  3. nothing makes the deadline: if even the FASTEST feasible class blows
+     the deadline on an idle pool the SLO is unsatisfiable -> shed at
+     admission (the request never queues); otherwise the queue is the
+     problem -> shed ``overload`` (load shedding), or, with
+     ``shed_on_overload=False``, serve it anyway on the fastest class and
+     let goodput record the miss.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+from repro.serving import metrics as metrics_lib
+
+SHED_UNSATISFIABLE = "unsatisfiable"
+SHED_OVERLOAD = "overload"
+
+
+class AdmissionDecision(NamedTuple):
+    admitted: bool
+    policy_class: str      # assigned bank class ("" when shed)
+    reason: str            # "" | "unsatisfiable" | "overload"
+    est_service_s: float   # prefill + decode estimate under the class
+    quality_ok: bool       # assigned class fits the quality budget
+
+
+class AdmissionController:
+    """Per-request policy selection + load shedding for the serving engine.
+
+    Construct with knobs only; the engine calls ``bind`` with the policy
+    bank's realized ratios (it compiled the plans, so it knows them).
+    ``slack`` multiplies the deadline during feasibility checks: the
+    estimate cannot see co-runner interference (above all the SERIAL
+    prefill stalls of requests admitted while this one decodes), so the
+    default keeps ~30% headroom — tight-deadline traffic shifts onto the
+    high-skip classes a notch earlier than the naive estimate would,
+    which is what makes its realized attainment hold up under load."""
+
+    def __init__(self, *, shed_on_overload: bool = True,
+                 slack: float = 0.7):
+        self.shed_on_overload = shed_on_overload
+        self.slack = slack
+        self.class_ratios: Dict[str, float] = {}
+        self.n_slots = 1
+        self.step_overhead = metrics_lib.STEP_OVERHEAD
+        self.module_cost = metrics_lib.MODULE_COST
+        self._by_ratio: Tuple[Tuple[float, str], ...] = ()
+
+    # ------------------------------------------------------------ binding
+    def bind(self, class_ratios: Dict[str, float], n_slots: int, *,
+             step_overhead: float = metrics_lib.STEP_OVERHEAD,
+             module_cost: float = metrics_lib.MODULE_COST) -> None:
+        """Attach the engine's policy bank: {class name: realized plan skip
+        ratio} plus the service-clock constants the estimates price with."""
+        if not class_ratios:
+            raise ValueError("policy bank is empty")
+        self.class_ratios = dict(class_ratios)
+        self.n_slots = n_slots
+        self.step_overhead = step_overhead
+        self.module_cost = module_cost
+        # lowest skip ratio (best quality) first; name breaks ties so the
+        # walk order — and therefore selection — is deterministic
+        self._by_ratio = tuple(sorted(
+            (r, name) for name, r in self.class_ratios.items()))
+
+    # ------------------------------------------------------------ estimates
+    def est_service_s(self, prompt_len: int, max_new: int,
+                      ratio: float) -> float:
+        """Prefill + decode virtual seconds under a class ratio, priced
+        CONSERVATIVELY: this request skips at ``ratio`` while every other
+        slot runs diligent, so one decode step costs
+        ``overhead + module_cost * ((1-ratio) + (n_slots-1)) / n_slots``
+        and advances this request one token.  (Same-ratio co-runners only
+        make steps cheaper, so realized latency beats the estimate when
+        the mix skews lazy.)"""
+        prefill = metrics_lib.prefill_cost(
+            prompt_len, self.n_slots, step_overhead=self.step_overhead,
+            module_cost=self.module_cost)
+        step = self.step_overhead + self.module_cost * (
+            (1.0 - ratio) + (self.n_slots - 1)) / self.n_slots
+        return prefill + max_new * step
+
+    # ------------------------------------------------------------ decision
+    def decide(self, req, *, queue_wait_s: float = 0.0
+               ) -> AdmissionDecision:
+        """Select a policy class for ``req`` or shed it (see module doc).
+        ``queue_wait_s`` is the engine's estimate of virtual seconds the
+        request waits before its slot (scheduler.pending_work / n_slots) —
+        deliberately optimistic, so shedding errs toward serving."""
+        if not self._by_ratio:
+            raise RuntimeError("AdmissionController.decide before bind()")
+        max_skip = float(getattr(req, "max_skip_ratio", 1.0))
+        slo = float(getattr(req, "slo_latency_s", float("inf")))
+        prompt_len = len(req.prompt)
+
+        feasible = [(r, name) for r, name in self._by_ratio
+                    if r <= max_skip + 1e-9]
+        if not feasible:
+            return AdmissionDecision(False, "", SHED_UNSATISFIABLE, 0.0,
+                                     False)
+        deadline = slo * self.slack
+        for r, name in feasible:                     # best quality first
+            est = self.est_service_s(prompt_len, req.max_new, r)
+            if queue_wait_s + est <= deadline:
+                return AdmissionDecision(True, name, "", est, True)
+        r_fast, fast = feasible[-1]                  # highest-skip feasible
+        est = self.est_service_s(prompt_len, req.max_new, r_fast)
+        if est > deadline:
+            # infeasible even on an idle pool: shed NOW, never queue
+            return AdmissionDecision(False, "", SHED_UNSATISFIABLE, est,
+                                     False)
+        if self.shed_on_overload:
+            return AdmissionDecision(False, "", SHED_OVERLOAD, est, False)
+        return AdmissionDecision(True, fast, "", est, True)
+
+    # ------------------------------------------------------------ reporting
+    def describe(self) -> Dict:
+        return {"class_ratios": dict(self.class_ratios),
+                "shed_on_overload": self.shed_on_overload,
+                "slack": self.slack}
+
+
+def default_policy_bank(*, lazy_ratio: float = 0.5, seed: int = 0,
+                        calibration=None,
+                        quality: Optional[str] = None) -> Dict[str, object]:
+    """The stock three-class bank (launch/serve.py --listen, bench_serving
+    overload sweep, docs/policies.md):
+
+      * ``quality``  — `none` (diligent; every quality budget fits), or
+        `smoothcache` when a calibration artifact is supplied;
+      * ``balanced`` — `static_router` at half the latency tier's ratio;
+      * ``latency``  — `static_router` at ``lazy_ratio`` (the high-skip
+        plan latency-SLO traffic lands on under load).
+
+    Returns {class name: CachePolicy}; the engine compiles the plans and
+    reports realized ratios to the controller via ``bind``."""
+    from repro import cache as cache_lib
+    if quality is None:
+        q = (cache_lib.get_policy("smoothcache", calibration=calibration)
+             if calibration is not None else cache_lib.get_policy("none"))
+    else:
+        q = cache_lib.get_policy(quality)
+    return {
+        "quality": q,
+        "balanced": cache_lib.get_policy("static_router",
+                                         ratio=lazy_ratio / 2, seed=seed),
+        "latency": cache_lib.get_policy("static_router", ratio=lazy_ratio,
+                                        seed=seed),
+    }
+
+
+def quality_budget_ok(class_ratios: Dict[str, float], policy_class: str,
+                      max_skip_ratio: float) -> bool:
+    """Did the assigned class fit the request's quality budget?  (Metrics
+    goodput counts a request only when this held — a fixed-policy engine
+    forcing one class onto every request fails it for strict requests.)"""
+    return class_ratios.get(policy_class, 0.0) <= max_skip_ratio + 1e-9
+
+
+def trace_slo_stats(requests: Sequence) -> Dict[str, int]:
+    """Per-class request counts of a trace (bench/report labeling)."""
+    out: Dict[str, int] = {}
+    for r in requests:
+        cls = getattr(r, "slo_class", "") or "unclassified"
+        out[cls] = out.get(cls, 0) + 1
+    return out

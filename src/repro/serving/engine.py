@@ -30,7 +30,8 @@ tree shards over the data axis — one decode lane per shard.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, NamedTuple, Optional, Tuple
+import math
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +45,7 @@ from repro.models import transformer as tf
 from repro.obs import telemetry as obs_telemetry
 from repro.obs import trace as obs_trace
 from repro.serving import metrics as metrics_lib
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import PendingEntry, Scheduler
 from repro.serving.slots import SlotPool
 
 LAZY_MODES = ("off", "masked", "plan")
@@ -235,6 +236,17 @@ class ContinuousBatchingEngine:
     ``cost_budget`` caps the scheduler's lazy-aware step-cost estimate
     (virtual seconds per decode step); None means slots are the only limit.
 
+    SLO-aware front-door mode: ``policy_bank={class name: plan-compatible
+    policy}`` compiles every class's schedule into one (K, H, L, 2) device
+    array (H = lcm of the class horizons, so bank rows equal each class's
+    own rows exactly) and serves a PER-SLOT policy mix in the same jitted
+    step; ``admission=`` (serving/admission.AdmissionController) then
+    selects a class per request from its declared SLO/quality budget,
+    sheds infeasible requests at admission, and unlocks priority
+    preemption (see EngineSession).  Incremental use: ``session()``
+    returns an EngineSession whose ``step()`` yields streaming lifecycle
+    events — ``run()`` is the batch wrapper around it.
+
     Observability (repro.obs): ``telemetry=True`` makes the jitted step
     also return per-slot cached-vs-fresh lazy-cache drift
     (obs.telemetry.slot_cache_drift) — the host masks fresh / inactive
@@ -248,14 +260,30 @@ class ContinuousBatchingEngine:
                  n_slots: int = 4, max_len: int = 512,
                  lazy_mode: str = "off", plan=None,
                  policy=None,
+                 policy_bank: Optional[Dict[str, object]] = None,
+                 admission=None,
                  eos_id: Optional[int] = None,
                  cost_budget: Optional[float] = None,
                  batch_synchronous: bool = False,
                  window_override: Optional[int] = None,
                  telemetry: bool = False,
                  tracer=None):
-        self.policy = _resolve_serving_policy(policy, lazy_mode, plan, cfg)
-        self.lazy_mode = mode = self.policy.exec_mode
+        if policy_bank is not None and policy is not None:
+            raise ValueError("pass either policy= or policy_bank=, not both")
+        if admission is not None and policy_bank is None:
+            raise ValueError("admission control requires a policy_bank")
+        if policy_bank is not None:
+            # per-request policy bank: every class must be plan-compatible
+            # (off = the all-False plan) so one jitted step serves the whole
+            # mix; traced per-slot state is the base step counter, which is
+            # all the bank row gather reads
+            self.policy = cache_policy.CachePolicy()
+            self.lazy_mode = mode = "plan"
+        else:
+            self.policy = _resolve_serving_policy(policy, lazy_mode, plan,
+                                                  cfg)
+            self.lazy_mode = mode = self.policy.exec_mode
+        self.admission = admission
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -276,23 +304,33 @@ class ContinuousBatchingEngine:
         # (plan_horizon) so odd-length schedules cycle without truncation
         # or misalignment; the host-side compiled plan survives only as
         # the scheduler's admission-time skip-budget estimate.
-        self.plan_horizon = horizon = self.policy.plan_horizon(
-            POLICY_PLAN_STEPS)
-        self._init_state = self.policy.init_traced_state(
-            n_steps=horizon, n_layers=cfg.n_layers, n_modules=2)
         self._device_plan = None
         self.plan_ratio = 0.0
-        if mode == "plan":
-            self._device_plan = self.policy.device_plan(
-                horizon, cfg.n_layers, 2)
-            if self._device_plan is None:
-                raise ValueError(
-                    f"policy {self.policy.name!r} drives 'plan' mode but "
-                    "compiled no plan")
-            plan_arr = np.asarray(self._device_plan)
-            total = self.modules_per_slot * len(plan_arr)
-            self.plan_ratio = sum(
-                _row_skips(r, self._attn_like) for r in plan_arr) / max(total, 1)
+        self.bank_classes: Tuple[str, ...] = ()
+        self.bank_ratios: Dict[str, float] = {}
+        self._class_index: Dict[str, int] = {}
+        if policy_bank is not None:
+            horizon = self._compile_bank(policy_bank)
+            self.plan_horizon = horizon
+            if admission is not None:
+                admission.bind(self.bank_ratios, n_slots)
+        else:
+            self.plan_horizon = horizon = self.policy.plan_horizon(
+                POLICY_PLAN_STEPS)
+            if mode == "plan":
+                self._device_plan = self.policy.device_plan(
+                    horizon, cfg.n_layers, 2)
+                if self._device_plan is None:
+                    raise ValueError(
+                        f"policy {self.policy.name!r} drives 'plan' mode "
+                        "but compiled no plan")
+                plan_arr = np.asarray(self._device_plan)
+                total = self.modules_per_slot * len(plan_arr)
+                self.plan_ratio = sum(
+                    _row_skips(r, self._attn_like)
+                    for r in plan_arr) / max(total, 1)
+        self._init_state = self.policy.init_traced_state(
+            n_steps=horizon, n_layers=cfg.n_layers, n_modules=2)
         pol = self.policy
 
         @jax.jit
@@ -305,19 +343,26 @@ class ContinuousBatchingEngine:
 
         @jax.jit
         def _step(params, tok, index, cache, lazy_cache, fresh, slot_state,
-                  plan):
+                  plan, policy_idx):
             """One mixed-position decode step, policy decisions included:
             per-slot plan rows come from the traced step counters in
             ``slot_state`` (cycled over the policy horizon), fresh slots
             serve all-False rows, and every slot's traced state advances
             via the policy's pure pytree transform (vmapped over the slot
             axis) — the whole per-step decision path is inside this one
-            compiled program.  With telemetry on the step additionally
-            reduces per-slot lazy-cache drift (repro.obs); off, the drift
-            output is None (zero pytree leaves, program unchanged)."""
+            compiled program.  With a policy bank, ``plan`` is (K, H, L, 2)
+            and ``policy_idx`` maps each slot to its admission-assigned
+            class, so one compiled program serves the whole per-request
+            policy mix.  With telemetry on the step additionally reduces
+            per-slot lazy-cache drift (repro.obs); off, the drift output
+            is None (zero pytree leaves, program unchanged)."""
             rows = None
             if plan is not None:
-                rows = plan[slot_state["step"] % horizon]      # (B, L, 2)
+                step_idx = slot_state["step"] % horizon
+                if policy_idx is not None:
+                    rows = plan[policy_idx, step_idx]          # (B, L, 2)
+                else:
+                    rows = plan[step_idx]                      # (B, L, 2)
                 if fresh is not None:
                     rows = jnp.where(fresh[:, None, None], False, rows)
             old_lazy_cache = lazy_cache
@@ -341,6 +386,69 @@ class ContinuousBatchingEngine:
 
         self._prefill = _prefill
         self._step = _step
+
+    # ------------------------------------------------------------ policy bank
+    def _compile_bank(self, policy_bank: Dict[str, object]) -> int:
+        """Compile {class name: plan-compatible policy} into one
+        (K, H, L, 2) bool device array, H = lcm of the per-class horizons.
+        Because every class horizon divides H, ``bank[k, t % H]`` equals
+        class k's own ``rows[t % h_k]`` at EVERY step t — bank execution
+        is exact, not an approximation of the single-policy engines (the
+        parity test in tests/test_admission.py pins this).  Realized
+        per-class skip ratios land in ``bank_ratios`` for the admission
+        controller and the scheduler's cost estimates."""
+        cfg = self.cfg
+        rows_by_class = []
+        for name, p in policy_bank.items():
+            p = cache_policy.get_policy(p) if isinstance(p, str) else p
+            h = p.plan_horizon(POLICY_PLAN_STEPS)
+            if p.exec_mode == "off":
+                rows = np.zeros((h, cfg.n_layers, 2), bool)
+            elif p.exec_mode == "plan":
+                dp = p.device_plan(h, cfg.n_layers, 2)
+                if dp is None:
+                    raise ValueError(
+                        f"bank class {name!r}: policy {p.name!r} drives "
+                        "'plan' mode but compiled no plan")
+                rows = np.asarray(dp, bool)
+            else:
+                raise ValueError(
+                    f"bank class {name!r}: policy {p.name!r} drives "
+                    f"exec_mode {p.exec_mode!r}; a policy bank supports "
+                    "'off' and 'plan'")
+            rows_by_class.append((name, rows))
+        if not rows_by_class:
+            raise ValueError("policy_bank is empty")
+        H = 1
+        for _, rows in rows_by_class:
+            H = math.lcm(H, len(rows))
+        if H > 4096:
+            raise ValueError(
+                f"policy bank horizon lcm {H} > 4096; align the per-class "
+                "schedule lengths")
+        bank = np.zeros((len(rows_by_class), H, cfg.n_layers, 2), bool)
+        total = self.modules_per_slot * H
+        for k, (name, rows) in enumerate(rows_by_class):
+            bank[k] = np.tile(rows, (H // len(rows), 1, 1))
+            self.bank_ratios[name] = sum(
+                _row_skips(r, self._attn_like) for r in bank[k]
+            ) / max(total, 1)
+            self._class_index[name] = k
+        self.bank_classes = tuple(n for n, _ in rows_by_class)
+        self._device_plan = jnp.asarray(bank)
+        return H
+
+    def request_ratio(self, req) -> float:
+        """Planned skip ratio the engine will serve ``req`` at: its
+        admission-assigned bank class's realized ratio, or the engine-wide
+        plan ratio outside bank mode."""
+        if not self.bank_ratios:
+            return self.plan_ratio
+        return self.bank_ratios[self._class_of(req)]
+
+    def _class_of(self, req) -> str:
+        cls = getattr(req, "policy_class", "") or ""
+        return cls if cls in self._class_index else self.bank_classes[0]
 
     # ------------------------------------------------------------ internals
     def _step_accounting(self, pool: SlotPool, scores, rows
@@ -372,152 +480,401 @@ class ContinuousBatchingEngine:
         return executed, skipped
 
     # ------------------------------------------------------------ main loop
+    def session(self) -> "EngineSession":
+        """An incremental serving session (the front door pumps this)."""
+        return EngineSession(self)
+
     def run(self, requests: Iterable[RequestSpec]) -> ServingResult:
         """Serve a trace to completion on the virtual service clock."""
-        lazy = self.lazy_mode != "off"
-        requests = list(requests)
-        # validate the whole trace up front: a malformed request must fail
-        # fast, not abort the run mid-flight after others completed
-        for req in requests:
-            try:
-                _validate_prompt(req.prompt[None], 1, self.max_len)
-            except ValueError as e:
-                raise ValueError(f"request rid={req.rid}: {e}") from e
-        sched = Scheduler(self.n_slots, cost_budget=self.cost_budget,
-                          batch_synchronous=self.batch_synchronous,
-                          tracer=self.tracer)
-        sched.submit(requests)
-        tracer = self.tracer
-        svc_us = obs_trace.Tracer.service_us
-        pool = SlotPool(self.cfg, self.n_slots, self.max_len, lazy=lazy,
-                        window_override=self.window_override)
+        sess = self.session()
+        sess.submit(list(requests))
+        while sess.has_work():
+            sess.step()
+        return sess.result()
+
+
+class StreamEvent(NamedTuple):
+    """One observable request-lifecycle event from EngineSession.step().
+    ``kind``: shed | policy_assigned | admitted | preempted | resumed |
+    token | first_token | done.  The asyncio front door
+    (serving/server.py) forwards these to the owning connection as
+    streaming chunks; batch callers ignore them."""
+
+    kind: str
+    rid: int
+    now: float                 # virtual service-clock time of the event
+    data: Dict
+
+
+class EngineSession:
+    """Incremental driver of a ContinuousBatchingEngine.
+
+    One ``step()`` = one scheduling round (admission-control the inbox,
+    maybe preempt, admit into free slots) plus at most one jitted decode
+    step, returning the lifecycle events it produced.  ``run()`` is the
+    batch wrapper (submit a trace, pump until drained); the asyncio front
+    door pumps a session from its worker thread and streams the events.
+
+    With an admission controller (engine ``admission=`` +
+    ``policy_bank=``), submitted requests first land in an arrival-sorted
+    inbox; the moment the virtual clock reaches a request's arrival the
+    controller either assigns it a policy class (queueing it with its
+    class's skip ratio and service estimate) or sheds it — a shed request
+    NEVER enters the scheduler queue.  Preemption: when no slot is free
+    and a strictly higher-priority request is waiting, the lowest-priority
+    active slot is snapshotted (KV + lazy caches + traced policy state +
+    host bookkeeping), evicted, and requeued at its original arrival; on
+    resume the snapshot is scattered back and the request continues
+    BIT-IDENTICALLY (gather-then-scatter is the identity and decode lanes
+    are independent), charged one STEP_OVERHEAD swap-in instead of a
+    re-prefill.  Without admission control the session reduces exactly to
+    the pre-front-door engine loop (same clock, metrics, and tokens).
+    """
+
+    def __init__(self, engine: ContinuousBatchingEngine):
+        eng = self.engine = engine
+        self.lazy = eng.lazy_mode != "off"
+        self.sched = Scheduler(eng.n_slots, cost_budget=eng.cost_budget,
+                               batch_synchronous=eng.batch_synchronous,
+                               tracer=eng.tracer)
+        self.pool = SlotPool(eng.cfg, eng.n_slots, eng.max_len,
+                             lazy=self.lazy,
+                             window_override=eng.window_override)
         # slot-stacked traced policy state, placed like the slot caches
         # (sharded over the data axis under an active mesh)
-        slot_state = pool.place(
-            lazy_lib.stack_for_slots(self._init_state, self.n_slots))
-        self._slot_state = slot_state            # test/debug introspection
-        met = metrics_lib.ServingMetrics(self.n_slots, self.modules_per_slot)
-        outputs: Dict[int, np.ndarray] = {}
-        now = 0.0
+        self.slot_state = self.pool.place(
+            lazy_lib.stack_for_slots(eng._init_state, eng.n_slots))
+        eng._slot_state = self.slot_state        # test/debug introspection
+        self.met = metrics_lib.ServingMetrics(eng.n_slots,
+                                              eng.modules_per_slot)
+        self.outputs: Dict[int, np.ndarray] = {}
+        self.now = 0.0
+        self._inbox: List[RequestSpec] = []      # awaiting admission decision
+        self._suspended: Dict[int, Dict] = {}    # rid -> preemption snapshot
 
-        while sched.has_pending() or pool.any_active():
-            if not pool.any_active():
-                na = sched.next_arrival()
-                if na is not None and na > now:
-                    now = na                      # idle: jump to next arrival
+    # ------------------------------------------------------------ intake
+    def submit(self, requests: Iterable[RequestSpec], *,
+               live: bool = False) -> None:
+        """Queue requests.  ``live=True`` stamps arrivals at the session's
+        current clock (front-door submissions happen "now"; trace-driven
+        runs keep their scripted future arrivals)."""
+        reqs = list(requests)
+        # validate up front: a malformed request must fail fast, not abort
+        # the run mid-flight after others completed
+        for req in reqs:
+            try:
+                _validate_prompt(req.prompt[None], 1, self.engine.max_len)
+            except ValueError as e:
+                raise ValueError(f"request rid={req.rid}: {e}") from e
+            if live:
+                req.arrival = self.now
+        if self.engine.admission is not None:
+            self._inbox.extend(reqs)
+            self._inbox.sort(key=lambda r: (r.arrival, r.rid))
+        elif self.engine.bank_ratios:
+            # bank without admission control: classes are caller-assigned
+            for req in reqs:
+                self.sched.submit([req],
+                                  skip_ratio=self.engine.request_ratio(req))
+        else:
+            self.sched.submit(reqs)
 
-            free = pool.free_slots()
-            n_active = self.n_slots - len(free)
-            admitted = sched.admit(now, len(free),
-                                   [self.plan_ratio] * n_active,
-                                   self.plan_ratio)
-            for req in admitted:
-                # the prompt plus one decode step must fit; an output budget
-                # beyond max_len is truncated by eviction, not rejected
-                prompt = _validate_prompt(req.prompt[None], 1, self.max_len)
-                cache1 = tf.init_decode_cache(
-                    self.cfg, 1, self.max_len,
-                    window_override=self.window_override)
-                tok0, cache1 = self._prefill(
-                    self.params, jnp.asarray(prompt, jnp.int32), cache1)
-                t_prefill = now
-                now += metrics_lib.prefill_cost(prompt.shape[1], self.n_slots)
+    def has_work(self) -> bool:
+        return (bool(self._inbox) or self.sched.has_pending()
+                or self.pool.any_active())
+
+    def result(self) -> ServingResult:
+        return ServingResult(self.outputs, self.met)
+
+    # ------------------------------------------------------ admission control
+    def _process_inbox(self, events: List[StreamEvent]) -> None:
+        """Admission-control every inbox request whose arrival the clock
+        has reached: assign a policy class or shed IMMEDIATELY — a shed
+        request never enters the scheduler queue (the unsatisfiable-SLO
+        contract in tests/test_admission.py)."""
+        eng = self.engine
+        tracer = eng.tracer
+        svc_us = obs_trace.Tracer.service_us
+        while self._inbox and self._inbox[0].arrival <= self.now + 1e-9:
+            req = self._inbox.pop(0)
+            # work ahead of THIS request: only pending entries at its
+            # priority or above (admission is priority-ordered and higher
+            # classes preempt past lower ones)
+            wait = self.sched.pending_work(
+                self.now, int(getattr(req, "priority", 0))) / eng.n_slots
+            dec = eng.admission.decide(req, queue_wait_s=wait)
+            if not dec.admitted:
+                self.met.record_shed(req.rid, self.now, dec.reason)
                 if tracer is not None:
-                    tracer.complete(
-                        "prefill", svc_us(t_prefill), svc_us(now - t_prefill),
-                        pid=obs_trace.PID_SERVICE, cat="serve",
-                        args={"rid": req.rid,
-                              "prompt_len": int(prompt.shape[1])})
-                i = free.pop(0)
-                pool.admit(i, req, cache1, int(tok0[0]))
-                # reset-then-join: the new occupant starts from the
-                # policy's initial traced state, same rule as the lazy
-                # cache (a slot must never inherit its predecessor's step
-                # counter or reuse-run lengths)
-                slot_state = lazy_lib.slot_cache_scatter(
-                    slot_state, i, self._init_state)
-                met.record_admit(req.rid, req.arrival, now, prompt.shape[1],
-                                 prefill_s=now - t_prefill)
-                # empty output budget, or the model's very first greedy
-                # token is EOS (a naturally empty response): complete now
-                if req.max_new <= 0 or (self.eos_id is not None
-                                        and int(tok0[0]) == self.eos_id):
-                    outputs[req.rid] = np.asarray(req.prompt, np.int32)
-                    met.record_completion(req.rid, now, 0)
-                    pool.evict(i)
-
-            active = pool.active_slots()
-            if not active:
+                    tracer.instant(
+                        "shed", ts_us=svc_us(self.now),
+                        pid=obs_trace.PID_SERVICE, cat="admission",
+                        args={"rid": req.rid, "reason": dec.reason,
+                              "queue_wait_est": wait,
+                              "slo_latency_s": float(getattr(
+                                  req, "slo_latency_s", float("inf")))})
+                events.append(StreamEvent("shed", req.rid, self.now,
+                                          {"reason": dec.reason}))
                 continue
-
-            fresh = pool.fresh_vector() if lazy else None
-            (logits, cache, lazy_cache, scores, slot_state, rows,
-             drift) = self._step(
-                self.params, pool.token_vector(), pool.index_vector(),
-                pool.cache, pool.lazy_cache, fresh, slot_state,
-                self._device_plan)
-            self._slot_state = slot_state
-            pool.cache = cache
-            if lazy:
-                pool.lazy_cache = lazy_cache
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-
-            # per-slot drift means over ESTABLISHED active slots: a fresh
-            # slot's cache was just primed (its "old" entries are the reset
-            # values), an inactive slot's holds a stale occupant — neither
-            # measures cached-vs-fresh drift
-            drift_rel = drift_cos = None
-            if drift is not None:
-                fresh_np = np.asarray(fresh, bool)
-                established = [i for i in active if not fresh_np[i]]
-                if established:
-                    cos_np, rel_np = (np.asarray(d, np.float64)
-                                      for d in drift)
-                    drift_cos = float(cos_np[established].mean())
-                    drift_rel = float(rel_np[established].mean())
-
-            t_step = now
-            executed, skipped = self._step_accounting(pool, scores, rows)
-            now += metrics_lib.step_cost(executed, self.n_slots,
-                                         self.modules_per_slot)
-            met.record_step(now, len(active), sched.queue_depth(),
-                            executed, skipped, len(active),
-                            drift_rel=drift_rel, drift_cos=drift_cos)
+            req.policy_class = dec.policy_class
+            self.sched.submit_entry(PendingEntry(
+                req, priority=int(getattr(req, "priority", 0)),
+                skip_ratio=eng.bank_ratios[dec.policy_class],
+                est_service_s=dec.est_service_s))
             if tracer is not None:
-                args = {"n_active": len(active),
-                        "executed": executed, "skipped": skipped}
-                if drift_rel is not None:
-                    args["drift_rel_l2"] = drift_rel
-                tracer.complete("decode_step", svc_us(t_step),
-                                svc_us(now - t_step),
-                                pid=obs_trace.PID_SERVICE, cat="serve",
-                                args=args)
-                tracer.counter("pool", {"active": len(active),
-                                        "queue_depth": sched.queue_depth()},
-                               ts_us=svc_us(now), pid=obs_trace.PID_SERVICE)
+                tracer.instant(
+                    "policy_assigned", ts_us=svc_us(self.now),
+                    pid=obs_trace.PID_SERVICE, cat="admission",
+                    args={"rid": req.rid, "policy_class": dec.policy_class,
+                          "est_service_s": dec.est_service_s,
+                          "queue_wait_est": wait})
+            events.append(StreamEvent(
+                "policy_assigned", req.rid, self.now,
+                {"policy_class": dec.policy_class,
+                 "est_service_s": dec.est_service_s}))
 
-            for i in active:
-                pool.advance(i, nxt[i])
-                s = pool.slots[i]
-                if s.produced == 1:
-                    met.record_first_token(s.req.rid, now)
-                    if tracer is not None:
-                        tracer.instant("first_token", ts_us=svc_us(now),
-                                       pid=obs_trace.PID_SERVICE,
-                                       cat="serve", args={"rid": s.req.rid})
-                if (pool.should_evict(i)
-                        or (self.eos_id is not None
-                            and int(nxt[i]) == self.eos_id)):
-                    outputs[s.req.rid] = np.concatenate(
-                        [np.asarray(s.req.prompt, np.int32),
-                         np.asarray(s.tokens, np.int32)])
-                    met.record_completion(s.req.rid, now, s.produced)
-                    if tracer is not None:
-                        tracer.instant("completed", ts_us=svc_us(now),
-                                       pid=obs_trace.PID_SERVICE,
-                                       cat="serve",
-                                       args={"rid": s.req.rid,
-                                             "n_out": s.produced})
-                    pool.evict(i)
+    # ---------------------------------------------------------- preemption
+    def _maybe_preempt(self, events: List[StreamEvent]) -> None:
+        """Free a slot for a strictly higher-priority waiter by suspending
+        the weakest active slot (at most one per scheduling round, so a
+        burst preempts incrementally instead of thrashing the pool)."""
+        pool, sched = self.pool, self.sched
+        while not pool.free_slots():
+            p = sched.preemption_priority(self.now)
+            if p is None:
+                break
+            cand = [(int(getattr(pool.slots[i].req, "priority", 0)),
+                     pool.slots[i].produced, pool.slots[i].req.rid, i)
+                    for i in pool.active_slots()]
+            prio, _, _, victim = min(cand)
+            if prio >= p:
+                break
+            self._preempt(victim, events)
 
-        return ServingResult(outputs, met)
+    def _preempt(self, i: int, events: List[StreamEvent]) -> None:
+        eng, pool = self.engine, self.pool
+        s = pool.slots[i]
+        rid = s.req.rid
+        kv, lz = pool.snapshot(i)
+        self._suspended[rid] = dict(
+            kv=kv, lazy=lz,
+            pstate=lazy_lib.slot_cache_gather(self.slot_state, i),
+            index=s.index, produced=s.produced, t=s.t, fresh=s.fresh,
+            last_token=s.last_token, tokens=list(s.tokens))
+        ratio = eng.request_ratio(s.req)
+        remaining = max(s.req.max_new - s.produced, 0)
+        est = remaining * (metrics_lib.STEP_OVERHEAD
+                           + metrics_lib.MODULE_COST * (1.0 - ratio))
+        # requeue at the ORIGINAL arrival: within its priority class the
+        # victim resumes ahead of later arrivals
+        self.sched.submit_entry(PendingEntry(
+            s.req, priority=int(getattr(s.req, "priority", 0)),
+            skip_ratio=ratio, est_service_s=est))
+        self.met.record_preemption(rid, self.now)
+        if eng.tracer is not None:
+            eng.tracer.instant(
+                "preempted", ts_us=obs_trace.Tracer.service_us(self.now),
+                pid=obs_trace.PID_SERVICE, cat="admission",
+                args={"rid": rid, "produced": s.produced,
+                      "priority": int(getattr(s.req, "priority", 0))})
+        events.append(StreamEvent("preempted", rid, self.now,
+                                  {"produced": s.produced}))
+        pool.evict(i)
+
+    def _resume(self, i: int, req, events: List[StreamEvent]) -> None:
+        cont = self._suspended.pop(req.rid)
+        self.pool.restore(i, req, cont["kv"], cont["lazy"],
+                          index=cont["index"], produced=cont["produced"],
+                          t=cont["t"], fresh=cont["fresh"],
+                          last_token=cont["last_token"],
+                          tokens=cont["tokens"])
+        self.slot_state = lazy_lib.slot_cache_scatter(
+            self.slot_state, i, cont["pstate"])
+        self.engine._slot_state = self.slot_state
+        # swap-in: restoring device state costs one step overhead on the
+        # service clock — a state scatter, not a re-prefill
+        self.now += metrics_lib.STEP_OVERHEAD
+        if self.engine.tracer is not None:
+            self.engine.tracer.instant(
+                "resumed", ts_us=obs_trace.Tracer.service_us(self.now),
+                pid=obs_trace.PID_SERVICE, cat="admission",
+                args={"rid": req.rid, "produced": cont["produced"]})
+        events.append(StreamEvent("resumed", req.rid, self.now,
+                                  {"produced": cont["produced"]}))
+
+    # ------------------------------------------------------------ main step
+    def step(self) -> List[StreamEvent]:
+        """One scheduling round + at most one jitted decode step."""
+        eng = self.engine
+        tracer = eng.tracer
+        svc_us = obs_trace.Tracer.service_us
+        pool, sched, met = self.pool, self.sched, self.met
+        events: List[StreamEvent] = []
+
+        if not pool.any_active():
+            arrivals = [a for a in (
+                sched.next_arrival(),
+                self._inbox[0].arrival if self._inbox else None)
+                if a is not None]
+            if arrivals and min(arrivals) > self.now:
+                self.now = min(arrivals)          # idle: jump to next arrival
+
+        if eng.admission is not None:
+            self._process_inbox(events)
+            self._maybe_preempt(events)
+
+        free = pool.free_slots()
+        n_active = eng.n_slots - len(free)
+        active_ratios = ([eng.request_ratio(pool.slots[i].req)
+                          for i in pool.active_slots()]
+                         if eng.bank_ratios
+                         else [eng.plan_ratio] * n_active)
+        admitted = sched.admit(self.now, len(free), active_ratios,
+                               eng.plan_ratio)
+        for req in admitted:
+            i = free.pop(0)
+            if req.rid in self._suspended:
+                self._resume(i, req, events)
+                continue
+            # the prompt plus one decode step must fit; an output budget
+            # beyond max_len is truncated by eviction, not rejected
+            prompt = _validate_prompt(req.prompt[None], 1, eng.max_len)
+            cache1 = tf.init_decode_cache(
+                eng.cfg, 1, eng.max_len,
+                window_override=eng.window_override)
+            tok0, cache1 = eng._prefill(
+                eng.params, jnp.asarray(prompt, jnp.int32), cache1)
+            t_prefill = self.now
+            self.now += metrics_lib.prefill_cost(prompt.shape[1],
+                                                 eng.n_slots)
+            if tracer is not None:
+                tracer.complete(
+                    "prefill", svc_us(t_prefill),
+                    svc_us(self.now - t_prefill),
+                    pid=obs_trace.PID_SERVICE, cat="serve",
+                    args={"rid": req.rid,
+                          "prompt_len": int(prompt.shape[1])})
+            pool.admit(i, req, cache1, int(tok0[0]))
+            # reset-then-join: the new occupant starts from the policy's
+            # initial traced state, same rule as the lazy cache (a slot
+            # must never inherit its predecessor's step counter or
+            # reuse-run lengths)
+            self.slot_state = lazy_lib.slot_cache_scatter(
+                self.slot_state, i, eng._init_state)
+            # SLO bookkeeping follows what the REQUEST declares, not the
+            # engine mode: a fixed-policy engine serving an SLO trace is
+            # judged against the same per-request deadlines and quality
+            # budgets (the bench's fixed-vs-SLO-aware comparison); plain
+            # requests keep the legacy defaults
+            slo = getattr(req, "slo_latency_s", None)
+            budget = getattr(req, "max_skip_ratio", None)
+            met.record_admit(
+                req.rid, req.arrival, self.now, prompt.shape[1],
+                prefill_s=self.now - t_prefill,
+                slo_latency_s=None if slo is None else float(slo),
+                quality_ok=(budget is None
+                            or eng.request_ratio(req)
+                            <= float(budget) + 1e-9),
+                policy_class=getattr(req, "policy_class", ""),
+                priority=int(getattr(req, "priority", 0)))
+            events.append(StreamEvent(
+                "admitted", req.rid, self.now,
+                {"policy_class": getattr(req, "policy_class", "")}))
+            # empty output budget, or the model's very first greedy token
+            # is EOS (a naturally empty response): complete now
+            if req.max_new <= 0 or (eng.eos_id is not None
+                                    and int(tok0[0]) == eng.eos_id):
+                self.outputs[req.rid] = np.asarray(req.prompt, np.int32)
+                met.record_completion(req.rid, self.now, 0)
+                pool.evict(i)
+                events.append(StreamEvent("done", req.rid, self.now,
+                                          {"n_out": 0, "tokens": []}))
+
+        active = pool.active_slots()
+        if not active:
+            return events
+
+        fresh = pool.fresh_vector() if self.lazy else None
+        policy_idx = None
+        if eng.bank_ratios:
+            policy_idx = jnp.asarray(
+                [eng._class_index[eng._class_of(s.req)] if s.active else 0
+                 for s in pool.slots], jnp.int32)
+        (logits, cache, lazy_cache, scores, self.slot_state, rows,
+         drift) = eng._step(
+            eng.params, pool.token_vector(), pool.index_vector(),
+            pool.cache, pool.lazy_cache, fresh, self.slot_state,
+            eng._device_plan, policy_idx)
+        eng._slot_state = self.slot_state
+        pool.cache = cache
+        if self.lazy:
+            pool.lazy_cache = lazy_cache
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+
+        # per-slot drift means over ESTABLISHED active slots: a fresh
+        # slot's cache was just primed (its "old" entries are the reset
+        # values), an inactive slot's holds a stale occupant — neither
+        # measures cached-vs-fresh drift
+        drift_rel = drift_cos = None
+        if drift is not None:
+            fresh_np = np.asarray(fresh, bool)
+            established = [i for i in active if not fresh_np[i]]
+            if established:
+                cos_np, rel_np = (np.asarray(d, np.float64)
+                                  for d in drift)
+                drift_cos = float(cos_np[established].mean())
+                drift_rel = float(rel_np[established].mean())
+
+        t_step = self.now
+        executed, skipped = eng._step_accounting(pool, scores, rows)
+        self.now += metrics_lib.step_cost(executed, eng.n_slots,
+                                          eng.modules_per_slot)
+        met.record_step(self.now, len(active), sched.queue_depth(),
+                        executed, skipped, len(active),
+                        drift_rel=drift_rel, drift_cos=drift_cos)
+        if tracer is not None:
+            args = {"n_active": len(active),
+                    "executed": executed, "skipped": skipped}
+            if drift_rel is not None:
+                args["drift_rel_l2"] = drift_rel
+            tracer.complete("decode_step", svc_us(t_step),
+                            svc_us(self.now - t_step),
+                            pid=obs_trace.PID_SERVICE, cat="serve",
+                            args=args)
+            tracer.counter("pool", {"active": len(active),
+                                    "queue_depth": sched.queue_depth()},
+                           ts_us=svc_us(self.now),
+                           pid=obs_trace.PID_SERVICE)
+
+        for i in active:
+            pool.advance(i, nxt[i])
+            s = pool.slots[i]
+            events.append(StreamEvent("token", s.req.rid, self.now,
+                                      {"token": int(nxt[i]),
+                                       "n": s.produced}))
+            if s.produced == 1:
+                met.record_first_token(s.req.rid, self.now)
+                if tracer is not None:
+                    tracer.instant("first_token", ts_us=svc_us(self.now),
+                                   pid=obs_trace.PID_SERVICE,
+                                   cat="serve", args={"rid": s.req.rid})
+                events.append(StreamEvent("first_token", s.req.rid,
+                                          self.now, {}))
+            if (pool.should_evict(i)
+                    or (eng.eos_id is not None
+                        and int(nxt[i]) == eng.eos_id)):
+                self.outputs[s.req.rid] = np.concatenate(
+                    [np.asarray(s.req.prompt, np.int32),
+                     np.asarray(s.tokens, np.int32)])
+                met.record_completion(s.req.rid, self.now, s.produced)
+                if tracer is not None:
+                    tracer.instant("completed", ts_us=svc_us(self.now),
+                                   pid=obs_trace.PID_SERVICE,
+                                   cat="serve",
+                                   args={"rid": s.req.rid,
+                                         "n_out": s.produced})
+                events.append(StreamEvent(
+                    "done", s.req.rid, self.now,
+                    {"n_out": s.produced, "tokens": list(s.tokens)}))
+                pool.evict(i)
+        return events

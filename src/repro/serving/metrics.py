@@ -76,16 +76,22 @@ class ServingMetrics:
         self.modules_per_slot = modules_per_slot
         self.steps: List[Dict] = []
         self.requests: Dict[int, Dict] = {}
+        self.shed: Dict[int, Dict] = {}
         self._executed = 0.0
         self._skipped = 0.0
         self._tokens_out = 0
         self._t_end = 0.0
         self._drift_rel: List[float] = []
         self._drift_cos: List[float] = []
+        self._n_preemptions = 0
 
     # ------------------------------------------------------------ recording
     def record_admit(self, rid: int, arrival: float, now: float,
-                     prompt_len: int, *, prefill_s: float = 0.0) -> None:
+                     prompt_len: int, *, prefill_s: float = 0.0,
+                     slo_latency_s: Optional[float] = None,
+                     quality_ok: bool = True,
+                     policy_class: str = "",
+                     priority: int = 0) -> None:
         """``now`` is the admit time AFTER prefill (the engine's
         convention); ``prefill_s`` is how much of it the prefill took, so
         the request's latency decomposes exactly into
@@ -94,11 +100,49 @@ class ServingMetrics:
             prefill = prefill_s
             decode  = done - admit
 
-        and queue + prefill + decode == done - arrival per request."""
+        and queue + prefill + decode == done - arrival per request.
+        (With preemption the decode phase also absorbs preempted wait —
+        the request left and re-entered the pool between admit and done.)
+
+        ``slo_latency_s`` is the request's OWN deadline (None: judged
+        against the summary-wide default); ``quality_ok`` records whether
+        the policy it was assigned satisfies its quality budget — goodput
+        counts a request only when latency AND quality held.
+        ``policy_class`` labels which admission class / bank policy served
+        it (per-class breakdowns, class_summary)."""
         self.requests[rid] = {"arrival": arrival, "admit": now,
                               "prompt_len": prompt_len,
                               "prefill_s": float(prefill_s),
-                              "first_token": None, "done": None, "n_out": 0}
+                              "first_token": None, "done": None, "n_out": 0,
+                              "slo_latency_s": slo_latency_s,
+                              "quality_ok": bool(quality_ok),
+                              "policy_class": policy_class,
+                              "priority": int(priority),
+                              "n_preempted": 0}
+        self._t_end = max(self._t_end, now)
+
+    def record_shed(self, rid: int, now: float, reason: str, *,
+                    policy_class: str = "") -> None:
+        """A request refused AT ADMISSION (serving/admission.py): it never
+        queued, never held a slot, and never appears in ``requests``.
+        ``reason``: 'unsatisfiable' (infeasible even on an idle pool) or
+        'overload' (the queue-wait estimate blows its deadline)."""
+        if rid in self.requests:
+            raise KeyError(
+                f"record_shed: request {rid} was already admitted — "
+                "shedding happens at admission, not after")
+        self.shed[rid] = {"t": now, "reason": reason,
+                          "policy_class": policy_class}
+        self._t_end = max(self._t_end, now)
+
+    def record_preemption(self, rid: int, now: float) -> None:
+        """An active request vacated its slot for a higher-priority one;
+        it re-enters the queue and resumes later (engine save/restore)."""
+        if rid not in self.requests:
+            raise KeyError(
+                f"record_preemption: request {rid} was never admitted")
+        self.requests[rid]["n_preempted"] += 1
+        self._n_preemptions += 1
         self._t_end = max(self._t_end, now)
 
     def record_step(self, now: float, n_active: int, queue_depth: int,
@@ -146,6 +190,15 @@ class ServingMetrics:
         total = self._executed + self._skipped
         return float(self._skipped / total) if total else 0.0
 
+    @staticmethod
+    def _good(r: Dict, default_slo: float) -> bool:
+        """Does a completed request count toward goodput?  Its latency must
+        stay within its OWN slo (falling back to the summary default) AND
+        its assigned policy must have satisfied its quality budget."""
+        slo = r.get("slo_latency_s")
+        slo = default_slo if slo is None else slo
+        return (r["done"] - r["arrival"] <= slo) and r.get("quality_ok", True)
+
     def summary(self, *,
                 slo_latency_s: float = DEFAULT_SLO_LATENCY_S
                 ) -> Dict[str, float]:
@@ -176,14 +229,17 @@ class ServingMetrics:
         def mean(a):
             return float(a.mean()) if len(a) else float("nan")
 
-        within_slo = sum(1 for r in done
-                         if r["done"] - r["arrival"] <= slo_latency_s)
+        within_slo = sum(1 for r in done if self._good(r, slo_latency_s))
         return {
             "n_requests": float(len(done)),
             "n_steps": float(len(self.steps)),
             "virtual_time_s": float(span),
             "requests_per_s": float(len(done) / span),
             "goodput_per_s": float(within_slo / span),
+            "slo_attainment": (float(within_slo / (len(done) + len(self.shed)))
+                               if done or self.shed else float("nan")),
+            "n_shed": float(len(self.shed)),
+            "n_preemptions": float(self._n_preemptions),
             "slo_latency_s": float(slo_latency_s),
             "tokens_per_s": float(self._tokens_out / span),
             "latency_p50_s": pct(lat, 50),
@@ -202,3 +258,39 @@ class ServingMetrics:
             "drift_rel_l2_mean": mean(np.array(self._drift_rel)),
             "drift_cos_mean": mean(np.array(self._drift_cos)),
         }
+
+    def class_summary(self, *,
+                      slo_latency_s: float = DEFAULT_SLO_LATENCY_S
+                      ) -> Dict[str, Dict[str, float]]:
+        """Goodput-under-SLO broken down by admission policy class: for
+        each class seen (admitted OR shed), completed/shed counts, goodput
+        over the run span, SLO attainment (good / offered), and latency
+        p50/p95.  Unclassified requests (no admission controller) land
+        under ''."""
+        t0 = min((r["arrival"] for r in self.requests.values()), default=0.0)
+        span = max(self._t_end - t0, 1e-9)
+        classes = ({r.get("policy_class", "") for r in self.requests.values()}
+                   | {s.get("policy_class", "") for s in self.shed.values()})
+        out: Dict[str, Dict[str, float]] = {}
+        for cls in sorted(classes):
+            rs = [r for r in self.requests.values()
+                  if r.get("policy_class", "") == cls]
+            done = [r for r in rs if r["done"] is not None]
+            shed = [s for s in self.shed.values()
+                    if s.get("policy_class", "") == cls]
+            good = sum(1 for r in done if self._good(r, slo_latency_s))
+            lat = np.array([r["done"] - r["arrival"] for r in done])
+            offered = len(done) + len(shed)
+            out[cls] = {
+                "n_done": float(len(done)),
+                "n_shed": float(len(shed)),
+                "n_preemptions": float(sum(r["n_preempted"] for r in rs)),
+                "goodput_per_s": float(good / span),
+                "slo_attainment": (float(good / offered) if offered
+                                   else float("nan")),
+                "latency_p50_s": (float(np.percentile(lat, 50))
+                                  if lat.size else float("nan")),
+                "latency_p95_s": (float(np.percentile(lat, 95))
+                                  if lat.size else float("nan")),
+            }
+        return out

@@ -1,15 +1,28 @@
 """Request scheduling for the continuous-batching engine.
 
-FCFS admission with join-on-free-slot: a pending request is admitted the
-moment (a) it has arrived on the virtual clock, (b) a slot is free, and
-(c) the *lazy-aware* step-cost estimate stays inside the cost budget.
+Priority-then-FCFS admission with join-on-free-slot: a pending request is
+admitted the moment (a) it has arrived on the virtual clock, (b) a slot is
+free, and (c) the *lazy-aware* step-cost estimate stays inside the cost
+budget.  Requests order by (priority desc, arrival, rid) — with every
+priority at the default 0 this degenerates to the original pure FCFS, so
+the pre-SLO behavior (and its tests) are a special case, not a second
+code path.
 
 The lazy-aware part: each slot's planned skip budget (the fraction of its
 gated module calls a lazy plan removes) discounts its contribution to the
 estimated cost of the next decode step, using the same service-clock
 constants as metrics.py.  Under a cost budget, lazy slots therefore pack
 denser than diligent ones — the scheduler converts LazyDiT's per-request
-compute savings into admission headroom.
+compute savings into admission headroom.  With a per-request policy bank
+(serving/admission.py) each pending entry carries its OWN assigned skip
+ratio, so the estimate prices the actual mix instead of one global ratio.
+
+Priority + preemption: ``preemption_priority(now)`` exposes the strongest
+eligible pending priority so the engine can decide whether to preempt an
+active slot (engine.py owns victim selection and state save/restore; the
+scheduler only orders the queue).  A preempted request re-enters via
+``submit`` with its original arrival, so within its priority class it
+resumes ahead of later arrivals.
 
 ``batch_synchronous=True`` degrades admission to static batching (join only
 when the pool has fully drained); it is the baseline bench_serving compares
@@ -17,11 +30,28 @@ against, using identical machinery so the comparison is apples-to-apples.
 """
 from __future__ import annotations
 
-from collections import deque
+from dataclasses import dataclass
 from typing import Iterable, List, Optional, Sequence
 
 from repro.data.synthetic import RequestSpec
 from repro.serving import metrics as metrics_lib
+
+
+@dataclass
+class PendingEntry:
+    """One queued request plus the admission-time knowledge about it."""
+
+    req: RequestSpec
+    priority: int = 0
+    # planned skip ratio of the policy this request will run under (None:
+    # use the engine-wide default passed to admit)
+    skip_ratio: Optional[float] = None
+    # estimated virtual seconds of service (prefill + decode) — the
+    # admission controller's feasibility estimate, kept for pending_work()
+    est_service_s: float = 0.0
+
+    def sort_key(self):
+        return (-self.priority, self.req.arrival, self.req.rid)
 
 
 class Scheduler:
@@ -41,12 +71,23 @@ class Scheduler:
         # optional repro.obs tracer: admission decisions land as instant
         # events on the virtual service clock track
         self.tracer = tracer
-        self.pending: deque = deque()
+        self.pending: List[PendingEntry] = []
 
     # ------------------------------------------------------------ queue ops
-    def submit(self, requests: Iterable[RequestSpec]) -> None:
-        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        self.pending.extend(reqs)
+    def submit(self, requests: Iterable[RequestSpec], *,
+               skip_ratio: Optional[float] = None,
+               est_service_s: float = 0.0) -> None:
+        """Queue requests; a request's own ``priority`` attribute (SLO
+        specs) orders it, plain RequestSpecs queue at priority 0."""
+        for req in requests:
+            self.pending.append(PendingEntry(
+                req, priority=int(getattr(req, "priority", 0)),
+                skip_ratio=skip_ratio, est_service_s=est_service_s))
+        self.pending.sort(key=PendingEntry.sort_key)
+
+    def submit_entry(self, entry: PendingEntry) -> None:
+        self.pending.append(entry)
+        self.pending.sort(key=PendingEntry.sort_key)
 
     def has_pending(self) -> bool:
         return bool(self.pending)
@@ -55,7 +96,27 @@ class Scheduler:
         return len(self.pending)
 
     def next_arrival(self) -> Optional[float]:
-        return self.pending[0].arrival if self.pending else None
+        return (min(e.req.arrival for e in self.pending)
+                if self.pending else None)
+
+    def pending_work(self, now: float,
+                     min_priority: Optional[int] = None) -> float:
+        """Estimated virtual seconds of service already queued ahead of a
+        new arrival (requests with arrival <= now).  ``min_priority``
+        restricts the sum to entries at that priority or above — the work
+        actually AHEAD of a new request at that priority, since admission
+        is priority-ordered and higher classes preempt past lower ones."""
+        return sum(e.est_service_s for e in self.pending
+                   if e.req.arrival <= now + 1e-9
+                   and (min_priority is None or e.priority >= min_priority))
+
+    def preemption_priority(self, now: float) -> Optional[int]:
+        """Priority of the strongest ELIGIBLE pending request, or None.
+        The engine preempts an active slot when this is strictly higher
+        than the slot's priority and no slot is free."""
+        eligible = [e.priority for e in self.pending
+                    if e.req.arrival <= now + 1e-9]
+        return max(eligible) if eligible else None
 
     # ------------------------------------------------------------ cost model
     def estimate_step_cost(self, slot_skip_ratios: Sequence[float]) -> float:
@@ -68,21 +129,33 @@ class Scheduler:
     def admit(self, now: float, free_slots: int,
               active_skip_ratios: Sequence[float],
               new_skip_ratio: float = 0.0) -> List[RequestSpec]:
-        """Pop the FCFS-eligible requests that join this scheduling round.
+        """Pop the eligible requests that join this scheduling round, in
+        (priority desc, arrival, rid) order.
 
         ``active_skip_ratios``: planned skip ratio of each currently active
-        slot; ``new_skip_ratio``: the ratio an admitted request will run at.
+        slot; ``new_skip_ratio``: the default ratio an admitted request
+        runs at, overridden per entry when the queue knows better (policy
+        assigned at admission, serving/admission.py).  The budget check is
+        head-of-line per round: the strongest pending request failing the
+        budget blocks this round's weaker ones (no skip-ahead — a cheap
+        low-priority request must not starve an expensive high-priority
+        one forever).
         """
         if self.batch_synchronous and active_skip_ratios:
             return []
         out: List[RequestSpec] = []
         ratios = list(active_skip_ratios)
-        while (self.pending and len(out) < free_slots
-               and self.pending[0].arrival <= now + 1e-9):
+        while len(out) < free_slots:
+            head = next((e for e in self.pending
+                         if e.req.arrival <= now + 1e-9), None)
+            if head is None:
+                break
+            r_new = (head.skip_ratio if head.skip_ratio is not None
+                     else new_skip_ratio)
             # progress guarantee: an empty pool always admits its first
             # request, even under a budget below the one-slot step cost
             if (self.cost_budget is not None and ratios
-                    and self.estimate_step_cost(ratios + [new_skip_ratio])
+                    and self.estimate_step_cost(ratios + [r_new])
                     > self.cost_budget + 1e-9):
                 if self.tracer is not None:
                     from repro.obs import trace as trace_lib
@@ -90,20 +163,21 @@ class Scheduler:
                         "admission_deferred",
                         ts_us=trace_lib.Tracer.service_us(now),
                         pid=trace_lib.PID_SERVICE, cat="sched",
-                        args={"rid": self.pending[0].rid,
+                        args={"rid": head.req.rid,
                               "queue_depth": len(self.pending),
                               "est_cost": self.estimate_step_cost(
-                                  ratios + [new_skip_ratio]),
+                                  ratios + [r_new]),
                               "cost_budget": self.cost_budget})
                 break
-            req = self.pending.popleft()
-            out.append(req)
-            ratios.append(new_skip_ratio)
+            self.pending.remove(head)
+            out.append(head.req)
+            ratios.append(r_new)
             if self.tracer is not None:
                 from repro.obs import trace as trace_lib
                 self.tracer.instant(
                     "admitted", ts_us=trace_lib.Tracer.service_us(now),
                     pid=trace_lib.PID_SERVICE, cat="sched",
-                    args={"rid": req.rid, "arrival": req.arrival,
+                    args={"rid": head.req.rid, "arrival": head.req.arrival,
+                          "priority": head.priority,
                           "queue_depth": len(self.pending)})
         return out

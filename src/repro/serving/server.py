@@ -1,0 +1,337 @@
+"""Asyncio streaming front door for the continuous-batching engine.
+
+The production request path (ROADMAP item 3): an asyncio TCP server
+speaking newline-delimited JSON (NDJSON — stdlib only, no HTTP framework
+in the container) that streams per-token chunks from an EngineSession.
+
+Threading model — the engine is synchronous JAX, the front door is
+asyncio, and they meet at exactly two seams:
+
+  * submissions flow front door -> engine through a thread-safe
+    ``queue.Queue`` drained by the session worker thread;
+  * lifecycle events flow engine -> front door through
+    ``loop.call_soon_threadsafe`` onto per-request ``asyncio.Queue``s.
+
+The worker thread owns the EngineSession outright (slot pool, scheduler,
+device caches); the asyncio side never touches engine state, so there is
+no lock around jitted steps and a slow step never blocks accepting
+connections.  The session runs with ``live=True`` submissions: a request's
+virtual arrival is stamped when the worker picks it up, so admission
+control, priority preemption, and load shedding behave exactly as in the
+trace-driven benchmarks.
+
+Wire protocol (one JSON object per line):
+
+  -> {"prompt": [3, 1, 4], "max_new": 8,
+      "slo_latency_s": 9.0, "max_skip_ratio": 0.9, "priority": 2}
+  <- {"event": "accepted", "rid": 0}
+  <- {"event": "policy_assigned", "rid": 0, "policy_class": "latency", ...}
+  <- {"event": "token", "rid": 0, "token": 17, "n": 1}
+  ...
+  <- {"event": "done", "rid": 0, "tokens": [...], "n_out": 8}
+
+A shed request ends with {"event": "shed", "reason": ...} instead of
+"done".  ``{"op": "stats"}`` returns one JSON line of server statistics
+(including wall-clock first-chunk latency percentiles — the CI smoke
+asserts these are recorded); ``{"op": "shutdown"}`` stops the server.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import queue
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.synthetic import SLORequestSpec
+
+# event kinds that terminate a request's stream
+_TERMINAL = ("done", "shed")
+# worker idle poll: how long to block on the submit queue when the
+# session has no work (keeps shutdown latency bounded without spinning)
+_IDLE_POLL_S = 0.05
+
+
+def _to_payload(ev) -> Dict:
+    out = {"event": ev.kind, "rid": ev.rid, "t_service": ev.now}
+    out.update(ev.data)
+    return out
+
+
+class _SessionWorker(threading.Thread):
+    """Owns the EngineSession: drains submissions, pumps ``step()``, and
+    posts lifecycle events back to the asyncio loop thread-safely."""
+
+    def __init__(self, session, loop: asyncio.AbstractEventLoop):
+        super().__init__(name="engine-session", daemon=True)
+        self.session = session
+        self.loop = loop
+        self.submissions: "queue.Queue" = queue.Queue()
+        self._halt = threading.Event()
+        # rid -> asyncio.Queue living on the loop thread; mutated only
+        # via register() (loop thread, before submit) and _dispatch
+        # (posted back onto the loop thread), so never concurrently
+        self.streams: Dict[int, asyncio.Queue] = {}
+        self.error: Optional[BaseException] = None
+
+    def register(self, rid: int, stream: asyncio.Queue) -> None:
+        self.streams[rid] = stream
+
+    def submit(self, req: SLORequestSpec) -> None:
+        self.submissions.put(req)
+
+    def stop(self) -> None:
+        self._halt.set()
+
+    # ----------------------------------------------------------- worker side
+    def _drain_submissions(self) -> List[SLORequestSpec]:
+        out = []
+        try:
+            while True:
+                out.append(self.submissions.get_nowait())
+        except queue.Empty:
+            return out
+
+    def _post(self, payloads: List[Dict]) -> None:
+        def deliver():
+            for p in payloads:
+                stream = self.streams.get(p["rid"])
+                if stream is not None:
+                    stream.put_nowait(p)
+                if p["event"] in _TERMINAL:
+                    self.streams.pop(p["rid"], None)
+        if payloads:
+            self.loop.call_soon_threadsafe(deliver)
+
+    def run(self) -> None:
+        try:
+            while not self._halt.is_set():
+                reqs = self._drain_submissions()
+                if reqs:
+                    # live submissions arrive "now" on the virtual clock
+                    self.session.submit(reqs, live=True)
+                if self.session.has_work():
+                    self._post([_to_payload(ev)
+                                for ev in self.session.step()])
+                else:
+                    try:
+                        req = self.submissions.get(timeout=_IDLE_POLL_S)
+                    except queue.Empty:
+                        continue
+                    self.session.submit([req], live=True)
+        except BaseException as e:       # surface engine crashes to clients
+            self.error = e
+            self.loop.call_soon_threadsafe(self._fail_all, repr(e))
+
+    def _fail_all(self, message: str) -> None:
+        for rid, stream in list(self.streams.items()):
+            stream.put_nowait({"event": "error", "rid": rid,
+                               "error": message})
+        self.streams.clear()
+
+
+class StreamingServer:
+    """NDJSON-over-TCP streaming server around one engine.
+
+    ``port=0`` binds an ephemeral port (read ``server.port`` after
+    ``start()``) — the tests and the CI smoke use this."""
+
+    def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 0):
+        self.engine = engine
+        self.host = host
+        self._requested_port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._worker: Optional[_SessionWorker] = None
+        self._rid = 0
+        self._shutdown = asyncio.Event()
+        # wall-clock serving stats (the virtual clock lives in
+        # ServingMetrics; these time the ACTUAL asyncio path)
+        self.first_chunk_latency_s: List[float] = []
+        self.n_requests = 0
+        self.n_shed = 0
+
+    # ------------------------------------------------------------- lifecycle
+    @property
+    def port(self) -> int:
+        assert self._server is not None, "server not started"
+        return self._server.sockets[0].getsockname()[1]
+
+    async def start(self) -> None:
+        loop = asyncio.get_running_loop()
+        self._worker = _SessionWorker(self.engine.session(), loop)
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self._requested_port)
+        self._worker.start()
+
+    async def serve_until_shutdown(self) -> None:
+        assert self._server is not None
+        async with self._server:
+            await self._shutdown.wait()
+        await self.stop()
+
+    async def stop(self) -> None:
+        if self._worker is not None:
+            self._worker.stop()
+            self._worker.join(timeout=5.0)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    # ------------------------------------------------------------------ stats
+    def stats(self) -> Dict:
+        lat = self.first_chunk_latency_s
+        met = self._worker.session.met if self._worker else None
+        out = {
+            "n_requests": self.n_requests,
+            "n_shed": self.n_shed,
+            "first_chunk_latency_s": {
+                "n": len(lat),
+                "p50": float(np.percentile(lat, 50)) if lat else None,
+                "p95": float(np.percentile(lat, 95)) if lat else None,
+            },
+        }
+        if met is not None:
+            out["service_clock"] = met.summary()
+        return out
+
+    # ------------------------------------------------------------ connection
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                try:
+                    msg = json.loads(line)
+                except json.JSONDecodeError as e:
+                    await self._send(writer, {"event": "error",
+                                              "error": f"bad json: {e}"})
+                    continue
+                op = msg.get("op", "generate")
+                if op == "stats":
+                    await self._send(writer, self.stats())
+                elif op == "shutdown":
+                    await self._send(writer, {"event": "bye"})
+                    self._shutdown.set()
+                    break
+                elif op == "generate":
+                    await self._stream_request(writer, msg)
+                else:
+                    await self._send(writer, {"event": "error",
+                                              "error": f"unknown op {op!r}"})
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        finally:
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _stream_request(self, writer: asyncio.StreamWriter,
+                              msg: Dict) -> None:
+        worker = self._worker
+        assert worker is not None
+        try:
+            prompt = np.asarray(msg["prompt"], np.int32)
+            req = SLORequestSpec(
+                rid=self._rid, arrival=0.0, prompt=prompt,
+                max_new=int(msg.get("max_new", 16)),
+                slo_latency_s=float(msg.get("slo_latency_s", np.inf)),
+                max_skip_ratio=float(msg.get("max_skip_ratio", 1.0)),
+                priority=int(msg.get("priority", 0)),
+                slo_class=str(msg.get("slo_class", "")))
+        except (KeyError, TypeError, ValueError) as e:
+            await self._send(writer, {"event": "error",
+                                      "error": f"bad request: {e}"})
+            return
+        self._rid += 1
+        self.n_requests += 1
+        stream: asyncio.Queue = asyncio.Queue()
+        worker.register(req.rid, stream)
+        t0 = time.perf_counter()
+        worker.submit(req)
+        await self._send(writer, {"event": "accepted", "rid": req.rid})
+        first = True
+        while True:
+            payload = await stream.get()
+            if first:
+                self.first_chunk_latency_s.append(time.perf_counter() - t0)
+                first = False
+            await self._send(writer, payload)
+            if payload["event"] in _TERMINAL or payload["event"] == "error":
+                if payload["event"] == "shed":
+                    self.n_shed += 1
+                return
+
+    @staticmethod
+    async def _send(writer: asyncio.StreamWriter, payload: Dict) -> None:
+        writer.write((json.dumps(payload) + "\n").encode())
+        await writer.drain()
+
+
+# --------------------------------------------------------------------------
+# Blocking client helpers (CI smoke, tests, launch/serve.py --smoke-client)
+# --------------------------------------------------------------------------
+
+
+def request_once(host: str, port: int, prompt, max_new: int = 8, *,
+                 slo_latency_s: float = float("inf"),
+                 max_skip_ratio: float = 1.0, priority: int = 0,
+                 timeout: float = 60.0) -> List[Dict]:
+    """Send one generate request over a fresh TCP connection and return
+    every streamed event line (blocking; runs fine outside any loop)."""
+    import socket
+
+    msg = {"prompt": [int(t) for t in prompt], "max_new": max_new,
+           "slo_latency_s": slo_latency_s,
+           "max_skip_ratio": max_skip_ratio, "priority": priority}
+    events = []
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.settimeout(timeout)
+        sock.sendall((json.dumps(msg) + "\n").encode())
+        buf = b""
+        while True:
+            chunk = sock.recv(65536)
+            if not chunk:
+                break
+            buf += chunk
+            while b"\n" in buf:
+                line, buf = buf.split(b"\n", 1)
+                ev = json.loads(line)
+                events.append(ev)
+                if ev.get("event") in _TERMINAL or ev.get("event") == "error":
+                    return events
+    return events
+
+
+def fetch_stats(host: str, port: int, *, timeout: float = 30.0) -> Dict:
+    """Fetch the server's stats line (blocking)."""
+    import socket
+
+    with socket.create_connection((host, port), timeout=timeout) as sock:
+        sock.settimeout(timeout)
+        sock.sendall(b'{"op": "stats"}\n')
+        buf = b""
+        while b"\n" not in buf:
+            chunk = sock.recv(65536)
+            if not chunk:
+                raise ConnectionError("server closed before stats reply")
+            buf += chunk
+        return json.loads(buf.split(b"\n", 1)[0])
+
+
+def shutdown(host: str, port: int, *, timeout: float = 10.0) -> None:
+    """Ask the server to shut down (blocking, best-effort)."""
+    import socket
+
+    try:
+        with socket.create_connection((host, port), timeout=timeout) as sock:
+            sock.sendall(b'{"op": "shutdown"}\n')
+            sock.recv(4096)
+    except OSError:
+        pass

@@ -108,6 +108,33 @@ class SlotPool:
     def evict(self, i: int) -> None:
         self.slots[i] = Slot()
 
+    # ------------------------------------------------- preemption save/restore
+    def snapshot(self, i: int):
+        """Gather slot ``i``'s device state for preemption: its batch-1 KV
+        cache tree (and lazy cache when present) — the exact values the
+        slot holds, so a later ``restore`` continues bit-identically."""
+        kv = lazy_lib.slot_cache_gather(self.cache, i)
+        lz = (lazy_lib.slot_cache_gather(self.lazy_cache, i)
+              if self.lazy_cache is not None else None)
+        return kv, lz
+
+    def restore(self, i: int, req: RequestSpec, kv_single, lazy_single, *,
+                index: int, produced: int, t: int, fresh: bool,
+                last_token: int, tokens: List[int]) -> None:
+        """Re-seat a preempted request on free slot ``i`` from a
+        ``snapshot``: scatter its saved caches back and rebuild the host
+        bookkeeping exactly as it was (gather-then-scatter of the same
+        values is the identity, so the continuation tokens match the
+        uninterrupted run — tests/test_admission.py pins this)."""
+        assert not self.slots[i].active, f"slot {i} is occupied"
+        self.cache = lazy_lib.slot_cache_scatter(self.cache, i, kv_single)
+        if self.lazy_cache is not None and lazy_single is not None:
+            self.lazy_cache = lazy_lib.slot_cache_scatter(
+                self.lazy_cache, i, lazy_single)
+        self.slots[i] = Slot(req=req, index=index, produced=produced, t=t,
+                             fresh=fresh, last_token=last_token,
+                             tokens=list(tokens))
+
     def advance(self, i: int, token: int) -> None:
         s = self.slots[i]
         s.tokens.append(int(token))

@@ -1,0 +1,238 @@
+"""SLO-aware admission: per-request policy selection, shed-at-admission,
+priority preemption with bit-identical resume, policy-bank parity."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import cache as cache_lib
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.data.synthetic import (SLORequestSpec, request_trace,
+                                  slo_request_trace)
+from repro.models import transformer as tf
+from repro.serving.admission import (SHED_OVERLOAD, SHED_UNSATISFIABLE,
+                                     AdmissionController,
+                                     default_policy_bank, quality_budget_ok)
+from repro.serving.engine import ContinuousBatchingEngine
+
+
+def tiny(**kw):
+    base = dict(n_layers=3, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                d_ff=64, vocab_size=61, dtype="float32",
+                lazy=LazyConfig(enabled=True, mode="masked"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@functools.lru_cache(maxsize=2)
+def fixture():
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def slo_engine(cfg, params, *, n_slots=2, max_len=32, **adm_kw):
+    return ContinuousBatchingEngine(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        policy_bank=default_policy_bank(lazy_ratio=0.5, seed=0),
+        admission=AdmissionController(**adm_kw))
+
+
+def slo_req(rid, arrival, *, prompt_len=4, max_new=5, slo=1e4,
+            max_skip=1.0, priority=0, vocab=61):
+    prompt = np.random.default_rng(rid).integers(
+        0, vocab, prompt_len).astype(np.int32)
+    return SLORequestSpec(rid=rid, arrival=arrival, prompt=prompt,
+                          max_new=max_new, slo_latency_s=slo,
+                          max_skip_ratio=max_skip, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# Controller unit behavior (no engine)
+# ---------------------------------------------------------------------------
+
+
+def bound_controller(**kw):
+    ctrl = AdmissionController(**kw)
+    ctrl.bind({"quality": 0.0, "balanced": 0.25, "latency": 0.5}, n_slots=2)
+    return ctrl
+
+
+def test_decide_before_bind_raises():
+    with pytest.raises(RuntimeError, match="bind"):
+        AdmissionController().decide(slo_req(0, 0.0))
+
+
+def test_quality_budget_restricts_classes():
+    ctrl = bound_controller()
+    d = ctrl.decide(slo_req(0, 0.0, max_skip=0.3))
+    assert d.admitted and d.policy_class in ("quality", "balanced")
+    # no class fits a negative budget -> unsatisfiable, never queued
+    d = ctrl.decide(slo_req(1, 0.0, max_skip=-1.0))
+    assert not d.admitted and d.reason == SHED_UNSATISFIABLE
+
+
+def test_tight_deadline_selects_high_skip_class():
+    ctrl = bound_controller()
+    loose = ctrl.decide(slo_req(0, 0.0, max_new=8, slo=1e4, max_skip=0.9))
+    assert loose.policy_class == "quality"      # best quality wins when idle
+    # a deadline only the high-skip class can make under queueing pressure
+    est_fast = ctrl.est_service_s(4, 8, 0.5)
+    est_best = ctrl.est_service_s(4, 8, 0.0)
+    slo = (est_fast + 1.0) / ctrl.slack
+    tight = ctrl.decide(slo_req(1, 0.0, max_new=8, slo=slo, max_skip=0.9),
+                        queue_wait_s=0.0)
+    assert tight.admitted
+    assert est_best * ctrl.slack > 0  # sanity: estimates are positive
+    assert tight.est_service_s <= slo
+
+
+def test_overload_shed_vs_serve_anyway():
+    strict = bound_controller()
+    req = slo_req(0, 0.0, max_new=6, slo=20.0, max_skip=0.9)
+    d = strict.decide(req, queue_wait_s=1e3)
+    assert not d.admitted and d.reason == SHED_OVERLOAD
+    lenient = bound_controller(shed_on_overload=False)
+    d2 = lenient.decide(req, queue_wait_s=1e3)
+    assert d2.admitted and d2.policy_class == "latency"
+
+
+def test_quality_budget_ok_helper():
+    ratios = {"quality": 0.0, "latency": 0.5}
+    assert quality_budget_ok(ratios, "quality", 0.05)
+    assert not quality_budget_ok(ratios, "latency", 0.05)
+    assert quality_budget_ok(ratios, "latency", 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: shed at admission, not after queueing
+# ---------------------------------------------------------------------------
+
+
+def test_unsatisfiable_slo_sheds_at_admission():
+    """A deadline no bank class can make on an IDLE pool is refused the
+    moment the request arrives: it never queues, never holds a slot, and
+    its shed timestamp equals its arrival."""
+    cfg, params = fixture()
+    eng = slo_engine(cfg, params)
+    doomed = slo_req(0, arrival=1.5, max_new=8, slo=0.5, max_skip=0.9)
+    ok = slo_req(1, arrival=2.0, max_new=4, slo=1e4, max_skip=0.9)
+    res = eng.run([doomed, ok])
+    met = res.metrics
+    assert 0 in met.shed and 0 not in met.requests
+    assert met.shed[0]["reason"] == SHED_UNSATISFIABLE
+    assert met.shed[0]["t"] == pytest.approx(1.5)     # at arrival, no queue
+    assert 1 in met.requests and met.requests[1]["done"] is not None
+    assert 0 not in res.outputs
+
+
+def test_admitted_requests_get_bank_classes():
+    cfg, params = fixture()
+    eng = slo_engine(cfg, params)
+    trace = slo_request_trace(8, cfg.vocab_size, seed=0,
+                              mean_interarrival=2.0,
+                              short_prompt=(4, 4), long_prompt=(8, 8),
+                              short_output=(3, 5), long_output=(6, 8))
+    met = eng.run(trace).metrics
+    assert met.requests, "nothing admitted"
+    for row in met.requests.values():
+        assert row["policy_class"] in eng.bank_ratios
+    for row in met.shed.values():
+        assert row["reason"] in (SHED_UNSATISFIABLE, SHED_OVERLOAD)
+    # per-class breakdown covers exactly the classes seen
+    seen = ({r["policy_class"] for r in met.requests.values()}
+            | {s["policy_class"] for s in met.shed.values()})
+    assert set(met.class_summary()) == seen
+
+
+# ---------------------------------------------------------------------------
+# Preemption: bit-identical continuation
+# ---------------------------------------------------------------------------
+
+
+def test_preempted_request_resumes_bit_identical():
+    """A priority-2 arrival evicts the only active slot; the victim's KV +
+    lazy caches and traced policy state are snapshotted, the slot is
+    reused, and on resume the victim's remaining tokens continue exactly
+    where they left off — its full output equals an uninterrupted run."""
+    cfg, params = fixture()
+    victim = slo_req(0, arrival=0.0, max_new=8, slo=1e4, max_skip=0.6,
+                     priority=0)
+    preemptor = slo_req(1, arrival=3.0, prompt_len=4, max_new=3, slo=1e4,
+                        max_skip=0.9, priority=2)
+
+    solo = slo_engine(cfg, params, n_slots=1).run([victim])
+    assert solo.metrics.summary()["n_preemptions"] == 0
+
+    both = slo_engine(cfg, params, n_slots=1).run([victim, preemptor])
+    met = both.metrics
+    assert met.summary()["n_preemptions"] >= 1
+    assert met.requests[0]["n_preempted"] >= 1
+    assert met.requests[0]["done"] is not None
+    assert met.requests[1]["done"] is not None
+    np.testing.assert_array_equal(both.outputs[0], solo.outputs[0])
+    # the preemptor jumped the queue: it finished before the victim
+    assert met.requests[1]["done"] < met.requests[0]["done"]
+
+
+# ---------------------------------------------------------------------------
+# Determinism + policy-bank parity
+# ---------------------------------------------------------------------------
+
+
+def test_policy_selection_deterministic_under_seeded_trace():
+    """Two fresh engines over the same seeded SLO trace make identical
+    admission decisions (class per rid, shed set) and emit identical
+    tokens — selection is a pure function of (request, queue estimate)."""
+    cfg, params = fixture()
+    trace = slo_request_trace(10, cfg.vocab_size, seed=7,
+                              mean_interarrival=1.0,
+                              short_prompt=(4, 4), long_prompt=(8, 8),
+                              short_output=(3, 5), long_output=(6, 8))
+    runs = []
+    for _ in range(2):
+        res = slo_engine(cfg, params).run(
+            [SLORequestSpec(**vars(r)) for r in trace])
+        met = res.metrics
+        runs.append((
+            {rid: row["policy_class"] for rid, row in met.requests.items()},
+            {rid: row["reason"] for rid, row in met.shed.items()},
+            {rid: out.tolist() for rid, out in res.outputs.items()},
+        ))
+    assert runs[0] == runs[1]
+    assert runs[0][0], "nothing admitted"
+
+
+def test_bank_single_class_matches_fixed_policy_engine():
+    """A one-class bank must serve byte-identical tokens to the plain
+    fixed-policy engine running that same policy — the lcm-tiled bank is
+    exact, not an approximation (engine._compile_bank)."""
+    cfg, params = fixture()
+    trace = tuple(request_trace(5, cfg.vocab_size, seed=3,
+                                mean_interarrival=0.4,
+                                short_prompt=(3, 3), long_prompt=(6, 6),
+                                short_output=(3, 5), long_output=(6, 8)))
+    fixed = ContinuousBatchingEngine(
+        cfg, params, n_slots=2, max_len=32,
+        policy=cache_lib.get_policy("static_router", ratio=0.5, seed=0))
+    banked = ContinuousBatchingEngine(
+        cfg, params, n_slots=2, max_len=32,
+        policy_bank={"only": cache_lib.get_policy("static_router",
+                                                  ratio=0.5, seed=0)})
+    res_f = fixed.run(trace)
+    res_b = banked.run(trace)
+    assert banked.bank_ratios["only"] == pytest.approx(fixed.plan_ratio)
+    assert set(res_f.outputs) == set(res_b.outputs)
+    for rid in res_f.outputs:
+        np.testing.assert_array_equal(res_f.outputs[rid], res_b.outputs[rid])
+    s_f, s_b = res_f.metrics.summary(), res_b.metrics.summary()
+    assert s_b["realized_lazy_ratio"] == pytest.approx(
+        s_f["realized_lazy_ratio"])
+
+
+def test_bank_requires_admission_to_have_bank():
+    cfg, params = fixture()
+    with pytest.raises(ValueError, match="requires a policy_bank"):
+        ContinuousBatchingEngine(cfg, params, n_slots=2, max_len=32,
+                                 admission=AdmissionController())

@@ -1,0 +1,141 @@
+"""Asyncio streaming front door: NDJSON e2e over localhost, shed path,
+server stats (serving/server.py)."""
+import asyncio
+import functools
+
+import jax
+import numpy as np
+
+from repro.configs.base import LazyConfig, ModelConfig
+from repro.models import transformer as tf
+from repro.serving.admission import AdmissionController, default_policy_bank
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.server import (StreamingServer, fetch_stats,
+                                  request_once)
+
+
+def tiny(**kw):
+    base = dict(n_layers=3, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                d_ff=64, vocab_size=61, dtype="float32",
+                lazy=LazyConfig(enabled=True, mode="masked"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@functools.lru_cache(maxsize=2)
+def fixture():
+    cfg = tiny()
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_engine():
+    cfg, params = fixture()
+    return ContinuousBatchingEngine(
+        cfg, params, n_slots=2, max_len=32,
+        policy_bank=default_policy_bank(lazy_ratio=0.5, seed=0),
+        admission=AdmissionController())
+
+
+def with_server(client_fn):
+    """Start a StreamingServer on an ephemeral port, run the blocking
+    client in an executor, return (client result, final server stats)."""
+    async def main():
+        srv = StreamingServer(make_engine(), port=0)
+        await srv.start()
+        loop = asyncio.get_running_loop()
+        try:
+            out = await asyncio.wait_for(
+                loop.run_in_executor(None, client_fn, srv.port), timeout=120)
+        finally:
+            await srv.stop()
+        return out, srv.stats()
+    return asyncio.run(main())
+
+
+def test_stream_one_request_end_to_end():
+    """One generate request over a real localhost socket: the stream runs
+    accepted -> policy_assigned -> admitted -> token... -> done, the done
+    event carries all tokens, and the server records wall-clock
+    first-chunk latency."""
+    n_new = 5
+
+    def client(port):
+        return request_once("127.0.0.1", port, [3, 1, 4, 1], max_new=n_new,
+                            slo_latency_s=1e4, max_skip_ratio=0.9,
+                            priority=1)
+
+    events, stats = with_server(client)
+    kinds = [e["event"] for e in events]
+    assert kinds[0] == "accepted"
+    assert "policy_assigned" in kinds and "admitted" in kinds
+    assert "first_token" in kinds
+    assert kinds[-1] == "done"
+    assert kinds.index("policy_assigned") < kinds.index("admitted")
+    done = events[-1]
+    assert done["n_out"] == n_new and len(done["tokens"]) == n_new
+    # streamed tokens arrive in order and match the done event's list
+    streamed = [e["token"] for e in events if e["event"] == "token"]
+    assert streamed == list(done["tokens"])
+    assigned = next(e for e in events if e["event"] == "policy_assigned")
+    assert assigned["policy_class"] in ("quality", "balanced", "latency")
+    assert stats["n_requests"] == 1 and stats["n_shed"] == 0
+    fc = stats["first_chunk_latency_s"]
+    assert fc["n"] == 1 and fc["p50"] > 0.0
+
+
+def test_unsatisfiable_request_streams_shed():
+    def client(port):
+        return request_once("127.0.0.1", port, [1, 2, 3], max_new=8,
+                            slo_latency_s=0.01, max_skip_ratio=0.9)
+
+    events, stats = with_server(client)
+    assert events[-1]["event"] == "shed"
+    assert events[-1]["reason"] == "unsatisfiable"
+    assert all(e["event"] != "token" for e in events)
+    assert stats["n_shed"] == 1
+
+
+def test_sequential_requests_and_stats_op():
+    """Two requests over separate connections share one engine session;
+    the stats op reports both on the service clock."""
+    def client(port):
+        out = []
+        for i in range(2):
+            out.append(request_once("127.0.0.1", port,
+                                    [5 + i, 7, 11], max_new=3,
+                                    slo_latency_s=1e4, max_skip_ratio=0.9))
+        return out, fetch_stats("127.0.0.1", port)
+
+    (streams, mid_stats), final_stats = with_server(client)
+    for events in streams:
+        assert events[-1]["event"] == "done"
+        assert len(events[-1]["tokens"]) == 3
+    # rids are distinct and both landed in the session metrics
+    rids = {ev[-1]["rid"] for ev in streams}
+    assert len(rids) == 2
+    assert mid_stats["n_requests"] == 2
+    assert mid_stats["service_clock"]["n_requests"] == 2
+    assert final_stats["first_chunk_latency_s"]["n"] == 2
+
+
+def test_outputs_match_trace_driven_session():
+    """The socket path changes transport, not tokens: the same prompt
+    through the NDJSON server equals the trace-driven engine run."""
+    from repro.data.synthetic import SLORequestSpec
+    prompt = [3, 1, 4, 1]
+    n_new = 4
+
+    def client(port):
+        return request_once("127.0.0.1", port, prompt, max_new=n_new,
+                            slo_latency_s=1e4, max_skip_ratio=0.9)
+
+    events, _ = with_server(client)
+    served = events[-1]["tokens"]
+
+    eng = make_engine()
+    res = eng.run([SLORequestSpec(
+        rid=0, arrival=0.0, prompt=np.asarray(prompt, np.int32),
+        max_new=n_new, slo_latency_s=1e4, max_skip_ratio=0.9)])
+    ref = res.outputs[0][len(prompt):].tolist()
+    assert served == ref

@@ -1,0 +1,125 @@
+"""CI docs-check: documented CLIs must parse, intra-repo links must resolve.
+
+Two loud tripwires so user docs cannot rot silently:
+
+  1. every CLI surface the README documents answers ``--help`` with exit
+     code 0 (a renamed flag set, a broken import, or a deleted module
+     fails the job), and each is actually mentioned in README.md so the
+     list here and the docs stay in sync;
+  2. every relative markdown link in the user-facing docs (README.md,
+     docs/*.md) points at a file that exists, and anchored links into
+     markdown targets point at a real heading.
+
+    python -m tools.check_docs            # run both checks (CI step)
+
+Stdlib only; run from the repo root.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import List
+
+REPO = Path(__file__).resolve().parent.parent
+
+# every CLI surface README.md documents; --help must exit 0 for each
+DOCUMENTED_CLIS = (
+    "repro.launch.serve",
+    "repro.launch.dryrun",
+    "repro.launch.obs",
+    "repro.launch.train",
+    "benchmarks.run",
+    "benchmarks.check_regression",
+    "benchmarks.bench_kernels",
+)
+
+# user-facing docs whose links are validated (DESIGN/ROADMAP are
+# internal working documents; README and docs/ are the public surface)
+DOC_FILES = ("README.md", "docs/*.md")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug of a markdown heading."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set:
+    out = set()
+    for line in md_path.read_text().splitlines():
+        if line.startswith("#"):
+            out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def check_links() -> List[str]:
+    problems = []
+    files: List[Path] = []
+    for pat in DOC_FILES:
+        files.extend(sorted(REPO.glob(pat)))
+    if not files:
+        return ["no doc files matched DOC_FILES — docs were deleted?"]
+    for md in files:
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part \
+                else md.resolve()
+            if not dest.exists():
+                problems.append(f"{md.relative_to(REPO)}: broken link "
+                                f"-> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if _slug(anchor) not in _anchors(dest):
+                    problems.append(
+                        f"{md.relative_to(REPO)}: anchor #{anchor} not "
+                        f"found in {dest.name}")
+    return problems
+
+
+def check_clis() -> List[str]:
+    problems = []
+    readme = (REPO / "README.md").read_text()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", ".", env.get("PYTHONPATH", "")) if p)
+    for mod in DOCUMENTED_CLIS:
+        if mod not in readme:
+            problems.append(f"README.md does not mention documented CLI "
+                            f"`python -m {mod}`")
+        try:
+            r = subprocess.run(
+                [sys.executable, "-m", mod, "--help"], cwd=REPO, env=env,
+                capture_output=True, text=True, timeout=180)
+        except subprocess.TimeoutExpired:
+            problems.append(f"{mod} --help: timed out")
+            continue
+        if r.returncode != 0:
+            tail = (r.stderr or r.stdout).strip().splitlines()[-3:]
+            problems.append(f"{mod} --help: exit {r.returncode}: "
+                            + " | ".join(tail))
+    return problems
+
+
+def main() -> int:
+    problems = check_links() + check_clis()
+    if problems:
+        print(f"docs-check FAILED ({len(problems)} problems):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n_files = sum(len(list(REPO.glob(pat))) for pat in DOC_FILES)
+    print(f"docs-check OK: {len(DOCUMENTED_CLIS)} CLIs answer --help, "
+          f"links resolve across {n_files} doc files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
